@@ -1,0 +1,27 @@
+"""Shared benchmark utilities. Every benchmark emits CSV rows
+``name,us_per_call,derived`` (derived = the benchmark's headline metric)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

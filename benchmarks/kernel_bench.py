@@ -1,0 +1,55 @@
+"""Kernel-layer benchmarks (CPU host: the Pallas kernels run in interpret
+mode for correctness, so wall-times here compare the pure-JAX reference
+paths; the derived column reports the memory-traffic ratio that motivates
+each kernel on TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import attention
+
+from .common import emit, time_fn
+
+
+def main(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, H, S, hd = 1, 4, 512 if quick else 2048, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    naive = jax.jit(lambda q, k, v: attention.multihead_attention(
+        q, k, v, q_pos=pos, k_pos=pos, window=None))
+    chunked = jax.jit(lambda q, k, v: attention.chunked_attention(
+        q, k, v, q_pos=pos, k_pos=pos, window=None, q_chunk=128))
+    t_naive = time_fn(naive, q, k, v)
+    t_chunk = time_fn(chunked, q, k, v)
+    # bytes of the score tensor avoided by chunking/flash
+    avoided = B * H * S * S * 4
+    rows.append(emit("kernel/attention_naive", t_naive, f"scores_bytes={avoided}"))
+    rows.append(emit("kernel/attention_chunked", t_chunk,
+                     f"peak_scores_bytes={avoided * 128 // S}"))
+
+    T, V = (4096, 16384) if quick else (8192, 131072)
+    logits = jax.random.normal(key, (T, V))
+    labels = jax.random.randint(key, (T,), 0, V)
+    ce_ref = jax.jit(lambda l, y: ref.cross_entropy_ref(l, y).mean())
+    t_ce = time_fn(ce_ref, logits, labels)
+    rows.append(emit("kernel/cross_entropy_ref", t_ce,
+                     f"logits_bytes={T * V * 4}"))
+
+    N = 1 << 20
+    acc = jnp.zeros((N,))
+    g = jax.random.normal(key, (N,))
+    accum = jax.jit(lambda a, g: ref.grad_accum_ref(a, g, 0.125))
+    t_acc = time_fn(accum, acc, g)
+    rows.append(emit("kernel/grad_accum_ref", t_acc, f"bytes={N * 12}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

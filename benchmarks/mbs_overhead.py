@@ -1,0 +1,54 @@
+"""MBS time overhead on the transformer stack (paper §4.3.3): step time at
+a fixed global batch as a function of the number of micro-batches. The
+paper reports 0.3–5.1% per-epoch overhead; here we measure the compiled
+step directly."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, optim
+from repro.core import mbs as M
+from repro.data import LMDataset
+from repro.launch import steps
+from repro.models import transformer
+
+from .common import emit
+
+
+def main(quick: bool = True):
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32, remat=False)
+    opt = optim.sgd(0.01, momentum=0.9)
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+    global_batch = 16
+    mini = ds.batch(global_batch, 0)
+    rows = []
+    base_t = None
+    for n_micro in (1, 2, 4, 8):
+        micro = global_batch // n_micro
+        step = jax.jit(M.make_mbs_train_step(loss_fn, opt, M.MBSConfig(micro)))
+        split = {k: jnp.asarray(v)
+                 for k, v in M.split_minibatch(mini, micro).items()}
+        s = opt.init(params)
+        p2, s2, m = step(params, s, split)  # compile
+        jax.block_until_ready(m["loss"])
+        iters = 3 if quick else 10
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            p2, s2, m = step(params, s, split)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        if n_micro == 1:
+            base_t = dt
+        ov = (dt / base_t - 1) * 100
+        rows.append(emit(f"mbs_overhead/n_micro{n_micro}", dt * 1e6,
+                         f"overhead={ov:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), single-pod mesh:
+    compute    = HLO_FLOPs_per_device / 197e12      (bf16 peak / chip)
+    memory     = HLO_bytes_per_device / 819e9       (HBM bw / chip)
+    collective = collective_bytes_per_device / 50e9 (ICI link bw)
+HLO FLOPs/bytes are the trip-count-corrected probe values (see
+launch/dryrun.py). MODEL_FLOPS = 6·N_active·tokens (train) or
+2·N_active·tokens (prefill/decode); the ratio MODEL/HLO exposes
+remat + redundancy overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro import configs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_per_device(arch: str, shape_name: str, num_devices: int) -> float:
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encdec:
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // 4)
+        return 6.0 * n * tokens / num_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / num_devices
+    tokens = shape.global_batch  # decode: 1 token per sequence
+    return 2.0 * n * tokens / num_devices
+
+
+def _reextrapolate(entry: dict):
+    """Recompute corrected cost from the raw probes with the per-period
+    slope clamped at >= 0: XLA's 'bytes accessed' is fusion-sensitive, so a
+    2-period probe can report FEWER bytes than 1-period (seen on mamba2);
+    a negative slope would otherwise drive the total negative."""
+    corr = entry["corrected"]
+    pr = corr.get("probe_raw")
+    if not pr:
+        return (corr["flops_per_device"], corr["bytes_per_device"],
+                corr["collective_bytes_total"])
+    p1, p2 = pr["1"], pr["2"]
+    cfg = configs.get(entry["arch"])
+    P = cfg.num_periods
+    n = entry.get("num_microbatches") or 1
+    if entry["kind"] != "train":
+        n = 1
+
+    def ext(x1, x2):
+        return n * (x1 + (P - 1) * max(x2 - x1, 0.0))
+
+    coll1 = sum(d["bytes"] for d in p1["colls"].values())
+    coll2 = sum(d["bytes"] for d in p2["colls"].values())
+    return (ext(p1["flops"], p2["flops"]), ext(p1["bytes"], p2["bytes"]),
+            ext(coll1, coll2))
+
+
+def analyze(entry: dict) -> Optional[dict]:
+    if entry.get("skipped") or entry.get("failed"):
+        return None
+    corr = entry.get("corrected")
+    if not corr:
+        return None
+    nd = entry["num_devices"]
+    flops, hbytes, cbytes = _reextrapolate(entry)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbytes / HBM_BW
+    t_n = cbytes / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    mf = model_flops_per_device(entry["arch"], entry["shape"], nd)
+    return {
+        "arch": entry["arch"], "shape": entry["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "peak_mem_gb": entry["memory"]["peak_bytes_est"] / 1e9,
+        "roofline_frac": (max(t_c, t_m, t_n) and t_c / max(t_c, t_m, t_n)),
+    }
+
+
+HINTS = {
+    "compute": "compute-bound: raise MXU utilization (larger tiles, bf16 "
+               "throughout, fuse softcap/mask into the attention kernel)",
+    "memory": "HBM-bound: fuse/rematerialize to cut bytes (flash-attention "
+              "kernel path, fused CE epilogue, wider micro-batch)",
+    "collective": "collective-bound: reshard to cut traffic (fewer FSDP "
+                  "gathers per micro-batch, expert-parallel all-to-all, "
+                  "batch the gradient all-reduce once per mini-batch — MBS)",
+}
+
+
+def load_all(art_dir: str) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*__single.json"))):
+        with open(path) as f:
+            e = json.load(f)
+        a = analyze(e)
+        if a:
+            out.append(a)
+    return out
+
+
+def to_markdown(rows: List[dict]) -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | model/HLO flops | peak GB/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['peak_mem_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(art_dir: str = "experiments/dryrun", quick: bool = True):
+    from .common import emit
+    rows = load_all(art_dir)
+    for r in rows:
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}", dom_s * 1e6,
+             f"dom={r['dominant']};useful={r['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    rows = main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print()
+    print(to_markdown(rows))

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/claim. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  table1           batch size × image size interaction      (paper Table 1)
+  table4           classification acc/time, w/ vs w/o MBS   (paper Table 4)
+  table5           segmentation IoU/time, w/ vs w/o MBS     (paper Table 5)
+  maxbatch         max batch beyond the memory limit        (paper §4.3.2)
+  mbs_overhead     MBS step-time overhead vs n_micro        (paper §4.3.3)
+  kernel           kernel-layer motivation benches
+  roofline         three-term roofline per arch × shape     (§Roofline)
+
+Run everything (quick mode):   python -m benchmarks.run
+Single module, full size:      python -m benchmarks.table4_classification
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from . import (kernel_bench, mbs_overhead, roofline,
+                   table1_batch_image_size, table4_classification,
+                   table5_segmentation, table_maxbatch)
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("table1", table1_batch_image_size),
+        ("table4", table4_classification),
+        ("table5", table5_segmentation),
+        ("maxbatch", table_maxbatch),
+        ("mbs_overhead", mbs_overhead),
+        ("kernel", kernel_bench),
+    ]
+    failures = []
+    for name, mod in modules:
+        try:
+            mod.main(quick=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    # roofline needs the dry-run artifacts; skip quietly if absent
+    try:
+        if os.path.isdir("experiments/dryrun"):
+            roofline.main("experiments/dryrun", quick=True)
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

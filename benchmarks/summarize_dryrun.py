@@ -1,0 +1,61 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from the artifact
+directory.
+
+  PYTHONPATH=src python -m benchmarks.summarize_dryrun experiments/dryrun
+writes experiments/dryrun_summary.md and experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from . import roofline
+
+
+def dryrun_table(art_dir: str) -> str:
+    lines = ["| arch | shape | mesh | kind | peak GB/chip | compile s | "
+             "collectives (GB, once-per-body) |",
+             "|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            e = json.load(f)
+        tag = os.path.basename(path).split("__")[-1].replace(".json", "")
+        if e.get("skipped"):
+            lines.append(f"| {e['arch']} | {e['shape']} | {tag} | — | — | — | "
+                         f"SKIP ({e.get('reason', '')[:40]}…) |")
+            continue
+        if e.get("failed"):
+            lines.append(f"| {e['arch']} | {e['shape']} | {tag} | — | — | — | "
+                         f"FAILED |")
+            continue
+        peak = e["memory"]["peak_bytes_est"] / 1e9
+        colls = ", ".join(
+            f"{k.replace('collective-', 'c-')}:{v['bytes'] / 1e9:.2f}"
+            for k, v in sorted(e.get("collectives_raw_once", {}).items()))
+        lines.append(
+            f"| {e['arch']} | {e['shape']} | {tag} | {e['kind']} | "
+            f"{peak:.1f} | {e.get('compile_s', '?')} | {colls} |")
+    return "\n".join(lines)
+
+
+def main():
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    out_dir = os.path.dirname(art_dir.rstrip("/")) or "."
+    with open(os.path.join(out_dir, "dryrun_summary.md"), "w") as f:
+        f.write("# Dry-run matrix (generated)\n\n")
+        f.write(dryrun_table(art_dir) + "\n")
+    rows = roofline.load_all(art_dir)
+    with open(os.path.join(out_dir, "roofline.md"), "w") as f:
+        f.write("# Roofline (single-pod, per-device, generated)\n\n")
+        f.write(roofline.to_markdown(rows) + "\n\n")
+        for r in rows:
+            f.write(f"* **{r['arch']} × {r['shape']}** — dominant: "
+                    f"{r['dominant']}; {roofline.HINTS[r['dominant']]}\n")
+    print(f"wrote {out_dir}/dryrun_summary.md and {out_dir}/roofline.md "
+          f"({len(rows)} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Table 5: IoU + training time for U-Net at mini-batch sizes beyond
+the no-MBS memory limit (segmentation; BCE+Dice, Adam — paper §4.2.4)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, mbs as M
+from repro.data import SegmentationDataset
+from repro.models import cnn
+from repro import optim
+
+from .common import emit
+
+DEPTH = 1
+BASE = 4
+IMG = 16
+MICRO = 4
+MAX_NOMBS_BATCH = 8
+
+
+def _setup(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params, state = cnn.unet_init(key, base=BASE, depth=DEPTH)
+    ds = SegmentationDataset(image_size=IMG, seed=seed)
+    opt = optim.adam(1e-2, weight_decay=5e-4)  # paper's U-Net optimizer
+
+    def loss_fn(p, b, exact_denom=None):
+        logits, _ = cnn.unet_forward(p, state, b["image"], depth=DEPTH,
+                                     train=True)
+        return losses.bce_dice_loss(
+            logits, b["mask"], sample_weight=b.get("sample_weight"),
+            exact_denom=exact_denom), {}
+
+    return params, state, ds, opt, loss_fn
+
+
+def run_config(batch: int, use_mbs: bool, steps: int):
+    params, state, ds, opt, loss_fn = _setup()
+    if not use_mbs and batch > MAX_NOMBS_BATCH:
+        return None
+    if use_mbs:
+        step = jax.jit(M.make_mbs_train_step(
+            loss_fn, opt, M.MBSConfig(min(MICRO, batch))))
+    else:
+        step = jax.jit(M.make_baseline_train_step(loss_fn, opt))
+    p, s = params, opt.init(params)
+    t0 = None
+    for i in range(steps):
+        mini = ds.batch(batch, i)
+        data = ({k: jnp.asarray(v) for k, v in M.split_minibatch(
+            mini, min(MICRO, batch)).items()} if use_mbs
+            else {k: jnp.asarray(v) for k, v in mini.items()})
+        p, s, m = step(p, s, data)
+        if i == 0:
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / max(steps - 1, 1)
+    ev = ds.batch(32, 99_999)
+    logits, _ = cnn.unet_forward(p, state, jnp.asarray(ev["image"]),
+                                 depth=DEPTH, train=False)
+    iou = float(losses.iou(logits, jnp.asarray(ev["mask"])))
+    return {"iou": iou, "s_per_step": dt}
+
+
+def main(quick: bool = True):
+    steps = 10 if quick else 50
+    batches = [4, 8, 16, 32] if quick else [4, 8, 16, 32, 64, 128]
+    rows = []
+    for batch in batches:
+        for use_mbs in (False, True):
+            tag = "mbs" if use_mbs else "baseline"
+            r = run_config(batch, use_mbs, steps)
+            if r is None:
+                rows.append(emit(f"table5/{tag}_b{batch}", 0.0, "Failed"))
+            else:
+                rows.append(emit(f"table5/{tag}_b{batch}",
+                                 r["s_per_step"] * 1e6,
+                                 f"iou={r['iou']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

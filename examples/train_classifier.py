@@ -1,0 +1,72 @@
+"""Paper Table 4 driver: image classification with and without MBS across
+mini-batch sizes, under a simulated memory cap.
+
+    PYTHONPATH=src python examples/train_classifier.py \
+        --batches 8 16 32 64 --steps 30 [--no-mbs]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, mbs
+from repro.data import ClassificationDataset
+from repro.models import cnn
+from repro import optim
+
+STAGE_SIZES = (1, 1)
+MEMORY_CAP_BATCH = 16  # simulated no-MBS failure point (paper: 24 GB GPU)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, nargs="+", default=[8, 16, 32, 64])
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--micro", type=int, default=8)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--no-mbs", action="store_true")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    ds = ClassificationDataset(num_classes=8, image_size=args.image_size)
+    opt = optim.sgd(0.01, momentum=0.9, weight_decay=5e-4)  # paper §4.2.4
+
+    for batch in args.batches:
+        params, state = cnn.resnet_init(key, num_classes=8,
+                                        stage_sizes=STAGE_SIZES, width=8)
+
+        def loss_fn(p, b, exact_denom=None):
+            logits, _ = cnn.resnet_forward(p, state, b["image"],
+                                           stage_sizes=STAGE_SIZES, train=True)
+            return losses.cross_entropy(
+                logits, b["label"], sample_weight=b.get("sample_weight"),
+                exact_denom=exact_denom), {"acc": losses.accuracy(logits, b["label"])}
+
+        use_mbs = not args.no_mbs
+        if not use_mbs and batch > MEMORY_CAP_BATCH:
+            print(f"batch {batch:4d}  w/o MBS: Failed (exceeds memory cap)")
+            continue
+        micro = min(args.micro, batch)
+        step = jax.jit(mbs.make_mbs_train_step(loss_fn, opt, mbs.MBSConfig(micro))
+                       if use_mbs else mbs.make_baseline_train_step(loss_fn, opt))
+        p, s = params, opt.init(params)
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            mini = ds.batch(batch, i)
+            data = ({k: jnp.asarray(v)
+                     for k, v in mbs.split_minibatch(mini, micro).items()}
+                    if use_mbs else {k: jnp.asarray(v) for k, v in mini.items()})
+            p, s, m = step(p, s, data)
+        jax.block_until_ready(m["loss"])
+        ev = ds.batch(128, 10 ** 6, train=False)
+        logits, _ = cnn.resnet_forward(p, state, jnp.asarray(ev["image"]),
+                                       stage_sizes=STAGE_SIZES, train=False)
+        acc = float(losses.accuracy(logits, jnp.asarray(ev["label"])))
+        mode = f"w/ MBS (mu={micro})" if use_mbs else "w/o MBS"
+        print(f"batch {batch:4d}  {mode:16s}  acc {acc:.3f}  "
+              f"loss {float(m['loss']):.3f}  {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

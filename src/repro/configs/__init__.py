@@ -1,0 +1,47 @@
+"""Architecture registry: the 10 assigned architectures (+ the paper's own
+ResNet/U-Net CNN configs used by the examples/benchmarks).
+
+``get(arch_id)`` / ``get_reduced(arch_id)`` return ModelConfig;
+``ARCHS`` lists the assigned ids in assignment order.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+from .shapes import SHAPES, InputShape  # noqa: F401
+
+_MODULES: Dict[str, str] = {
+    "gemma2-9b": "gemma2_9b",
+    "grok-1-314b": "grok_1_314b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mamba2-780m": "mamba2_780m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+# archs with at least one unbounded full-attention layer: long_500k decode is
+# quadratic-memory there and is skipped (DESIGN.md §long_500k applicability)
+LONG_500K_ARCHS = {"mamba2-780m", "recurrentgemma-2b", "mixtral-8x22b",
+                   "gemma3-12b"}
+
+
+def get(arch_id: str) -> ModelConfig:
+    return import_module(f".{_MODULES[arch_id]}", __package__).config()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return import_module(f".{_MODULES[arch_id]}", __package__).reduced()
+
+
+def supports_shape(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_500K_ARCHS
+    return True

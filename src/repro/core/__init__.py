@@ -1,0 +1,3 @@
+from . import losses, memory_model, mbs, streaming  # noqa: F401
+from .mbs import (MBSConfig, make_baseline_train_step, make_mbs_train_step,  # noqa: F401
+                  mbs_gradients, num_micro_batches, split_minibatch)

@@ -1,0 +1,86 @@
+"""Loss functions used across the framework.
+
+Every loss returns the *mean per-sample loss over the (micro-)batch* plus a
+valid-sample count, which is what the MBS loss-normalization algorithm
+(paper §3.4, Algorithm 1) consumes. ``sample_weight`` supports the ragged
+tail case (N_B % N_mu != 0): padded samples carry weight 0.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _weighted_mean(per_sample: jnp.ndarray, sample_weight, exact_denom):
+    """mean over samples; with ``exact_denom`` set, divide the weighted sum
+    by that count instead (used by exact-ragged MBS)."""
+    if sample_weight is None:
+        if exact_denom is not None:
+            return jnp.sum(per_sample) / exact_denom
+        return jnp.mean(per_sample)
+    total = jnp.sum(per_sample * sample_weight)
+    denom = exact_denom if exact_denom is not None else jnp.sum(sample_weight)
+    return total / denom
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, *,
+                  token_weight: Optional[jnp.ndarray] = None,
+                  sample_weight: Optional[jnp.ndarray] = None,
+                  exact_denom=None) -> jnp.ndarray:
+    """LM / classification CE. logits: (..., V) fp32; labels int.
+
+    Per-sample loss = mean over valid tokens; batch loss = mean over samples.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold  # (..., ) per-token
+    if nll.ndim > 1:  # sequence models: mean over tokens per sample
+        if token_weight is not None:
+            per_sample = (jnp.sum(nll * token_weight, axis=tuple(range(1, nll.ndim)))
+                          / jnp.maximum(jnp.sum(token_weight, axis=tuple(range(1, nll.ndim))), 1))
+        else:
+            per_sample = jnp.mean(nll, axis=tuple(range(1, nll.ndim)))
+    else:
+        per_sample = nll
+    return _weighted_mean(per_sample, sample_weight, exact_denom)
+
+
+def bce_with_logits(logits, targets, *, sample_weight=None, exact_denom=None):
+    """Binary cross-entropy from logits. logits/targets: (B, H, W, 1)."""
+    logits = logits.astype(jnp.float32)
+    per_px = jnp.maximum(logits, 0) - logits * targets + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    per_sample = jnp.mean(per_px, axis=tuple(range(1, per_px.ndim)))
+    return _weighted_mean(per_sample, sample_weight, exact_denom)
+
+
+def dice_loss(logits, targets, *, sample_weight=None, exact_denom=None,
+              eps: float = 1.0):
+    """Paper eq. (19): L_dc = 1 - 2|A∩B| / (|A|+|B|), per sample."""
+    probs = jax.nn.sigmoid(logits.astype(jnp.float32))
+    axes = tuple(range(1, probs.ndim))
+    inter = jnp.sum(probs * targets, axis=axes)
+    denom = jnp.sum(probs, axis=axes) + jnp.sum(targets, axis=axes)
+    per_sample = 1.0 - (2.0 * inter + eps) / (denom + eps)
+    return _weighted_mean(per_sample, sample_weight, exact_denom)
+
+
+def bce_dice_loss(logits, targets, **kw):
+    """Paper eq. (20): L_total = L_bce + L_dc (U-Net training loss)."""
+    return bce_with_logits(logits, targets, **kw) + dice_loss(logits, targets, **kw)
+
+
+def iou(logits, targets, thresh: float = 0.5) -> jnp.ndarray:
+    """Intersection-over-union metric (paper §4.3.1)."""
+    pred = (jax.nn.sigmoid(logits.astype(jnp.float32)) > thresh).astype(jnp.float32)
+    axes = tuple(range(1, pred.ndim))
+    inter = jnp.sum(pred * targets, axis=axes)
+    union = jnp.sum(jnp.maximum(pred, targets), axis=axes)
+    return jnp.mean((inter + 1e-6) / (union + 1e-6))
+
+
+def accuracy(logits, labels) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

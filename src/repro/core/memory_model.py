@@ -1,0 +1,114 @@
+"""Analytic device-memory model → automatic micro-batch sizing.
+
+The paper determines the micro-batch size "experimentally ... the maximum
+size that can compute on GPU" (§4.3.2). We replace that search with an
+analytic model of per-device bytes as a function of the micro-batch size,
+and pick the largest power-of-two that fits the HBM budget — the same
+quantity the dry-run's ``compiled.memory_analysis()`` verifies.
+
+The model (per device, for the transformer families):
+  params           P/ (tp * fsdp)                       * 4 B (fp32 master)
+  grads (accum)    same as params                       * 4 B
+  optimizer state  k_opt * params bytes (SGD-m: 1, Adam: 2)
+  activations      per-period remat boundary + live period working set,
+                   proportional to micro_batch * seq (the MBS knob)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..models.config import ModelConfig
+
+V5E_HBM_BYTES = 16 * 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    params_bytes: int
+    grads_bytes: int
+    opt_bytes: int
+    activation_bytes_per_sample: int  # per micro-batch sample, at given seq
+    fixed_bytes: int
+
+    def total(self, micro_batch: int) -> int:
+        return (self.params_bytes + self.grads_bytes + self.opt_bytes
+                + self.fixed_bytes
+                + self.activation_bytes_per_sample * micro_batch)
+
+
+def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
+                                act_bytes: int = 2,
+                                remat: bool = True) -> int:
+    """Live activation bytes for ONE sample of length ``seq``.
+
+    With per-period remat: residual-stream checkpoints at every period
+    boundary (num_periods * seq * d_model) + the recompute working set of a
+    single period (~ c * seq * max(d_model, d_ff, moe_active)).
+    """
+    d = cfg.d_model
+    boundary = cfg.num_periods * seq * d * act_bytes
+    widths = [d * 6]  # qkv + attn out + residuals
+    if cfg.is_moe:
+        widths.append(cfg.experts_per_token * cfg.moe_d_ff * 3 * cfg.capacity_factor)
+    elif cfg.d_ff:
+        widths.append(cfg.d_ff * 3)
+    if cfg.ssm_state:
+        widths.append(cfg.ssm_d_inner * 4)
+    if cfg.lru_width:
+        widths.append(cfg.lru_width * 6)
+    period_live = seq * int(max(widths)) * act_bytes * cfg.pattern_len
+    logits_live = seq * cfg.vocab_size * 4 // 8  # blocked CE kernel: 1/8 vocab
+    if not remat:
+        period_live *= cfg.num_periods
+    return boundary + period_live + logits_live
+
+
+def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
+             opt_slots: int = 1, act_bytes: int = 2,
+             remat: bool = True) -> MemoryEstimate:
+    p_bytes = cfg.param_count() * 4 // (tp * fsdp)
+    return MemoryEstimate(
+        params_bytes=p_bytes,
+        grads_bytes=p_bytes,
+        opt_bytes=opt_slots * p_bytes,
+        activation_bytes_per_sample=activation_bytes_per_sample(
+            cfg, seq, act_bytes, remat) // tp,
+        fixed_bytes=64 * 1024 ** 2,
+    )
+
+
+def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
+                             budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
+                             fsdp: int = 1, opt_slots: int = 1,
+                             act_bytes: int = 2,
+                             remat: bool = True) -> Optional[int]:
+    """Largest power-of-two micro-batch (≤ mini_batch) that fits the budget.
+    Returns None if even micro-batch 1 exceeds the budget (the model itself
+    does not fit — MBS cannot help; that needs more model parallelism)."""
+    est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
+                   act_bytes=act_bytes, remat=remat)
+    best = None
+    m = 1
+    while m <= mini_batch:
+        if est.total(m) <= budget_bytes:
+            best = m
+        m *= 2
+    return best
+
+
+def max_minibatch_without_mbs(cfg: ModelConfig, seq: int, *,
+                              budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
+                              fsdp: int = 1, opt_slots: int = 1,
+                              act_bytes: int = 2,
+                              remat: bool = True) -> int:
+    """The paper's "w/o MBS" failure point: the largest mini-batch whose
+    whole-batch activations fit (beyond it, the run 'Fails')."""
+    est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
+                   act_bytes=act_bytes, remat=remat)
+    m = 0
+    while est.total(m + 1) <= budget_bytes:
+        m += 1
+        if m > 1 << 24:
+            break
+    return m

@@ -1,0 +1,35 @@
+"""Data loader: composes a dataset with MBS host-side splitting (paper
+Fig. 2 step ❶) and background prefetch."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from ..core import mbs as mbs_lib
+from ..core.streaming import prefetch_iterator
+
+
+class MBSLoader:
+    """Yields mini-batches pre-split into ``(N_Sμ, N_μ, ...)`` micro-batch
+    stacks ready for the compiled MBS train step."""
+
+    def __init__(self, dataset, mini_batch_size: int, micro_batch_size: int,
+                 *, prefetch: int = 2, seed: int = 0, **batch_kw):
+        self.dataset = dataset
+        self.mini_batch_size = mini_batch_size
+        self.micro_batch_size = micro_batch_size
+        self.prefetch = prefetch
+        self.seed = seed
+        self.batch_kw = batch_kw
+
+    def __call__(self, num_batches: int) -> Iterator[Dict[str, np.ndarray]]:
+        def gen():
+            for i in range(num_batches):
+                mini = self.dataset.batch(self.mini_batch_size,
+                                          self.seed + i, **self.batch_kw)
+                yield mbs_lib.split_minibatch(mini, self.micro_batch_size)
+
+        if self.prefetch:
+            return prefetch_iterator(gen(), self.prefetch)
+        return gen()

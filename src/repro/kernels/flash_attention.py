@@ -1,0 +1,150 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Blockwise online-softmax attention: the (S, S) score matrix never exists —
+each (block_q × block_k) tile of scores lives in VMEM, with running max /
+sum / output accumulators carried across the k-block grid steps (the TPU
+grid is executed sequentially over the last axis, so VMEM scratch persists
+between them). Supports causal masking, sliding windows (fully-masked k
+blocks are skipped — O(S·W) work for local layers), tanh soft-capping and
+GQA via the k/v index maps.
+
+Tiles default to 128×128: MXU-aligned on both matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    # block-level skip: fully-masked tiles do no work
+    live = True
+    if causal:
+        live = (ik * block_k) <= (iq * block_q + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(
+            live, (ik * block_k + block_k - 1) > (iq * block_q - window))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        ok = jnp.ones((block_q, block_k), bool)
+        if causal:
+            ok &= cols <= rows
+        if window is not None:
+            ok &= cols > rows - window
+        s = jnp.where(ok, s, _NEG_INF)
+
+        m_prev = m_ref[...]  # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd). Returns (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad = (-S) % block_q
+    pad_k = (-S) % block_k
+    if pad or pad_k:  # pad to tile multiples; padded keys are masked out
+        return _padded_call(q, k, v, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+    nq, nk = S // block_q, S // block_k
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        num_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),     # running max
+            pltpu.VMEM((block_q,), jnp.float32),     # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _padded_call(q, k, v, *, causal, window, softcap, block_q, block_k,
+                 interpret):
+    B, H, S, hd = q.shape
+    bs = block_q * block_k // math.gcd(block_q, block_k)
+    S_pad = -(-S // bs) * bs
+    padw = ((0, 0), (0, 0), (0, S_pad - S), (0, 0))
+    qp, kp, vp = (jnp.pad(x, padw) for x in (q, k, v))
+    # padded queries produce garbage rows we slice off; padded keys are
+    # always masked for causal rows < S. For non-causal, widen the window
+    # mask to exclude them explicitly via causal=True on padding? Keep
+    # causal-only support for padding (asserted).
+    assert causal, "padding path supports causal attention only"
+    out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out[:, :, :S]

@@ -1,0 +1,61 @@
+"""Fused normalized gradient accumulation as a Pallas TPU kernel.
+
+Paper Fig. 2 step ❹ + eq. (14): ``acc ← acc + grad · (1/N_Sμ)``, fusing the
+loss-normalization scale into the accumulate so the scaled gradient is never
+materialized, with in-place aliasing on the fp32 accumulator (the gradient
+may arrive in bf16)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _accum_kernel(scale_ref, acc_ref, g_ref, out_ref):
+    out_ref[...] = (acc_ref[...]
+                    + g_ref[...].astype(acc_ref.dtype) * scale_ref[0])
+
+
+def grad_accum(acc, grad, scale, *, block: int = DEFAULT_BLOCK,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """acc: (N,) fp32 (or any 1-D); grad: (N,); scale: scalar.
+    Returns acc + scale*grad, aliasing the accumulator buffer in place."""
+    N = acc.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block = min(block, N)
+    pad = (-N) % block
+    if pad:
+        acc_p = jnp.pad(acc, (0, pad))
+        grad_p = jnp.pad(grad, (0, pad))
+    else:
+        acc_p, grad_p = acc, grad
+    scale_arr = jnp.asarray([scale], acc.dtype)
+    out = pl.pallas_call(
+        _accum_kernel,
+        grid=(acc_p.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # scale (broadcast)
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(acc_p.shape, acc.dtype),
+        input_output_aliases={1: 0},  # acc buffer reused in place
+        interpret=interpret,
+    )(scale_arr, acc_p, grad_p)
+    return out[:N] if pad else out
+
+
+def grad_accum_tree(acc_tree, grad_tree, scale, **kw):
+    """Apply the fused accumulate leaf-wise over parameter pytrees
+    (flattening each leaf to 1-D)."""
+    def one(a, g):
+        return grad_accum(a.reshape(-1), g.reshape(-1), scale,
+                          **kw).reshape(a.shape)
+    return jax.tree.map(one, acc_tree, grad_tree)

@@ -1,0 +1,88 @@
+"""Jit'd public wrappers around the Pallas kernels, with custom VJPs.
+
+The forward pass runs the Pallas kernel; the backward pass recomputes
+through the pure-jnp oracle (``ref.py``) under ``jax.vjp`` — standard
+recompute-form backward, numerically identical to differentiating the
+reference (tested in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import cross_entropy as ce_kernel
+from . import flash_attention as fa_kernel
+from . import grad_accum as ga_kernel
+from . import ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None):
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) → (B, H, S, hd)."""
+    return fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                     softcap=softcap)
+
+
+def _fa_fwd(q, k, v, causal, window, softcap):
+    out = fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal,
+                                             window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy (with MBS normalization scale)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fused_cross_entropy(logits, labels, scale: float = 1.0):
+    """Per-token scaled NLL: (T, V), (T,) → (T,) fp32."""
+    return ce_kernel.cross_entropy(logits, labels, scale=scale)
+
+
+def _ce_fwd(logits, labels, scale):
+    return ce_kernel.cross_entropy(logits, labels, scale=scale), (logits, labels)
+
+
+def _ce_bwd(scale, res, g):
+    logits, labels = res
+    # d/dlogits [scale * (lse - gold)] = scale * (softmax - onehot)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    d = (probs - onehot) * (g[:, None] * scale)
+    return d.astype(logits.dtype), None
+
+
+fused_cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused normalized grad accumulate
+# ---------------------------------------------------------------------------
+
+def grad_accum(acc, grad, scale):
+    return ga_kernel.grad_accum(acc, grad, scale)
+
+
+def grad_accum_tree(acc_tree, grad_tree, scale):
+    return ga_kernel.grad_accum_tree(acc_tree, grad_tree, scale)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for the
+shape/dtype sweep tests and the recompute path of the custom VJPs)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd) with H % Hkv == 0.
+    Returns (B, H, S, hd) in q.dtype; math in fp32."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, hd)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qf, k.astype(jnp.float32))
+    logits = logits / math.sqrt(hd)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    logits = jnp.where(ok, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def cross_entropy_ref(logits, labels) -> jnp.ndarray:
+    """logits: (T, V); labels: (T,) int32. Returns per-token NLL (T,) fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - gold
+
+
+def grad_accum_ref(acc, grad, scale) -> jnp.ndarray:
+    """Paper step ❹ with eq. (14) normalization: acc + scale * grad,
+    accumulating in acc's dtype (fp32)."""
+    return acc + grad.astype(acc.dtype) * jnp.asarray(scale, acc.dtype)

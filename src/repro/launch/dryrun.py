@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, with NO device allocation (ShapeDtypeStruct inputs).
+
+Proves the distribution config is coherent and extracts the roofline inputs:
+  * main compile (scan-over-layers): ``memory_analysis()`` (fits HBM?),
+    collective schedule, compile proof.
+  * cost probes: XLA's cost analysis counts a while-loop body ONCE, so the
+    scanned main graph under-reports FLOPs/bytes/collectives by the trip
+    counts. We therefore compile two small probes — 1 period and 2 periods
+    of the layer pattern, scans fully unrolled, one micro-batch — and
+    extrapolate linearly (cost is affine in depth and in the number of
+    micro-batches):
+        X(P, n) = n * (X1 + (P - 1) * (X2 - X1))
+    This is exact for per-layer work; it over-counts the once-per-step
+    optimizer update n times (< 0.1% of train FLOPs; noted in
+    EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k \
+      [--multi-pod] [--microbatches 8] [--no-probe] [--out DIR]
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from .. import configs  # noqa: E402
+from . import mesh as mesh_lib, sharding, steps  # noqa: E402
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+ = )?(?P<out>\(?[\w\[\],{}\s/#*]*?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast)(?:-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device output bytes of every collective op, by kind."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _shape_bytes(m.group("out"))
+        d = out.setdefault(op, {"bytes": 0, "count": 0})
+        d["bytes"] += b
+        d["count"] += 1
+    return out
+
+
+def _in_specs(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
+    specs = []
+    for i, arg in enumerate(bundle.arg_shapes):
+        if bundle.kind == "train":
+            spec = (sharding.param_specs(arg, mesh, fsdp=fsdp,
+                                         fsdp_over_pod=fsdp_over_pod)
+                    if i in (0, 1)
+                    else sharding.batch_specs(arg, mesh, batch_dim=1))
+        elif bundle.kind == "prefill":
+            spec = (sharding.param_specs(arg, mesh) if i == 0
+                    else sharding.cache_specs(arg, mesh, stacked=False))
+        else:  # decode: (params, token, cache, pos)
+            if i == 0:
+                spec = sharding.param_specs(arg, mesh)
+            elif i == 2:
+                spec = sharding.cache_specs(arg, mesh, stacked=True)
+            else:
+                spec = sharding.cache_specs(arg, mesh, stacked=False)
+        specs.append(spec)
+    return specs
+
+
+def _out_specs(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
+    from jax.sharding import PartitionSpec as P
+    out_shapes = jax.eval_shape(bundle.fn, *bundle.arg_shapes)
+    if bundle.kind == "train":  # (params, opt_state, metrics)
+        return (sharding.param_specs(out_shapes[0], mesh, fsdp=fsdp,
+                                     fsdp_over_pod=fsdp_over_pod),
+                sharding.param_specs(out_shapes[1], mesh, fsdp=fsdp,
+                                     fsdp_over_pod=fsdp_over_pod),
+                jax.tree.map(lambda _: P(), out_shapes[2]))
+    if isinstance(out_shapes, tuple) and len(out_shapes) == 2:
+        logits, cache = out_shapes  # (logits, cache)
+        return (sharding.cache_specs(logits, mesh, stacked=False),
+                sharding.cache_specs(cache, mesh, stacked=True))
+    return sharding.cache_specs(out_shapes, mesh, stacked=False)
+
+
+def _compile(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=tuple(sharding.named(s, mesh)
+                               for s in _in_specs(bundle, mesh, fsdp_over_pod,
+                                                  fsdp)),
+            out_shardings=sharding.named(
+                _out_specs(bundle, mesh, fsdp_over_pod, fsdp), mesh),
+            donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = dict(compiled.cost_analysis() or {})
+    return compiled, cost, round(t_lower, 2), round(t_compile, 2)
+
+
+def _probe_cfg(cfg, periods: int):
+    kw = {"num_layers": cfg.pattern_len * periods}
+    if cfg.is_encdec:
+        assert cfg.encoder_layers % cfg.num_periods == 0
+        kw["encoder_layers"] = (cfg.encoder_layers // cfg.num_periods) * periods
+    return dataclasses.replace(cfg, **kw)
+
+
+def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
+                fsdp: bool = True):
+    """Trip-count-corrected flops/bytes/collective-bytes via two unrolled
+    probe compiles (see module docstring)."""
+    n = num_microbatches if shape.kind == "train" else 1
+    pshape = (dataclasses.replace(
+        shape, global_batch=shape.global_batch // num_microbatches)
+        if shape.kind == "train" else shape)
+    step_kw = {"remat": remat} if shape.kind == "train" else {}
+    probes = {}
+    for P in (1, 2):
+        bundle = steps.build_step(_probe_cfg(cfg, P), pshape,
+                                  num_microbatches=1, scan_unroll=P, **step_kw)
+        compiled, cost, tl, tc = _compile(bundle, mesh, fsdp=fsdp)
+        probes[P] = {
+            "flops": float(cost.get("flops", 0)),
+            "bytes": float(cost.get("bytes accessed", 0)),
+            "colls": collective_bytes(compiled.as_text()),
+            "lower_s": tl, "compile_s": tc,
+        }
+
+    P_full = cfg.num_periods
+
+    def extrap(x1, x2):
+        return n * (x1 + (P_full - 1) * (x2 - x1))
+
+    kinds = set(probes[1]["colls"]) | set(probes[2]["colls"])
+    colls = {k: {
+        "bytes": extrap(probes[1]["colls"].get(k, {}).get("bytes", 0),
+                        probes[2]["colls"].get(k, {}).get("bytes", 0)),
+        "count": extrap(probes[1]["colls"].get(k, {}).get("count", 0),
+                        probes[2]["colls"].get(k, {}).get("count", 0)),
+    } for k in kinds}
+    return {
+        "flops_per_device": extrap(probes[1]["flops"], probes[2]["flops"]),
+        "bytes_per_device": extrap(probes[1]["bytes"], probes[2]["bytes"]),
+        "collectives": colls,
+        "collective_bytes_total": sum(d["bytes"] for d in colls.values()),
+        "probe_raw": probes,
+    }
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               num_microbatches: int = 8, mesh=None, reduced: bool = False,
+               probe: bool = True, verbose: bool = True, remat: bool = True,
+               cfg_overrides: dict = None, fsdp: bool = True):
+    cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = configs.SHAPES[shape_name]
+    if not configs.supports_shape(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md §long_500k applicability)"}
+    mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    step_kw = {"remat": remat} if shape.kind == "train" else {}
+    bundle = steps.build_step(cfg, shape, num_microbatches=num_microbatches,
+                              **step_kw)
+    # multi-pod: extend FSDP over (pod, data) — optimizer-state-bound models
+    # (grok-1) only fit per-chip HBM at the 512-chip shard
+    compiled, cost, t_lower, t_compile = _compile(bundle, mesh,
+                                                  fsdp_over_pod=multi_pod,
+                                                  fsdp=fsdp)
+    mem = compiled.memory_analysis()
+    colls_raw = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "kind": bundle.kind, "num_devices": int(mesh.devices.size),
+        "num_microbatches": num_microbatches if bundle.kind == "train" else None,
+        "raw_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if k in ("flops", "bytes accessed",
+                                       "transcendentals", "optimal_seconds")},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+            "peak_bytes_est": (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "output_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0)
+                               - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "collectives_raw_once": colls_raw,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "skipped": False,
+    }
+    if probe:
+        result["corrected"] = cost_probes(cfg, shape, mesh, num_microbatches,
+                                          remat=remat, fsdp=fsdp)
+    if verbose:
+        print(json.dumps(result))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--shape", required=True, choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="perf knob: disable per-period activation remat")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="perf knob: replicate params over the data axis "
+                         "(kills per-micro-batch weight all-gathers; only "
+                         "for models whose optimizer state fits)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="perf knob: MoE capacity factor override")
+    ap.add_argument("--out", default=None, help="directory for JSON artifact")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.capacity_factor is not None:
+        overrides["capacity_factor"] = args.capacity_factor
+    res = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
+                     num_microbatches=args.microbatches, reduced=args.reduced,
+                     probe=not args.no_probe, verbose=args.out is None,
+                     remat=not args.no_remat, cfg_overrides=overrides or None,
+                     fsdp=not args.no_fsdp)
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = "multi" if args.multi_pod else "single"
+        path = os.path.join(args.out, f"{args.arch}__{args.shape}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

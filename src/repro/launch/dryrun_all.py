@@ -1,0 +1,103 @@
+"""Run the full dry-run matrix: every (architecture × input shape) on the
+single-pod mesh (with roofline cost probes) AND the 2-pod mesh (compile
+proof only). Each combo runs in a subprocess (the 512-device XLA_FLAGS must
+be set before jax initializes, and isolation keeps compile memory bounded).
+
+  python -m repro.launch.dryrun_all --out experiments/dryrun [--jobs ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from .. import configs
+
+# per-arch micro-batch count for train_4k: 16 → one sample per data shard
+# (the MBS knob; chosen from the memory model for the giant models)
+TRAIN_MICROBATCHES = {
+    "grok-1-314b": 16, "mixtral-8x22b": 16, "qwen2-vl-72b": 16,
+}
+DEFAULT_MICROBATCHES = 8
+
+
+def combos():
+    for arch in configs.ARCHS:
+        for shape in configs.SHAPES:
+            for mesh in ("single", "multi"):
+                yield arch, shape, mesh
+
+
+def run_one(arch: str, shape: str, mesh: str, out_dir: str,
+            timeout: int = 3000) -> dict:
+    tag = f"{arch}__{shape}__{mesh}"
+    path = os.path.join(out_dir, f"{tag}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    if not configs.supports_shape(arch, shape):
+        res = {"arch": arch, "shape": shape, "mesh_tag": mesh, "skipped": True,
+               "reason": "long_500k requires sub-quadratic attention"}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--microbatches",
+           str(TRAIN_MICROBATCHES.get(arch, DEFAULT_MICROBATCHES)),
+           "--out", out_dir]
+    if mesh == "multi":
+        cmd += ["--multi-pod", "--no-probe"]  # roofline probes: single-pod only
+    env = dict(os.environ)
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    if proc.returncode != 0:
+        res = {"arch": arch, "shape": shape, "mesh_tag": mesh, "failed": True,
+               "stderr_tail": proc.stderr[-3000:], "wall_s": time.time() - t0}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+    with open(path) as f:
+        res = json.load(f)
+    res["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--only-mesh", choices=["single", "multi"], default=None)
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for arch, shape, mesh in combos():
+        if args.only_mesh and mesh != args.only_mesh:
+            continue
+        if args.only_arch and arch != args.only_arch:
+            continue
+        t0 = time.time()
+        try:
+            res = run_one(arch, shape, mesh, args.out)
+            status = ("SKIP" if res.get("skipped")
+                      else "FAIL" if res.get("failed") else "ok")
+        except subprocess.TimeoutExpired:
+            status, res = "TIMEOUT", {}
+        print(f"{arch:24s} {shape:12s} {mesh:6s} {status:7s} "
+              f"{time.time() - t0:7.1f}s", flush=True)
+        results.append((arch, shape, mesh, status))
+
+    n_ok = sum(1 for r in results if r[3] == "ok")
+    n_skip = sum(1 for r in results if r[3] == "SKIP")
+    print(f"\n{n_ok} ok / {n_skip} skipped / "
+          f"{len(results) - n_ok - n_skip} failed of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

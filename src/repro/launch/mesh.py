@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+pure data parallelism so the only inter-pod (DCN) traffic is the gradient
+all-reduce, which MBS amortizes to once per mini-batch.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    if pod:
+        return jax.make_mesh((pod, data, model), (POD_AXIS, DATA_AXIS, MODEL_AXIS))
+    return jax.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dimension is sharded over."""
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,144 @@
+"""Divisibility-aware GSPMD sharding policy.
+
+Parameters: tensor-parallel over ``model`` on the last divisible dim,
+FSDP over ``data`` on the first remaining divisible dim (ndim>=2 leaves).
+Stacked-per-period leaves (under "blocks"/"enc_layers"/"dec_layers") never
+shard their leading (scan) dim. Batch leaves shard dim `batch_dim` over
+(pod, data). Anything non-divisible stays replicated on that dim — GSPMD
+propagates and inserts collectives as needed, so every (arch × shape ×
+mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import mesh as mesh_lib
+
+_STACKED_ROOTS = ("blocks", "enc_layers", "dec_layers")
+
+
+def _leaf_path_root(path) -> str:
+    for p in path:
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _auto_dims(shape: Tuple[int, ...], model_size: int, data_size: int,
+               skip_leading: int, fsdp, fsdp_axes) -> list:
+    spec = [None] * len(shape)
+    dims = range(skip_leading, len(shape))
+    if len(shape) - skip_leading < 2:
+        return spec  # 1-D leaves (norm scales, biases): replicated
+    # model (TP) axis: last dim divisible by the model mesh size
+    for i in reversed(list(dims)):
+        if model_size > 1 and shape[i] % model_size == 0 and shape[i] >= model_size:
+            spec[i] = mesh_lib.MODEL_AXIS
+            break
+    if fsdp and data_size > 1 and len(shape) - skip_leading >= 2:
+        for i in dims:
+            if spec[i] is None and shape[i] % data_size == 0 and shape[i] >= data_size:
+                spec[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return spec
+
+
+def param_specs(params_shapes, mesh, *, fsdp: bool = True,
+                fsdp_over_pod: bool = False):
+    """PartitionSpec tree for a parameter-like pytree (params, grads,
+    optimizer state).
+
+    ``fsdp_over_pod`` extends the FSDP shard to the (pod, data) product —
+    needed for optimizer-state-bound models (grok-1: fp32 params+momentum
+    = 14.7 GB/chip at 256 chips; 7.4 GB at 512)."""
+    msize = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+    dsize = mesh_lib.axis_size(mesh, mesh_lib.DATA_AXIS)
+    fsdp_axes: Tuple[str, ...] = (mesh_lib.DATA_AXIS,)
+    if fsdp_over_pod and mesh_lib.POD_AXIS in mesh.axis_names:
+        fsdp_axes = (mesh_lib.POD_AXIS, mesh_lib.DATA_AXIS)
+        dsize *= mesh_lib.axis_size(mesh, mesh_lib.POD_AXIS)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        keys = [str(p.key) for p in path if hasattr(p, "key")]
+        # embedding table: shard the vocab dim (Megatron-style) so the tied
+        # LM head emits vocab-sharded logits; fall back to the generic policy
+        # when the vocab is not divisible (seamless 256206, mamba2 50280).
+        if keys[-2:] == ["embed", "table"] and msize > 1 \
+                and shape[0] % msize == 0:
+            spec = [mesh_lib.MODEL_AXIS, None]
+            if fsdp and dsize > 1 and shape[1] % dsize == 0:
+                spec[1] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            return P(*spec)
+        skip = 1 if _leaf_path_root(path) in _STACKED_ROOTS else 0
+        return P(*_auto_dims(shape, msize, dsize, skip, fsdp, fsdp_axes))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+def batch_specs(batch_shapes, mesh, *, batch_dim: int = 1):
+    """Spec tree for MBS micro-batch stacks ``(N_Sμ, micro, ...)``:
+    dim 0 (the scan/stream axis) replicated, ``batch_dim`` sharded over
+    (pod, data) when divisible."""
+    baxes = mesh_lib.batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= mesh_lib.axis_size(mesh, a)
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) > batch_dim and dp > 1 and shape[batch_dim] % dp == 0 \
+                and shape[batch_dim] >= dp:
+            spec[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+        return P(*spec)
+
+    return jax.tree.map(spec_for, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh, *, stacked: bool = True):
+    """Spec tree for decode caches: leaves are (P, B, ...) — batch over
+    (pod, data), model axis on the last divisible dim (kv heads / head_dim /
+    state width)."""
+    msize = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+    baxes = mesh_lib.batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= mesh_lib.axis_size(mesh, a)
+    bdim = 1 if stacked else 0
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) > bdim and dp > 1 and shape[bdim] % dp == 0 and shape[bdim] >= dp:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        # model axis on the LARGEST divisible dim: for ring KV caches that is
+        # the window/sequence dim (sequence-sharded KV — decode attention
+        # reduces over it with a sharded softmax), for SSM states the heads.
+        cand = [i for i in range(bdim + 1, len(shape))
+                if msize > 1 and shape[i] % msize == 0 and shape[i] >= msize]
+        if cand:
+            spec[max(cand, key=lambda i: shape[i])] = mesh_lib.MODEL_AXIS
+        return P(*spec)
+
+    return jax.tree.map(spec_for, cache_shapes)
+
+
+def named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_sharding(shapes, specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,218 @@
+"""Step builders + abstract input specs for every (architecture × shape).
+
+  * train:   MBS train step (paper technique, first-class): micro-batch
+             scan + loss normalization + single optimizer update.
+  * prefill: full-sequence forward building the decode cache.
+  * decode:  one new token against a seq_len KV cache.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable,
+no allocation) for everything the step consumes beyond params/opt-state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import InputShape
+from ..core import losses, mbs as mbs_lib
+from ..models import encdec, transformer
+from ..models.config import ModelConfig
+from .. import optim
+
+N_VISION_TOKENS = 256  # stubbed patch embeds per sample (qwen2-vl frontend)
+AUDIO_TGT_FRACTION = 4  # decoder length = seq / 4 for enc-dec training
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    kind: str
+    fn: Callable  # the step function to jit
+    arg_shapes: Tuple[Any, ...]  # abstract args (ShapeDtypeStruct trees)
+    donate_argnums: Tuple[int, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# abstract params / optimizer state
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    init = encdec.init_params if cfg.is_encdec else transformer.init_params
+    return jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 1e-3) -> optim.Optimizer:
+    # production default: SGD momentum (the paper's optimizer); examples
+    # override with Adam where the paper does (U-Net).
+    return optim.sgd(lr, momentum=0.9, weight_decay=5e-4)
+
+
+def abstract_opt_state(optimizer, params_shapes):
+    return jax.eval_shape(optimizer.init, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
+                 scan_unroll: int = 1):
+    def loss_fn(params, mb, exact_denom=None):
+        sw = mb.get("sample_weight")
+        if cfg.is_encdec:
+            logits, aux = encdec.forward(params, cfg, mb["frames"],
+                                         mb["tgt_tokens"], dtype=dtype,
+                                         remat=remat, scan_unroll=scan_unroll)
+        else:
+            logits, aux = transformer.forward(
+                params, cfg, mb["tokens"],
+                vision_embeds=mb.get("vision_embeds"),
+                mrope_positions=mb.get("mrope_positions"),
+                dtype=dtype, remat=remat, scan_unroll=scan_unroll)
+        loss = losses.cross_entropy(logits, mb["labels"], sample_weight=sw,
+                                    exact_denom=exact_denom)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux / cfg.num_layers
+        return loss, {"aux_loss": aux}
+
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, *,
+                     num_microbatches: int, optimizer=None,
+                     dtype=jnp.bfloat16, remat: bool = True,
+                     normalization: str = "paper",
+                     scan_unroll: int = 1) -> StepBundle:
+    optimizer = optimizer or make_optimizer(cfg)
+    assert shape.global_batch % num_microbatches == 0, (
+        shape.global_batch, num_microbatches)
+    micro = shape.global_batch // num_microbatches
+    mcfg = mbs_lib.MBSConfig(micro, normalization=normalization)
+    loss_fn = make_loss_fn(cfg, dtype, remat, scan_unroll)
+    step = mbs_lib.make_mbs_train_step(loss_fn, optimizer, mcfg)
+
+    s = shape.seq_len
+    n, m = num_microbatches, micro
+    i32, f32 = jnp.int32, jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if cfg.is_encdec:
+        batch = {
+            "frames": sds((n, m, s, cfg.d_model), dtype),
+            "tgt_tokens": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
+            "labels": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
+        }
+    else:
+        batch = {
+            "tokens": sds((n, m, s), i32),
+            "labels": sds((n, m, s), i32),
+        }
+        if cfg.is_vlm:
+            batch["vision_embeds"] = sds(
+                (n, m, N_VISION_TOKENS, transformer.VISION_EMBED_DIM), dtype)
+            batch["mrope_positions"] = sds((n, 3, m, s), i32)
+
+    params = abstract_params(cfg)
+    opt_state = abstract_opt_state(optimizer, params)
+    return StepBundle("train", step, (params, opt_state, batch),
+                      donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape, *,
+                       dtype=jnp.bfloat16, scan_unroll: int = 1) -> StepBundle:
+    s, b = shape.seq_len, shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    gw = cfg.long_context_global_window if shape.name == "long_500k" else None
+
+    if cfg.is_encdec:
+        def fn(params, frames, tokens):
+            # encoder over the audio, then teacher-forced decoder prefill;
+            # returns last-position logits (cache built by init_decode_cache
+            # in the serving loop).
+            logits, _ = encdec.forward(params, cfg, frames, tokens,
+                                       dtype=dtype, remat=False,
+                                       scan_unroll=scan_unroll)
+            return logits[:, -1]
+
+        args = (abstract_params(cfg), sds((b, s, cfg.d_model), dtype),
+                sds((b, s // AUDIO_TGT_FRACTION), i32))
+        return StepBundle("prefill", fn, args)
+
+    def fn(params, tokens, vision_embeds=None, mrope_positions=None):
+        return transformer.prefill(params, cfg, tokens, max_len=s,
+                                   vision_embeds=vision_embeds,
+                                   mrope_positions=mrope_positions,
+                                   dtype=dtype, global_window=gw,
+                                   scan_unroll=scan_unroll)
+
+    args = [abstract_params(cfg), sds((b, s), i32)]
+    if cfg.is_vlm:
+        args += [sds((b, N_VISION_TOKENS, transformer.VISION_EMBED_DIM), dtype),
+                 sds((3, b, s), i32)]
+    return StepBundle("prefill", fn, tuple(args))
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    gw = cfg.long_context_global_window if shape.name == "long_500k" else None
+    if cfg.is_encdec:
+        b, s = shape.global_batch, shape.seq_len
+        # built abstractly (matches encdec.init_decode_cache's structure)
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        L = cfg.num_layers
+        sds = jax.ShapeDtypeStruct
+        T = s // AUDIO_TGT_FRACTION  # encoder frames feeding cross-attn
+        return {
+            "self": {
+                "k": sds((L, b, s, K, hd), dtype),
+                "v": sds((L, b, s, K, hd), dtype),
+                "pos": sds((L, b, s), jnp.int32),
+            },
+            "cross": {
+                "k": sds((L, b, T, K, hd), dtype),
+                "v": sds((L, b, T, K, hd), dtype),
+            },
+        }
+    cache = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, dtype, global_window=gw))
+    return cache
+
+
+def build_decode_step(cfg: ModelConfig, shape: InputShape, *,
+                      dtype=jnp.bfloat16, scan_unroll: int = 1) -> StepBundle:
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    gw = cfg.long_context_global_window if shape.name == "long_500k" else None
+    cache = abstract_cache(cfg, shape, dtype)
+
+    if cfg.is_encdec:
+        def fn(params, token, cache, pos):
+            return encdec.decode_step(params, cfg, token, cache, pos,
+                                      dtype=dtype, scan_unroll=scan_unroll)
+    else:
+        def fn(params, token, cache, pos):
+            return transformer.decode_step(params, cfg, token, cache, pos,
+                                           dtype=dtype, global_window=gw,
+                                           scan_unroll=scan_unroll)
+
+    args = (abstract_params(cfg), sds((b, 1), i32), cache, sds((b,), i32))
+    return StepBundle("decode", fn, args, donate_argnums=(2,))
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, *, num_microbatches: int = 8,
+               dtype=jnp.bfloat16, scan_unroll: int = 1, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, num_microbatches=num_microbatches,
+                                dtype=dtype, scan_unroll=scan_unroll, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, dtype=dtype,
+                                  scan_unroll=scan_unroll)
+    return build_decode_step(cfg, shape, dtype=dtype, scan_unroll=scan_unroll)

@@ -1,0 +1,89 @@
+"""Production training launcher.
+
+Builds the mesh from the actual device topology (falls back to a host mesh
+when run off-cluster), shards params/optimizer via the divisibility policy,
+and drives the MBS train step with the synthetic data pipeline.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --reduced --steps 20 --mini-batch 16 --microbatches 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import checkpoint, configs, optim
+from ..core import mbs as mbs_lib
+from ..data import LMDataset
+from ..models import encdec, transformer
+from . import mesh as mesh_lib, sharding, steps
+
+
+def build_mesh(args):
+    n = len(jax.devices())
+    if args.mesh == "production":
+        return mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    # host mesh: all local devices on the data axis
+    return mesh_lib.make_host_mesh(data=n, model=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--mini-batch", type=int, default=16)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--mesh", choices=["host", "production"], default="host")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dtype", choices=["float32", "bfloat16"],
+                    default="float32")
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    mesh = build_mesh(args)
+    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+    micro = args.mini_batch // args.microbatches
+    assert micro * args.microbatches == args.mini_batch
+
+    init = encdec.init_params if cfg.is_encdec else transformer.init_params
+    opt = optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
+    loss_fn = steps.make_loss_fn(cfg, dtype=dtype, remat=not args.reduced)
+    train_step = mbs_lib.make_mbs_train_step(loss_fn, opt,
+                                             mbs_lib.MBSConfig(micro))
+
+    with mesh:
+        pshapes = jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
+        pspecs = sharding.param_specs(pshapes, mesh)
+        params = jax.jit(lambda k: init(cfg, k),
+                         out_shardings=sharding.named(pspecs, mesh))(
+            jax.random.PRNGKey(0))
+        opt_state = jax.jit(opt.init, out_shardings=sharding.named(
+            sharding.param_specs(jax.eval_shape(opt.init, pshapes), mesh),
+            mesh))(params)
+        step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            mini = ds.batch(args.mini_batch, i)
+            split = {k: jnp.asarray(v) for k, v in
+                     mbs_lib.split_minibatch(mini, micro).items()}
+            params, opt_state, m = step(params, opt_state, split)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
+        if args.ckpt_dir:
+            checkpoint.save(args.ckpt_dir, args.steps, params)
+            print(f"checkpointed to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Attention: GQA with causal / sliding-window masks, logit soft-capping,
+QK-norm, RoPE / M-RoPE — plus ring-buffer KV-cache decode.
+
+The jnp path here is the reference implementation used for training and for
+CPU validation; ``repro.kernels.flash_attention`` provides the Pallas TPU
+kernel for the same math (selected via ``use_kernel=True``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": nn.dense_init(kq, d, H * hd, bias=cfg.qkv_bias),
+        "wk": nn.dense_init(kk, d, K * hd, bias=cfg.qkv_bias),
+        "wv": nn.dense_init(kv, d, K * hd, bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ko, H * hd, d),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(hd)
+        p["k_norm"] = nn.rmsnorm_init(hd)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, window: Optional[int], causal: bool = True):
+    """Additive mask bias: (..., S_q, S_k). q_pos/k_pos are int32 arrays
+    broadcastable to (..., S_q) and (..., S_k)."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def multihead_attention(q, k, v, *, q_pos, k_pos, window=None, causal=True,
+                        softcap=None, k_valid=None):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H % K == 0 (GQA).
+
+    k_valid: optional bool (B, T) marking valid cache slots.
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / math.sqrt(hd)
+    logits = nn.softcap(logits, softcap)
+    bias = _mask_bias(q_pos, k_pos, window, causal)  # (B?, S, T)
+    while bias.ndim < logits.ndim:
+        bias = bias[:, None]
+    logits = logits + bias
+    if k_valid is not None:
+        logits = jnp.where(k_valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def default_q_chunk() -> int:
+    """Attention q-chunk size; override with REPRO_Q_CHUNK (perf knob for
+    the §Perf hillclimb loop)."""
+    import os
+    return int(os.environ.get("REPRO_Q_CHUNK", "512"))
+
+
+def chunked_attention(q, k, v, *, q_pos, k_pos, window=None, causal=True,
+                      softcap=None, q_chunk=None, max_chunks=32,
+                      align=128):
+    """Query-chunked attention: never materializes the (S, S) logits tensor
+    (peak extra memory is one (B, H, q_chunk, k_span) block, reused across
+    the unrolled chunk loop), and for sliding-window layers each q-chunk
+    only reads the k-range it can see — an O(S·W) instead of O(S²) compute
+    path. Exact (full softmax row per chunk), not an approximation.
+
+    This is the pure-JAX twin of kernels/flash_attention; it is what the
+    production train/prefill steps lower (the Pallas kernel is the TPU
+    hot-path for the same math)."""
+    if q_chunk is None:
+        q_chunk = default_q_chunk()
+    B, S, H, hd = q.shape
+    if S <= q_chunk:
+        return multihead_attention(q, k, v, q_pos=q_pos, k_pos=k_pos,
+                                   window=window, causal=causal,
+                                   softcap=softcap)
+    qc = max(q_chunk, -(-S // max_chunks))
+    qc = -(-qc // align) * align
+    outs = []
+    for c0 in range(0, S, qc):
+        c1 = min(c0 + qc, S)
+        # static k-span visible to this q chunk (positions are the standard
+        # arange; ragged/custom positions still mask correctly inside)
+        k1 = c1 if causal else k.shape[1]
+        k0 = 0 if window is None else max(0, c0 - window + 1)
+        k0 = (k0 // align) * align
+        out = multihead_attention(
+            q[:, c0:c1], k[:, k0:k1], v[:, k0:k1],
+            q_pos=q_pos[:, c0:c1], k_pos=k_pos[:, k0:k1],
+            window=window, causal=causal, softcap=softcap)
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_block(p, cfg: ModelConfig, x, positions, *, window=None,
+               rope_theta=None, compute_dtype=None, mrope_positions=None):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = nn.seq_gathered(x)  # bf16 all-gather at the TP boundary
+    q = nn.dense(p["wq"], x, compute_dtype).reshape(B, S, H, hd)
+    k = nn.dense(p["wk"], x, compute_dtype).reshape(B, S, K, hd)
+    v = nn.dense(p["wv"], x, compute_dtype).reshape(B, S, K, hd)
+    if cfg.use_qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = nn.apply_mrope(q, mrope_positions, theta, cfg.mrope_sections)
+        k = nn.apply_mrope(k, mrope_positions, theta, cfg.mrope_sections)
+    else:
+        q = nn.apply_rope(q, positions, theta)
+        k = nn.apply_rope(k, positions, theta)
+    # head-sharded attention when the head count divides the model axis;
+    # otherwise context-parallel: q ROWS shard over model (valid for any
+    # head count; k/v replicated — cheap under GQA) instead of replicating
+    # the whole attention computation 16×.
+    msize = nn.mesh_axis_size("model")
+    heads_div = msize > 1 and H % msize == 0
+    qax = "model" if heads_div else None
+    kax = "model" if msize > 1 and K % msize == 0 else None
+    sax = None
+    if not heads_div and msize > 1 and S % msize == 0 and S >= msize:
+        sax = "model"  # context parallelism
+    batch = ("pod", "data")
+    q = nn.shard_hint(q, batch, sax, qax, None)
+    k = nn.shard_hint(k, batch, None, kax, None)
+    v = nn.shard_hint(v, batch, None, kax, None)
+    out = chunked_attention(q, k, v, q_pos=positions, k_pos=positions,
+                            window=window, softcap=cfg.attn_softcap)
+    out = nn.shard_hint(out, batch, sax, qax, None)
+    out = nn.dense(p["wo"], out.reshape(B, S, H * hd), compute_dtype)
+    return nn.seq_sharded(out), (k, v)  # reduce-scatter back to S-shards
+
+
+def cross_attn_block(p, cfg: ModelConfig, x, kv_src=None, kv_cache=None,
+                     src_valid=None, compute_dtype=None):
+    """Encoder-decoder cross attention. kv_src: encoder output (B, T, D), or
+    pass precomputed (k, v) via kv_cache for decode."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = nn.dense(p["wq"], x, compute_dtype).reshape(B, S, H, hd)
+    if kv_cache is None:
+        T = kv_src.shape[1]
+        k = nn.dense(p["wk"], kv_src, compute_dtype).reshape(B, T, K, hd)
+        v = nn.dense(p["wv"], kv_src, compute_dtype).reshape(B, T, K, hd)
+    else:
+        k, v = kv_cache
+        T = k.shape[1]
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    k_pos = jnp.zeros((B, T), jnp.int32)
+    out = multihead_attention(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=False,
+                              softcap=cfg.attn_softcap, k_valid=src_valid)
+    return nn.dense(p["wo"], out.reshape(B, S, H * hd), compute_dtype), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode: ring-buffer KV cache (bounded to the window for local layers)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int], dtype):
+    W = max_len if window is None else min(window, max_len)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, W, K, hd), dtype),
+        "v": jnp.zeros((batch, W, K, hd), dtype),
+        # absolute position stored in each ring slot; -1 = empty
+        "pos": jnp.full((batch, W), -1, jnp.int32),
+    }
+
+
+def ring_cache_from_full(k, v, positions, window, max_len: int):
+    """Convert full-sequence prefill (k, v) into the ring-buffer cache layout
+    used by ``attn_decode_step``. positions: (B, S) absolute positions
+    following the standard arange layout (slot = position % W).
+
+    Implemented as a static gather permutation along the sequence axis (not a
+    batch-indexed scatter, which GSPMD replicates — 2×8 GiB/device at
+    gemma2 prefill_32k scale)."""
+    B, S, K, hd = k.shape
+    W = max_len if window is None else min(window, max_len)
+    take = min(S, W)
+    if take < W:  # short prefill: slots [0, S) filled, the rest empty
+        pad = W - take
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions.astype(jnp.int32), ((0, 0), (0, pad)),
+                       constant_values=-1)
+        return {"k": ck, "v": cv, "pos": cpos}
+    # slot j holds source index S - W + ((j - S) mod W): a static permutation
+    j = jnp.arange(W)
+    src = S - W + (j - (S % W)) % W
+    ck = jnp.take(k, src, axis=1)
+    cv = jnp.take(v, src, axis=1)
+    cpos = jnp.take(positions.astype(jnp.int32), src, axis=1)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def attn_decode_step(p, cfg: ModelConfig, x, cache, cur_pos, *, window=None,
+                     rope_theta=None, compute_dtype=None):
+    """One-token decode. x: (B, 1, D); cur_pos: (B,) absolute position.
+
+    Writes (k, v) into the ring slot ``cur_pos % W`` and attends over valid
+    slots. Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    W = cache["k"].shape[1]
+    q = nn.dense(p["wq"], x, compute_dtype).reshape(B, 1, H, hd)
+    k = nn.dense(p["wk"], x, compute_dtype).reshape(B, 1, K, hd)
+    v = nn.dense(p["wv"], x, compute_dtype).reshape(B, 1, K, hd)
+    if cfg.use_qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    pos2d = cur_pos[:, None]
+    q = nn.apply_rope(q, pos2d, theta)
+    k = nn.apply_rope(k, pos2d, theta)
+
+    slot = (cur_pos % W).astype(jnp.int32)  # (B,)
+    bidx = jnp.arange(B)
+    new_k = cache["k"].astype(k.dtype).at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].astype(v.dtype).at[bidx, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(cur_pos.astype(jnp.int32))
+
+    k_valid = new_pos >= 0
+    if window is not None:
+        k_valid &= new_pos > (cur_pos[:, None] - window)
+    out = multihead_attention(q, new_k, new_v, q_pos=pos2d, k_pos=new_pos,
+                              window=None, causal=True,
+                              softcap=cfg.attn_softcap, k_valid=k_valid)
+    out = nn.dense(p["wo"], out.reshape(B, 1, H * hd), compute_dtype)
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}

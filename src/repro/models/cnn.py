@@ -1,0 +1,187 @@
+"""The paper's own model families: ResNet (classification) and U-Net
+(semantic segmentation), in pure JAX.
+
+BatchNorm statistics are computed per *micro*-batch under MBS — exactly the
+semantics of the paper's PyTorch experiments (§4.2.2) — and running
+statistics are threaded as explicit state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def conv_init(key, k: int, cin: int, cout: int):
+    fan_in = k * k * cin
+    return {"w": jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+            * math.sqrt(2.0 / fan_in)}
+
+
+def conv(p, x, stride: int = 1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def bn_init(c: int):
+    return ({"scale": jnp.ones((c,), jnp.float32),
+             "bias": jnp.zeros((c,), jnp.float32)},
+            {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)})
+
+
+def batchnorm(p, state, x, train: bool, momentum: float = 0.9):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mu,
+                     "var": momentum * state["var"] + (1 - momentum) * var}
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# ResNet (bottleneck, ResNet-50-style; depth configurable)
+# ---------------------------------------------------------------------------
+
+def _bottleneck_init(key, cin: int, cmid: int, stride: int):
+    ks = jax.random.split(key, 4)
+    cout = cmid * 4
+    p: Dict[str, Any] = {"conv1": conv_init(ks[0], 1, cin, cmid),
+                         "conv2": conv_init(ks[1], 3, cmid, cmid),
+                         "conv3": conv_init(ks[2], 1, cmid, cout)}
+    s: Dict[str, Any] = {}
+    for i, c in [(1, cmid), (2, cmid), (3, cout)]:
+        p[f"bn{i}"], s[f"bn{i}"] = bn_init(c)
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[3], 1, cin, cout)
+        p["bn_proj"], s["bn_proj"] = bn_init(cout)
+    return p, s
+
+
+def _bottleneck(p, s, x, stride: int, train: bool):
+    ns = {}
+    h = conv(p["conv1"], x)
+    h, ns["bn1"] = batchnorm(p["bn1"], s["bn1"], h, train)
+    h = jax.nn.relu(h)
+    h = conv(p["conv2"], h, stride)
+    h, ns["bn2"] = batchnorm(p["bn2"], s["bn2"], h, train)
+    h = jax.nn.relu(h)
+    h = conv(p["conv3"], h)
+    h, ns["bn3"] = batchnorm(p["bn3"], s["bn3"], h, train)
+    if "proj" in p:
+        x = conv(p["proj"], x, stride)
+        x, ns["bn_proj"] = batchnorm(p["bn_proj"], s["bn_proj"], x, train)
+    return jax.nn.relu(x + h), ns
+
+
+def resnet_init(key, *, num_classes: int, stage_sizes: Sequence[int] = (3, 4, 6, 3),
+                width: int = 64, in_channels: int = 3):
+    """stage_sizes (3,4,6,3) == ResNet-50; (3,4,23,3) == ResNet-101."""
+    ks = jax.random.split(key, 3 + sum(stage_sizes))
+    params: Dict[str, Any] = {"stem": conv_init(ks[0], 7, in_channels, width)}
+    state: Dict[str, Any] = {}
+    params["bn_stem"], state["bn_stem"] = bn_init(width)
+    cin = width
+    ki = 1
+    for si, n in enumerate(stage_sizes):
+        cmid = width * (2 ** si)
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            p, s = _bottleneck_init(ks[ki], cin, cmid, stride)
+            params[f"s{si}b{bi}"], state[f"s{si}b{bi}"] = p, s
+            cin = cmid * 4
+            ki += 1
+    params["head"] = {"w": jnp.zeros((cin, num_classes), jnp.float32),
+                      "b": jnp.zeros((num_classes,), jnp.float32)}
+    return params, state
+
+
+def resnet_forward(params, state, x, *, stage_sizes=(3, 4, 6, 3), train=True):
+    """x: (B, H, W, C) -> logits (B, num_classes); returns (logits, new_state)."""
+    ns: Dict[str, Any] = {}
+    h = conv(params["stem"], x, stride=2)
+    h, ns["bn_stem"] = batchnorm(params["bn_stem"], state["bn_stem"], h, train)
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n in enumerate(stage_sizes):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h, ns[f"s{si}b{bi}"] = _bottleneck(
+                params[f"s{si}b{bi}"], state[f"s{si}b{bi}"], h, stride, train)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h.astype(jnp.float32) @ params["head"]["w"] + params["head"]["b"]
+    return logits, ns
+
+
+# ---------------------------------------------------------------------------
+# U-Net (paper's segmentation model)
+# ---------------------------------------------------------------------------
+
+def _double_conv_init(key, cin: int, cout: int):
+    k1, k2 = jax.random.split(key)
+    p = {"c1": conv_init(k1, 3, cin, cout), "c2": conv_init(k2, 3, cout, cout)}
+    s = {}
+    p["bn1"], s["bn1"] = bn_init(cout)
+    p["bn2"], s["bn2"] = bn_init(cout)
+    return p, s
+
+
+def _double_conv(p, s, x, train):
+    ns = {}
+    h = conv(p["c1"], x)
+    h, ns["bn1"] = batchnorm(p["bn1"], s["bn1"], h, train)
+    h = jax.nn.relu(h)
+    h = conv(p["c2"], h)
+    h, ns["bn2"] = batchnorm(p["bn2"], s["bn2"], h, train)
+    return jax.nn.relu(h), ns
+
+
+def unet_init(key, *, in_channels: int = 3, out_channels: int = 1,
+              base: int = 64, depth: int = 4):
+    ks = jax.random.split(key, 2 * depth + 2)
+    params: Dict[str, Any] = {}
+    state: Dict[str, Any] = {}
+    c = in_channels
+    for d in range(depth + 1):
+        cout = base * (2 ** d)
+        params[f"down{d}"], state[f"down{d}"] = _double_conv_init(ks[d], c, cout)
+        c = cout
+    for d in reversed(range(depth)):
+        cout = base * (2 ** d)
+        p, s = _double_conv_init(ks[depth + 1 + d], c + cout, cout)
+        params[f"up{d}"], state[f"up{d}"] = p, s
+        c = cout
+    params["head"] = conv_init(ks[-1], 1, c, out_channels)
+    return params, state
+
+
+def unet_forward(params, state, x, *, depth: int = 4, train=True):
+    """x: (B, H, W, C) -> logits (B, H, W, out); returns (logits, new_state)."""
+    ns: Dict[str, Any] = {}
+    skips: List[jnp.ndarray] = []
+    h = x
+    for d in range(depth + 1):
+        h, ns[f"down{d}"] = _double_conv(params[f"down{d}"],
+                                         state[f"down{d}"], h, train)
+        if d < depth:
+            skips.append(h)
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+    for d in reversed(range(depth)):
+        B, H, W, C = h.shape
+        h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+        h = jnp.concatenate([skips[d], h], axis=-1)
+        h, ns[f"up{d}"] = _double_conv(params[f"up{d}"], state[f"up{d}"], h, train)
+    return conv(params["head"], h).astype(jnp.float32), ns

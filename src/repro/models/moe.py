@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity-bounded
+one-hot dispatch (dense einsum dispatch/combine — MXU-friendly and shardable:
+with experts sharded over the ``model`` mesh axis, GSPMD lowers the dispatch
+and combine einsums to all-to-all).
+
+Includes the standard load-balance auxiliary loss; under Micro-Batch
+Streaming the aux loss is normalized by the same 1/N_Sμ factor as the task
+loss (see repro.core.mbs), so the accumulated total gradient stays exact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    glu = cfg.ffn_kind in ("swiglu", "geglu")
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": nn.dense_init(ks[0], d, E, scale=0.02),
+        "w_up": jax.random.normal(ks[1], (E, d, F), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[2], (E, F, d), jnp.float32) * s_out,
+    }
+    if glu:
+        p["w_gate"] = jax.random.normal(ks[3], (E, d, F), jnp.float32) * s_in
+    if cfg.num_shared_experts:
+        p["shared"] = nn.ffn_init(ks[4], d,
+                                  cfg.num_shared_experts * (cfg.shared_d_ff or cfg.moe_d_ff),
+                                  cfg.ffn_kind)
+    return p
+
+
+def _hints(num_experts: int):
+    """Sharding hints for the expert tensors: expert-parallel when E divides
+    the ``model`` mesh axis, tensor-parallel on d_ff otherwise. GSPMD alone
+    replicates the (E, C, F) hidden (and its gradient) — at grok-1 scale
+    that is 2×40 GiB per device, so the hints are load-bearing."""
+    msize = nn.mesh_axis_size("model")
+    if msize > 1 and num_experts % msize == 0:
+        return ("model", None, None), ("model", None, None)
+    # capacity-parallel experts (E not divisible by the model axis): shard
+    # the token-slot dim C — expert matmuls are then embarrassingly parallel
+    # (weights gathered per layer, FSDP-style; gradients reduce-scattered)
+    # instead of contracting a sharded F, where GSPMD all-gathers the
+    # (E, C, F) hidden (40 GiB/device at grok-1 scale).
+    return (None, "model", None), (None, "model", None)
+
+
+def _expert_ffn(p, x, kind: str, num_experts: int):
+    """x: (E, C, D) -> (E, C, D) batched over experts."""
+    hid_spec, out_spec = _hints(num_experts)
+    x = nn.shard_hint(x, *out_spec)
+    up = jnp.einsum("ecd,edf->ecf", x, p["w_up"].astype(x.dtype))
+    up = nn.shard_hint(up, *hid_spec)
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype))) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["w_gate"].astype(x.dtype))) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = nn.shard_hint(h, *hid_spec)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    return nn.shard_hint(out, *out_spec)
+
+
+def moe_block(p, cfg: ModelConfig, x, compute_dtype=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (out (B,S,D), aux_loss scalar fp32)."""
+    x = nn.seq_gathered(x)  # full-S tokens for routing/dispatch
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+    if compute_dtype is not None:
+        xt = xt.astype(compute_dtype)
+
+    gate_logits = nn.dense(p["router"], xt, jnp.float32)  # router in fp32
+    probs = jax.nn.softmax(gate_logits, axis=-1)  # (T, E)
+    topv, topi = jax.lax.top_k(probs, k)  # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize
+
+    # load-balance aux loss (Switch/GShard): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # (E,)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # (T, k, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=1), axis=0) / k  # fraction routed
+    aux = E * jnp.sum(me * ce)
+
+    # capacity-bounded scatter dispatch (avoids the O(T*E*C) one-hot tensor
+    # of classic GShard; the expert compute is still a dense batched matmul)
+    C = max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+    C = min(C, T)
+    flat_e = topi.reshape(-1)  # (T*k,) expert id, token-major order
+    in_e = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(in_e, axis=0) * in_e - 1  # (T*k, E): queue pos or -1
+    pos = jnp.max(pos_in_e, axis=-1)  # (T*k,) position within expert queue
+    keep = pos < C
+    # destination row in the (E*C,) expert buffer; dropped slots -> trash row
+    idx = jnp.where(keep, flat_e * C + pos, E * C)  # (T*k,)
+    xs = jnp.repeat(xt, k, axis=0)  # (T*k, D)
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[idx].add(xs)
+    eout = _expert_ffn(p, buf[:E * C].reshape(E, C, D), cfg.ffn_kind,
+                       cfg.num_experts)
+    # gather back and combine with (renormalized) router weights
+    back = jnp.concatenate([eout.reshape(E * C, D),
+                            jnp.zeros((1, D), eout.dtype)])[idx]  # (T*k, D)
+    w = jnp.where(keep, topv.reshape(-1), 0.0).astype(xt.dtype)
+    out = jnp.sum((back * w[:, None]).reshape(T, k, D), axis=1)  # (T, D)
+
+    if cfg.num_shared_experts:
+        out = out + nn.ffn(p["shared"], xt, cfg.ffn_kind, compute_dtype)
+    out = nn.seq_sharded(out.reshape(B, S, D).astype(x.dtype))
+    return out, aux.astype(jnp.float32)

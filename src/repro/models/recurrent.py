@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The gated linear recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t) is
+elementwise-linear in h, so full sequences run as a ``lax.associative_scan``
+(log-depth — the TPU-friendly formulation); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import ModelConfig
+
+_C = 8.0  # RG-LRU temperature constant
+
+
+def recurrent_init(key, cfg: ModelConfig):
+    d, w, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) is in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "in_x": nn.dense_init(ks[1], d, w),
+        "in_gate": nn.dense_init(ks[2], d, w),
+        "conv_w": jax.random.normal(ks[3], (W, w), jnp.float32) / math.sqrt(W),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "gate_a": nn.dense_init(ks[4], w, w, bias=True),
+        "gate_x": nn.dense_init(ks[5], w, w, bias=True),
+        "lambda": lam,
+        "out": nn.dense_init(jax.random.fold_in(key, 7), w, d),
+    }
+
+
+def _rg_lru_coeffs(p, x):
+    """x: (..., w) -> (a, gated_x) both fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(nn.dense(p["gate_a"], xf))
+    i = jax.nn.sigmoid(nn.dense(p["gate_x"], xf))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, mult * (i * xf)
+
+
+def _causal_conv(x, conv_w, conv_b):
+    W = conv_w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * conv_w[i].astype(x.dtype)
+              for i in range(W))
+    return out + conv_b.astype(x.dtype)
+
+
+def recurrent_block(p, cfg: ModelConfig, x, compute_dtype=None,
+                    init_state=None, return_cache: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence RG-LRU block. x: (B, S, D) -> ((B, S, D), final_h)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(nn.dense(p["in_gate"], x, compute_dtype))
+    xb = nn.dense(p["in_x"], x, compute_dtype)
+    xb_raw = xb
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, b = _rg_lru_coeffs(p, xb)  # (B, S, w) fp32
+    if init_state is not None:
+        # fold the initial state in as an extra leading step
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([init_state.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_state is not None:
+        h = h[:, 1:]
+    h = h.astype(xb.dtype)
+    out = nn.dense(p["out"], h * gate, compute_dtype)
+    if return_cache:
+        W = cfg.conv_width
+        conv_tail = xb_raw[:, -(W - 1):, :]
+        pad = W - 1 - conv_tail.shape[1]
+        if pad > 0:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+    return out, h[:, -1].astype(jnp.float32)
+
+
+def init_recurrent_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def recurrent_decode_step(p, cfg: ModelConfig, x, cache, compute_dtype=None):
+    """One-token update. x: (B, 1, D)."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(nn.dense(p["in_gate"], x[:, 0], compute_dtype))
+    xb = nn.dense(p["in_x"], x[:, 0], compute_dtype)  # (B, w)
+    win = jnp.concatenate([cache["conv"].astype(xb.dtype), xb[:, None]], axis=1)
+    xb = (jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(xb.dtype))
+          + p["conv_b"].astype(xb.dtype))
+    a, b = _rg_lru_coeffs(p, xb)
+    h = a * cache["h"] + b
+    out = nn.dense(p["out"], h.astype(xb.dtype) * gate, compute_dtype)[:, None]
+    return out, {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,2 @@
+from .optimizers import (Optimizer, adam, adamw, clip_by_global_norm,  # noqa: F401
+                         constant, cosine_decay, linear_decay, sgd)

@@ -1,0 +1,125 @@
+"""Optimizers (functional, optax-style update signature) + LR schedules.
+
+The paper trains with SGD (momentum 0.9, decay 5e-4 / 1e-4) for the
+classification models and Adam (lr 0.01, decay 5e-4) for U-Net; AmoebaNet-D
+uses a linear LR decay — all provided here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_decay(lr: float, total_steps: int, end_factor: float = 0.0) -> Schedule:
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.asarray(lr * (1.0 + (end_factor - 1.0) * frac), jnp.float32)
+    return sched
+
+
+def cosine_decay(lr: float, total_steps: int, warmup: int = 0,
+                 min_factor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0) if warmup else 1.0
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_factor + (1 - min_factor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr * warm * cos, jnp.float32)
+    return sched
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    return lr if callable(lr) else constant(lr)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: Union[float, Schedule], momentum: float = 0.0,
+        weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD + momentum + (coupled) weight decay — the paper's classifier
+    optimizer (lr .01/.1, momentum .9, decay 5e-4/1e-4)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"mom": mom, "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr_t = sched(state["step"])
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                               state["mom"], grads)
+            eff = (jax.tree.map(lambda g, m: g + momentum * m, grads, mom)
+                   if nesterov else mom)
+        else:
+            mom, eff = None, grads
+        updates = jax.tree.map(lambda u: -lr_t * u.astype(jnp.float32), eff)
+        return updates, {"mom": mom, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         decoupled: bool = False) -> Optimizer:
+    """Adam / AdamW. The paper's U-Net uses Adam(lr .01, decay 5e-4)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(state["step"])
+        if weight_decay and not decoupled:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and decoupled:
+                u = u + weight_decay * p.astype(u.dtype)
+            return -lr_t * u.astype(jnp.float32)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay, decoupled=True)
+
+
+def clip_by_global_norm(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return optimizer.update(grads, state, params)
+
+    return Optimizer(optimizer.init, update)

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see ONE device — the 512-device XLA flag is
+# set only inside the dry-run subprocesses (see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

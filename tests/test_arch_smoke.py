@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: every assigned architecture, as a REDUCED
+variant of the same family, runs one forward and one MBS train step on CPU —
+asserting output shapes and the absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, optim
+from repro.core import mbs as M
+from repro.launch import steps
+from repro.models import encdec, transformer
+
+B, S = 4, 16
+
+
+def _batch(cfg, key):
+    i32 = jnp.int32
+    if cfg.is_encdec:
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
+            "tgt_tokens": jax.random.randint(key, (B, S // 4), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, S // 4), 0, cfg.vocab_size),
+        }
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.is_vlm:
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, 4, transformer.VISION_EMBED_DIM), jnp.float32)
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_and_mbs_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 6
+    assert cfg.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    init = encdec.init_params if cfg.is_encdec else transformer.init_params
+    params = init(cfg, key)
+    batch = _batch(cfg, key)
+
+    # forward
+    if cfg.is_encdec:
+        logits, aux = encdec.forward(params, cfg, batch["frames"],
+                                     batch["tgt_tokens"], dtype=jnp.float32)
+        assert logits.shape == (B, S // 4, cfg.vocab_size)
+    else:
+        logits, aux = transformer.forward(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            mrope_positions=batch.get("mrope_positions"), dtype=jnp.float32)
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one MBS train step (2 micro-batches)
+    loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32, remat=False)
+    opt = optim.sgd(1e-2, momentum=0.9)
+    step = M.make_mbs_train_step(loss_fn, opt, M.MBSConfig(B // 2))
+    split = jax.tree.map(
+        lambda x: x.reshape((2, B // 2) + x.shape[1:]) if x.shape[0] == B
+        else x.reshape(x.shape[:1] + (2, B // 2) + x.shape[2:]).transpose(1, 0, 2, 3),
+        batch)
+    p2, s2, metrics = jax.jit(step)(params, opt.init(params), split)
+    assert np.isfinite(float(metrics["loss"]))
+    assert not any(bool(jnp.isnan(l).any()) for l in jax.tree.leaves(p2))
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCHS])
+def test_decode_step_smoke(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    if cfg.is_encdec:
+        params = encdec.init_params(cfg, key)
+        frames = jax.random.normal(key, (B, 8, cfg.d_model), jnp.float32)
+        cache = encdec.init_decode_cache(params, cfg, frames, 16, jnp.float32)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        logits, cache = encdec.decode_step(params, cfg, tok, cache,
+                                           jnp.zeros((B,), jnp.int32),
+                                           dtype=jnp.float32)
+    else:
+        params = transformer.init_params(cfg, key)
+        cache = transformer.init_cache(cfg, B, 16, jnp.float32)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        logits, cache = transformer.decode_step(params, cfg, tok, cache,
+                                                jnp.zeros((B,), jnp.int32),
+                                                dtype=jnp.float32)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (L, d, H, K, ff, V) in spec.items():
+        c = configs.get(arch)
+        assert c.num_layers == L, arch
+        assert c.d_model == d, arch
+        assert c.num_heads == H, arch
+        assert c.num_kv_heads == K, arch
+        assert (c.d_ff == ff or c.moe_d_ff == ff), arch
+        assert c.vocab_size == V, arch
+    assert configs.get("grok-1-314b").num_experts == 8
+    assert configs.get("grok-1-314b").experts_per_token == 2
+    assert configs.get("mixtral-8x22b").num_experts == 8
+    assert configs.get("moonshot-v1-16b-a3b").num_experts == 64
+    assert configs.get("moonshot-v1-16b-a3b").experts_per_token == 6
+    assert configs.get("mamba2-780m").ssm_state == 128

@@ -1,0 +1,91 @@
+"""Serving correctness: prefill + decode reproduces the full-forward
+next-token logits exactly, for every block family (attention ring cache
+incl. sliding windows, SSD state, RG-LRU state, enc-dec cross cache)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import ModelConfig, encdec, transformer
+
+CASES = {
+    "dense-local-global": dict(
+        layer_pattern=("local", "global"), num_layers=2, sliding_window=8,
+        use_post_norm=True, attn_softcap=50.0, final_softcap=30.0),
+    "dense-gemma3-pattern": dict(
+        layer_pattern=("local",) * 5 + ("global",), num_layers=6,
+        sliding_window=8, use_qk_norm=True, rope_theta_global=1e6),
+    # ample capacity: capacity-bounded token dropping is batch-shape
+    # dependent, so exact prefill/forward equality needs no-drop routing
+    "moe": dict(layer_pattern=("global",), num_layers=2, num_experts=4,
+                experts_per_token=2, moe_d_ff=96, d_ff=0,
+                capacity_factor=8.0),
+    "ssm": dict(layer_pattern=("ssm",), num_layers=2, ssm_state=16,
+                ssm_head_dim=32, ssm_chunk=4, num_heads=0, num_kv_heads=0,
+                head_dim=0, d_ff=0),
+    "hybrid": dict(layer_pattern=("recurrent", "recurrent", "local"),
+                   num_layers=3, sliding_window=8, lru_width=64),
+}
+
+
+@pytest.mark.parametrize("name", list(CASES))
+def test_prefill_decode_matches_forward(name):
+    kw = dict(name=name, family="t", d_model=64, num_heads=4, num_kv_heads=2,
+              head_dim=16, d_ff=128, vocab_size=128)
+    kw.update(CASES[name])
+    cfg = ModelConfig(**kw)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 21), 0, 128)
+
+    logits_full, _ = transformer.forward(params, cfg, toks, dtype=jnp.float32,
+                                         remat=False)
+    # prefill 18 tokens (not window- or chunk-aligned), decode 3 more
+    last, cache = transformer.prefill(params, cfg, toks[:, :18], max_len=32,
+                                      dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(last - logits_full[:, 17]))) < 1e-4
+    for t in range(18, 21):
+        lg, cache = transformer.decode_step(
+            params, cfg, toks[:, t:t + 1], cache,
+            jnp.full((2,), t, jnp.int32), dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, t])))
+        assert err < 1e-4, (name, t, err)
+
+
+def test_encdec_decode_matches_forward():
+    cfg = ModelConfig(name="ed", family="audio", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                      vocab_size=128, ffn_kind="gelu", encoder_layers=2)
+    key = jax.random.PRNGKey(0)
+    params = encdec.init_params(cfg, key)
+    frames = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 64))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 128)
+    logits_full, _ = encdec.forward(params, cfg, frames, toks,
+                                    dtype=jnp.float32, remat=False)
+    cache = encdec.init_decode_cache(params, cfg, frames, 16, jnp.float32)
+    for t in range(8):
+        lg, cache = encdec.decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                       jnp.full((2,), t, jnp.int32),
+                                       dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, t])))
+        assert err < 1e-4, (t, err)
+
+
+def test_long_context_global_window_variant():
+    """gemma3-style long-context serving: global layers under a window cap
+    behave identically to full attention while the context fits the cap."""
+    base = dict(name="g", family="t", d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=128,
+                layer_pattern=("local", "global"), num_layers=2,
+                sliding_window=4)
+    cfg = ModelConfig(**base)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 128)
+    full, _ = transformer.forward(params, cfg, toks, dtype=jnp.float32,
+                                  remat=False)
+    capped, _ = transformer.forward(params, cfg, toks, dtype=jnp.float32,
+                                    remat=False, global_window=16)
+    assert float(jnp.max(jnp.abs(full - capped))) < 1e-5
+    # and with a cap < context, the outputs genuinely differ (window active)
+    capped2, _ = transformer.forward(params, cfg, toks, dtype=jnp.float32,
+                                     remat=False, global_window=4)
+    assert float(jnp.max(jnp.abs(full - capped2))) > 1e-4

@@ -1,0 +1,116 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import flash_attention as fa_mod
+from repro.kernels import cross_entropy as ce_mod
+from repro.kernels import grad_accum as ga_mod
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("S,hd,H,Hkv", [(128, 64, 4, 4), (256, 64, 4, 2),
+                                        (256, 32, 8, 1), (384, 64, 2, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(S, hd, H, Hkv, dtype):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    q = jax.random.normal(key, (B, H, S, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, hd), dtype)
+    out = fa_mod.flash_attention(q, k, v, block_q=128, block_k=128)
+    expect = ref.attention_ref(q, k, v)
+    assert out.dtype == dtype and out.shape == q.shape
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - expect.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (64, None),
+                                            (None, 30.0), (96, 50.0)])
+def test_flash_attention_window_softcap(window, softcap):
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 64))
+    out = fa_mod.flash_attention(q, k, v, window=window, softcap=softcap)
+    expect = ref.attention_ref(q, k, v, window=window, softcap=softcap)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+def test_flash_attention_unaligned_seq():
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (1, 2, 200, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 200, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 200, 64))
+    out = fa_mod.flash_attention(q, k, v, block_q=128, block_k=128)
+    expect = ref.attention_ref(q, k, v)
+    assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+def test_flash_attention_vjp_matches_ref():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32))
+    g1 = jax.grad(lambda a, b, c: ops.flash_attention(a, b, c, True, 32, None)
+                  .sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda a, b, c: ref.attention_ref(a, b, c, window=32)
+                  .sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert float(jnp.max(jnp.abs(a - b))) < 2e-5
+
+
+@pytest.mark.parametrize("T,V", [(64, 500), (100, 1000), (256, 2048),
+                                 (37, 777)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cross_entropy_shapes_dtypes(T, V, dtype):
+    key = jax.random.PRNGKey(0)
+    logits = (jax.random.normal(key, (T, V)) * 3).astype(dtype)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (T,), 0, V)
+    out = ce_mod.cross_entropy(logits, labels, block_t=64, block_v=256)
+    expect = ref.cross_entropy_ref(logits, labels)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert out.shape == (T,)
+    assert float(jnp.max(jnp.abs(out - expect))) < tol
+
+
+def test_cross_entropy_scale_is_mbs_normalization():
+    key = jax.random.PRNGKey(4)
+    logits = jax.random.normal(key, (32, 128))
+    labels = jax.random.randint(key, (32,), 0, 128)
+    n_s = 4
+    out = ce_mod.cross_entropy(logits, labels, scale=1.0 / n_s)
+    expect = ref.cross_entropy_ref(logits, labels) / n_s  # paper eq. (14)
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-6
+
+
+def test_cross_entropy_vjp():
+    key = jax.random.PRNGKey(5)
+    logits = jax.random.normal(key, (16, 64))
+    labels = jax.random.randint(key, (16,), 0, 64)
+    g1 = jax.grad(lambda l: ops.fused_cross_entropy(l, labels, 0.5).sum())(logits)
+    g2 = jax.grad(lambda l: (ref.cross_entropy_ref(l, labels) * 0.5).sum())(logits)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-6
+
+
+@pytest.mark.parametrize("N", [128, 4096, 5000, 17])
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_grad_accum(N, gdtype):
+    key = jax.random.PRNGKey(0)
+    acc = jax.random.normal(key, (N,), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (N,)).astype(gdtype)
+    out = ga_mod.grad_accum(acc, g, 0.125)
+    expect = ref.grad_accum_ref(acc, g, 0.125)
+    assert out.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-6
+
+
+def test_grad_accum_tree():
+    key = jax.random.PRNGKey(1)
+    acc = {"a": jnp.zeros((4, 8)), "b": jnp.ones((3,))}
+    g = {"a": jax.random.normal(key, (4, 8)), "b": jnp.full((3,), 2.0)}
+    out = ga_mod.grad_accum_tree(acc, g, 0.5)
+    assert float(jnp.max(jnp.abs(out["a"] - 0.5 * g["a"]))) < 1e-6
+    assert float(jnp.max(jnp.abs(out["b"] - 2.0))) < 1e-6

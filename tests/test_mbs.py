@@ -1,0 +1,125 @@
+"""The paper's core claim (eq. 15–17): MBS-accumulated, loss-normalized
+gradients equal the full-mini-batch gradients — tested numerically, plus
+Algorithm 1 behaviours (ragged tails, N_mu clamp)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses, mbs as M
+from repro import optim
+
+
+def tiny_params(key, din=8, dh=16, dout=4):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (din, dh)) * 0.3,
+            "w2": jax.random.normal(k2, (dh, dout)) * 0.3}
+
+
+def loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    l = losses.cross_entropy(logits, batch["y"],
+                             sample_weight=batch.get("sample_weight"),
+                             exact_denom=exact_denom)
+    return l, {"acc": losses.accuracy(logits, batch["y"])}
+
+
+def make_batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
+            "y": rng.integers(0, 4, n).astype(np.int32)}
+
+
+def ref_grads(params, batch):
+    return jax.value_and_grad(lambda p: loss_fn(p, batch)[0])(params)
+
+
+def max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("n_b,n_mu", [(12, 4), (16, 8), (16, 2), (9, 3)])
+def test_uniform_split_matches_full_batch(n_b, n_mu):
+    params = tiny_params(jax.random.PRNGKey(0))
+    batch = make_batch(n_b)
+    ref_loss, ref_g = ref_grads(params, batch)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, n_mu).items()}
+    g, loss = M.mbs_gradients(loss_fn, params, split, M.MBSConfig(n_mu, "paper"))
+    assert max_err(g, ref_g) < 1e-6
+    assert abs(float(loss) - float(ref_loss)) < 1e-6
+
+
+@pytest.mark.parametrize("n_b,n_mu", [(12, 5), (13, 4), (7, 3), (10, 7)])
+def test_ragged_split_exact_mode(n_b, n_mu):
+    params = tiny_params(jax.random.PRNGKey(1))
+    batch = make_batch(n_b, seed=1)
+    _, ref_g = ref_grads(params, batch)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, n_mu).items()}
+    g, _ = M.mbs_gradients(loss_fn, params, split, M.MBSConfig(n_mu, "exact"))
+    assert max_err(g, ref_g) < 1e-6
+
+
+def test_algorithm1_n_mu_clamp():
+    # Algorithm 1 lines 2-4: N_mu <- N_B when N_B < N_mu
+    assert M.num_micro_batches(4, 16) == 1
+    assert M.num_micro_batches(16, 4) == 4
+    assert M.num_micro_batches(17, 4) == 5  # round-up (line 5)
+    split = M.split_minibatch(make_batch(4), 16)
+    assert split["x"].shape == (1, 4, 8)
+
+
+def test_split_minibatch_is_partition():
+    # eq. (1)-(3): micro-batches partition the mini-batch
+    batch = make_batch(13)
+    split = M.split_minibatch(batch, 5)
+    n_s, n_mu = split["x"].shape[:2]
+    assert n_s == 3 and n_mu == 5
+    flat = split["x"].reshape(-1, 8)[split["sample_weight"].reshape(-1) > 0]
+    np.testing.assert_array_equal(flat, batch["x"])
+    assert split["sample_weight"].sum() == 13
+
+
+def test_compiled_step_matches_baseline_update():
+    """One optimizer step via MBS == one step via the no-MBS baseline."""
+    params = tiny_params(jax.random.PRNGKey(2))
+    batch = make_batch(16, seed=2)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+
+    base = M.make_baseline_train_step(loss_fn, opt)
+    p1, s1, m1 = jax.jit(base)(params, opt.init(params),
+                               {k: jnp.asarray(v) for k, v in batch.items()})
+
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, 4).items()}
+    step = M.make_mbs_train_step(loss_fn, opt, M.MBSConfig(4, "paper"))
+    p2, s2, m2 = jax.jit(step)(params, opt.init(params), split)
+
+    assert max_err(p1, p2) < 1e-6
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-6
+
+
+def test_without_normalization_grads_differ():
+    """eq. (13): raw accumulation (no 1/N_Smu) does NOT equal the mini-batch
+    gradient — the loss normalization is load-bearing."""
+    params = tiny_params(jax.random.PRNGKey(3))
+    batch = make_batch(12, seed=3)
+    _, ref_g = ref_grads(params, batch)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, 4).items()}
+    acc = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    for i in range(3):
+        mb = jax.tree.map(lambda x: x[i], split)
+        g = jax.grad(lambda p: loss_fn(p, mb)[0])(params)
+        acc = jax.tree.map(jnp.add, acc, g)
+    assert max_err(acc, ref_g) > 1e-3  # ~3x too large
+
+
+def test_metrics_averaged_over_microbatches():
+    params = tiny_params(jax.random.PRNGKey(4))
+    batch = make_batch(16, seed=4)
+    opt = optim.sgd(0.0)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, 4).items()}
+    step = M.make_mbs_train_step(loss_fn, opt, M.MBSConfig(4, "paper"))
+    _, _, metrics = jax.jit(step)(params, opt.init(params), split)
+    full_acc = loss_fn(params, {k: jnp.asarray(v) for k, v in batch.items()})[1]["acc"]
+    assert abs(float(metrics["acc"]) - float(full_acc)) < 1e-6

@@ -1,0 +1,77 @@
+"""Property-based tests (hypothesis) of the MBS invariants: for ANY batch
+size, micro-batch size, model shape and data, the loss-normalized
+accumulated gradient equals the mini-batch gradient (paper eq. 15–17)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses, mbs as M
+
+
+def _loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_b=st.integers(2, 24), n_mu=st.integers(1, 24),
+       din=st.integers(2, 10), dh=st.integers(2, 12),
+       seed=st.integers(0, 2 ** 16))
+def test_mbs_gradient_equivalence(n_b, n_mu, din, dh, seed):
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(0, 0.4, (din, dh)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(0, 0.4, (dh, 3)), jnp.float32)}
+    batch = {"x": rng.normal(size=(n_b, din)).astype(np.float32),
+             "y": rng.integers(0, 3, n_b).astype(np.int32)}
+    _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, n_mu).items()}
+    # exact mode is correct for every (n_b, n_mu) including ragged tails
+    g, _ = M.mbs_gradients(_loss_fn, params, split,
+                           M.MBSConfig(n_mu, "exact"))
+    assert _max_err(g, ref) < 2e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_b=st.integers(2, 24), n_mu=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16))
+def test_paper_mode_equivalence_when_uniform(n_b, n_mu, seed):
+    """Algorithm 1 (paper mode) is exact whenever the split is uniform —
+    i.e. the paper's own experimental setting."""
+    n_mu_eff = min(n_mu, n_b)
+    if n_b % n_mu_eff:
+        n_b = (n_b // n_mu_eff) * n_mu_eff  # make it uniform
+    rng = np.random.default_rng(seed)
+    params = {"w1": jnp.asarray(rng.normal(0, 0.4, (6, 8)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(0, 0.4, (8, 3)), jnp.float32)}
+    batch = {"x": rng.normal(size=(n_b, 6)).astype(np.float32),
+             "y": rng.integers(0, 3, n_b).astype(np.int32)}
+    _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, n_mu).items()}
+    g, _ = M.mbs_gradients(_loss_fn, params, split, M.MBSConfig(n_mu, "paper"))
+    assert _max_err(g, ref) < 2e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_b=st.integers(1, 40), n_mu=st.integers(1, 40))
+def test_split_partition_invariants(n_b, n_mu):
+    """eq. (1)-(3): the micro-batches are a partition; sizes obey
+    N_mu <= N_B and N_Smu = ceil(N_B / N_mu)."""
+    rng = np.random.default_rng(0)
+    batch = {"x": rng.normal(size=(n_b, 3)).astype(np.float32)}
+    split = M.split_minibatch(batch, n_mu)
+    n_s, mu = split["x"].shape[:2]
+    assert mu <= n_b  # eq. (3) + Algorithm 1 clamp
+    assert n_s == -(-n_b // mu)
+    w = split["sample_weight"].reshape(-1)
+    assert w.sum() == n_b
+    flat = split["x"].reshape(-1, 3)[w > 0]
+    np.testing.assert_array_equal(flat, batch["x"])

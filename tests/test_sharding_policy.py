@@ -1,0 +1,75 @@
+"""Unit tests of the divisibility-aware sharding policy (pure logic — the
+production-mesh integration runs in tests/test_dryrun_reduced.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib, sharding
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_param_specs_tp_and_fsdp():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {
+        "ffn": {"w_up": jax.ShapeDtypeStruct((3584, 14336), jnp.float32)},
+        "norm": {"scale": jax.ShapeDtypeStruct((3584,), jnp.float32)},
+    }
+    specs = sharding.param_specs(params, mesh)
+    assert specs["ffn"]["w_up"] == P("data", "model")
+    assert specs["norm"]["scale"] == P(None)  # 1-D: replicated
+
+
+def test_param_specs_skips_stacked_dim():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"blocks": ({"w": jax.ShapeDtypeStruct((64, 128, 256), jnp.float32)},)}
+    specs = sharding.param_specs(params, mesh)
+    # leading period dim (64) must NOT be sharded even though divisible
+    assert specs["blocks"][0]["w"] == P(None, "data", "model")
+
+
+def test_param_specs_nondivisible_replicated():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"w": jax.ShapeDtypeStruct((10, 7), jnp.float32)}
+    assert sharding.param_specs(params, mesh)["w"] == P(None, None)
+
+
+def test_embed_table_vocab_sharded():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"embed": {"table": jax.ShapeDtypeStruct((256000, 3584), jnp.float32)}}
+    assert sharding.param_specs(params, mesh)["embed"]["table"] == \
+        P("model", "data")
+    # non-divisible vocab falls back to the generic rule
+    params = {"embed": {"table": jax.ShapeDtypeStruct((256206, 1024), jnp.float32)}}
+    spec = sharding.param_specs(params, mesh)["embed"]["table"]
+    # 256206 not divisible by 16 -> vocab dim replicated, d_model TP-sharded
+    assert spec == P(None, "model")
+
+
+def test_fsdp_over_pod():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    params = {"w": jax.ShapeDtypeStruct((8, 6144, 2048), jnp.float32)}
+    spec = sharding.param_specs(params, mesh, fsdp_over_pod=True)["w"]
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_batch_specs():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 32, 4096), jnp.int32),
+             "small": jax.ShapeDtypeStruct((8, 3), jnp.float32)}
+    specs = sharding.batch_specs(batch, mesh, batch_dim=1)
+    assert specs["tokens"] == P(None, "data", None)
+    assert specs["small"] == P(None, None)  # 3 not divisible by 16
+
+
+def test_cache_specs_prefers_largest_dim():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cache = {"k": jax.ShapeDtypeStruct((21, 128, 32768, 8, 256), jnp.bfloat16)}
+    specs = sharding.cache_specs(cache, mesh, stacked=True)
+    # window dim (32768) sharded on model, batch (128) on data
+    assert specs["k"] == P(None, "data", "model", None, None)
