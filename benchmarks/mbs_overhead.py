@@ -1,7 +1,8 @@
 """MBS time overhead on the transformer stack (paper §4.3.3): step time at
 a fixed global batch as a function of the number of micro-batches. The
 paper reports 0.3–5.1% per-epoch overhead; here we measure the compiled
-step directly."""
+engine step directly, for both the plain-scan and the Pallas fused-
+accumulate executors."""
 from __future__ import annotations
 
 import time
@@ -9,13 +10,22 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs, optim
-from repro.core import mbs as M
+from repro import configs, engine, optim
 from repro.data import LMDataset
 from repro.launch import steps
 from repro.models import transformer
 
 from .common import emit
+
+
+def _time_step(step, params, opt_state, split, iters: int) -> float:
+    p2, s2, m = step(params, opt_state, split)  # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        p2, s2, m = step(params, opt_state, split)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / iters
 
 
 def main(quick: bool = True):
@@ -26,27 +36,22 @@ def main(quick: bool = True):
     ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
     global_batch = 16
     mini = ds.batch(global_batch, 0)
+    iters = 3 if quick else 10
     rows = []
-    base_t = None
-    for n_micro in (1, 2, 4, 8):
-        micro = global_batch // n_micro
-        step = jax.jit(M.make_mbs_train_step(loss_fn, opt, M.MBSConfig(micro)))
-        split = {k: jnp.asarray(v)
-                 for k, v in M.split_minibatch(mini, micro).items()}
-        s = opt.init(params)
-        p2, s2, m = step(params, s, split)  # compile
-        jax.block_until_ready(m["loss"])
-        iters = 3 if quick else 10
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            p2, s2, m = step(params, s, split)
-        jax.block_until_ready(m["loss"])
-        dt = (time.perf_counter() - t0) / iters
-        if n_micro == 1:
-            base_t = dt
-        ov = (dt / base_t - 1) * 100
-        rows.append(emit(f"mbs_overhead/n_micro{n_micro}", dt * 1e6,
-                         f"overhead={ov:.1f}%"))
+    for name in ("compiled", "fused"):
+        base_t = None
+        for n_micro in (1, 2, 4, 8):
+            plan = engine.plan_mbs(global_batch, num_microbatches=n_micro)
+            ex = engine.get_executor(name)(loss_fn, opt, plan)
+            step = jax.jit(ex.make_train_step())
+            split = plan.device_split(mini)
+            s = opt.init(params)
+            dt = _time_step(step, params, s, split, iters)
+            if n_micro == 1:
+                base_t = dt
+            ov = (dt / base_t - 1) * 100
+            rows.append(emit(f"mbs_overhead/{name}/n_micro{n_micro}",
+                             dt * 1e6, f"overhead={ov:.1f}%"))
     return rows
 
 

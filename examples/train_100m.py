@@ -13,8 +13,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint, optim
-from repro.core import mbs, memory_model
+from repro import checkpoint, engine, optim
+from repro.core import memory_model
 from repro.data import LMDataset
 from repro.launch import steps as steps_lib
 from repro.models import transformer
@@ -43,6 +43,8 @@ def main():
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--executor", choices=sorted(engine.EXECUTORS),
+                    default="compiled")
     args = ap.parse_args()
 
     cfg = model_100m() if args.full else model_small()
@@ -51,21 +53,20 @@ def main():
     print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
           f"seq {seq}, mini-batch {args.mini_batch}")
 
-    # auto micro-batch from the memory model (replaces the paper's
-    # experimentally-determined size)
-    micro = memory_model.suggest_micro_batch_size(
-        cfg, seq, args.mini_batch,
-        budget_bytes=memory_model.V5E_HBM_BYTES) or 1
-    micro = min(micro, 8 if not args.full else micro)
-    print(f"memory model suggests micro-batch {micro} "
-          f"({mbs.num_micro_batches(args.mini_batch, micro)} micro-batches)")
+    # engine planner: auto micro-batch from the memory model (replaces the
+    # paper's experimentally-determined size)
+    plan = engine.plan_mbs(args.mini_batch, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=memory_model.V5E_HBM_BYTES)
+    if not args.full and plan.micro_batch_size > 8:
+        plan = engine.plan_mbs(args.mini_batch, micro_batch_size=8)
+    print(plan.describe())
 
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     loss_fn = steps_lib.make_loss_fn(cfg, dtype=jnp.float32,
                                      remat=bool(args.full))
     opt = optim.sgd(optim.cosine_decay(0.3, num_steps, warmup=10),
                     momentum=0.9, weight_decay=1e-4)
-    step = jax.jit(mbs.make_mbs_train_step(loss_fn, opt, mbs.MBSConfig(micro)))
+    executor = engine.get_executor(args.executor)(loss_fn, opt, plan)
     opt_state = opt.init(params)
 
     start = 0
@@ -77,9 +78,8 @@ def main():
     ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
     t0 = time.perf_counter()
     for i in range(start, num_steps):
-        split = {k: jnp.asarray(v) for k, v in mbs.split_minibatch(
-            ds.batch(args.mini_batch, i), micro).items()}
-        params, opt_state, m = step(params, opt_state, split)
+        params, opt_state, m = executor.step(params, opt_state,
+                                             ds.batch(args.mini_batch, i))
         if i % 10 == 0 or i == num_steps - 1:
             print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
                   f"|g| {float(m['grad_norm']):.3f}  "

@@ -1,86 +1,28 @@
-"""Micro-Batch Streaming (MBS) — the paper's core technique.
+"""Micro-Batch Streaming (MBS) — backward-compatible facade.
 
-A mini-batch that does not fit in device memory is split into ``N_Sμ``
-micro-batches (paper §3.2, eq. 1–3); each micro-batch runs forward+backward
-with its loss *normalized by 1/N_Sμ* (paper §3.4, eq. 14 / Algorithm 1
-line 11); gradients are accumulated in the model-parameter space (paper
-Fig. 2 step ❹) and the optimizer applies a single update per mini-batch
-(step ❺). Eq. (15)–(17) of the paper prove this equals the full
-mini-batch gradient — our property tests assert that equality numerically.
-
-Two normalization modes:
-  * ``"paper"``  — Algorithm 1 verbatim: contribution = mean_micro_loss / N_Sμ.
-                   Exact when every micro-batch has the same number of valid
-                   samples (the paper's setting).
-  * ``"exact"``  — contribution = sum(valid per-sample losses) / N_B_valid.
-                   Exact for ragged tails (N_B % N_μ != 0) too.
-
-TPU adaptation (see DESIGN.md): inside a compiled step the "stream" is a
-``lax.scan`` over the leading micro-batch axis — XLA keeps one micro-batch
-of activations live at a time; the fp32 accumulator is sharded like the
-parameters so accumulation is communication-free, and the cross-data-parallel
-gradient reduction happens once per mini-batch.
+The paper's core technique — split a mini-batch into N_Sμ micro-batches
+(§3.2, eq. 1–3), normalize each micro loss by 1/N_Sμ (§3.4, eq. 14 /
+Algorithm 1 line 11), accumulate gradients (Fig. 2 step ❹) and apply one
+optimizer update per mini-batch (step ❺) — now lives in the unified
+execution engine (``repro.engine``): one planner (:func:`plan_mbs`) plus
+pluggable executors (compiled scan / streaming / Pallas-fused) sharing a
+single normalization–accumulation–update core. This module re-exports the
+legacy surface; new code should import from ``repro.engine`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclasses.dataclass(frozen=True)
-class MBSConfig:
-    micro_batch_size: int
-    normalization: str = "paper"  # "paper" | "exact"
-    accum_dtype: Any = jnp.float32
-    remat_micro_step: bool = False  # extra jax.checkpoint around each micro step
-    unroll: int = 1  # scan unroll factor
+from ..engine import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
+                      plan_mbs, split_minibatch)
+from ..engine import (CompiledScanExecutor, accumulate_gradients,  # noqa: F401
+                      make_baseline_train_step)
 
 
-def num_micro_batches(mini_batch_size: int, micro_batch_size: int) -> int:
-    """Algorithm 1 lines 1–5: N_μ ← min(N_μ, N_B); N_Sμ = ceil(N_B / N_μ)."""
-    micro = min(micro_batch_size, mini_batch_size)
-    return int(math.ceil(mini_batch_size / micro))
-
-
-def split_minibatch(batch: Dict[str, np.ndarray], micro_batch_size: int
-                    ) -> Dict[str, np.ndarray]:
-    """Host-side split (paper Fig. 2 step ❶): reshape every leaf from
-    ``(N_B, ...)`` to ``(N_Sμ, N_μ, ...)``, zero-padding the ragged tail and
-    emitting a ``sample_weight`` mask (1 = real sample, 0 = padding)."""
-    leaves = jax.tree.leaves(batch)
-    n_b = leaves[0].shape[0]
-    n_mu = min(micro_batch_size, n_b)
-    n_s = num_micro_batches(n_b, n_mu)
-    pad = n_s * n_mu - n_b
-
-    def split(x):
-        if pad:
-            x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
-        return x.reshape(n_s, n_mu, *x.shape[1:])
-
-    out = {k: split(np.asarray(v)) for k, v in batch.items()}
-    w = np.ones((n_b,), np.float32)
-    if pad:
-        w = np.concatenate([w, np.zeros((pad,), np.float32)])
-    out["sample_weight"] = w.reshape(n_s, n_mu)
-    return out
-
-
-def _zeros_like_accum(params, dtype):
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
-
-
-def make_mbs_train_step(
-    loss_fn: Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]],
-    optimizer,
-    mbs: MBSConfig,
-) -> Callable:
-    """Build the compiled MBS training step.
+def make_mbs_train_step(loss_fn: Callable, optimizer, mbs: MBSConfig
+                        ) -> Callable:
+    """Legacy builder for the compiled MBS training step — equivalent to
+    ``CompiledScanExecutor(loss_fn, optimizer, mbs).make_train_step()``.
 
     ``loss_fn(params, micro_batch, exact_denom=None) -> (loss, metrics)``
     must return the mean per-sample loss of the micro-batch (honouring
@@ -91,101 +33,11 @@ def make_mbs_train_step(
     (params, opt_state, metrics)`` where every leaf of ``micro_batches`` has
     leading shape ``(N_Sμ, N_μ, ...)``.
     """
-
-    def train_step(params, opt_state, micro_batches):
-        n_s = jax.tree.leaves(micro_batches)[0].shape[0]
-        if mbs.normalization == "exact":
-            w = micro_batches.get("sample_weight")
-            total_valid = (jnp.sum(w) if w is not None
-                           else jnp.asarray(float(n_s) * jax.tree.leaves(micro_batches)[0].shape[1]))
-        accum0 = _zeros_like_accum(params, mbs.accum_dtype)
-
-        def micro_step(carry, mb):
-            acc, loss_sum, metric_sum = carry
-
-            def normalized_loss(p):
-                if mbs.normalization == "paper":
-                    loss, metrics = loss_fn(p, mb)
-                    return loss / n_s, metrics  # Algorithm 1 line 11
-                loss, metrics = loss_fn(p, mb, exact_denom=total_valid)
-                return loss, metrics
-
-            grad_fn = jax.value_and_grad(normalized_loss, has_aux=True)
-            if mbs.remat_micro_step:
-                grad_fn = jax.checkpoint(grad_fn)
-            (lnorm, metrics), grads = grad_fn(params)
-            acc = jax.tree.map(
-                lambda a, g: a + g.astype(mbs.accum_dtype), acc, grads)
-            metric_sum = jax.tree.map(lambda s, m: s + m / n_s, metric_sum, metrics)
-            return (acc, loss_sum + lnorm, metric_sum), None
-
-        # probe metrics structure (zeros) for the scan carry
-        mb0 = jax.tree.map(lambda x: x[0], micro_batches)
-        metrics_shape = jax.eval_shape(
-            lambda p: loss_fn(p, mb0)[1] if mbs.normalization == "paper"
-            else loss_fn(p, mb0, exact_denom=1.0)[1], params)
-        metrics0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), metrics_shape)
-
-        (grads, loss, metric_sum), _ = jax.lax.scan(
-            micro_step, (accum0, jnp.zeros((), jnp.float32), metrics0),
-            micro_batches, unroll=mbs.unroll)
-
-        updates, new_opt_state = optimizer.update(grads, opt_state, params)
-        new_params = jax.tree.map(
-            lambda p, u: (p + u.astype(p.dtype)), params, updates)
-        out_metrics = dict(metric_sum)
-        out_metrics["loss"] = loss  # Σ normalized micro losses == mini-batch mean
-        out_metrics["grad_norm"] = jnp.sqrt(sum(
-            jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree.leaves(grads)))
-        return new_params, new_opt_state, out_metrics
-
-    return train_step
-
-
-def make_baseline_train_step(loss_fn, optimizer) -> Callable:
-    """The no-MBS reference: one forward/backward over the whole mini-batch
-    (what the paper's "w/o MBS" columns do — and what fails beyond the
-    memory limit)."""
-
-    def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        updates, new_opt_state = optimizer.update(grads, opt_state, params)
-        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
-                                  params, updates)
-        out = dict(metrics)
-        out["loss"] = loss
-        out["grad_norm"] = jnp.sqrt(sum(
-            jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree.leaves(grads)))
-        return new_params, new_opt_state, out
-
-    return train_step
+    return CompiledScanExecutor(loss_fn, optimizer, mbs).make_train_step()
 
 
 def mbs_gradients(loss_fn, params, micro_batches, mbs: MBSConfig):
     """Accumulated, normalized MBS gradients only (no optimizer) — the
     quantity eq. (15)–(17) proves equal to the mini-batch gradient. Used by
     the equivalence tests and benchmarks."""
-    n_s = jax.tree.leaves(micro_batches)[0].shape[0]
-    if mbs.normalization == "exact":
-        w = micro_batches.get("sample_weight")
-        total_valid = (jnp.sum(w) if w is not None else
-                       jnp.asarray(float(n_s * jax.tree.leaves(micro_batches)[0].shape[1])))
-    acc = _zeros_like_accum(params, mbs.accum_dtype)
-    loss_sum = jnp.zeros((), jnp.float32)
-    for i in range(n_s):
-        mb = jax.tree.map(lambda x: x[i], micro_batches)
-
-        def normalized_loss(p):
-            if mbs.normalization == "paper":
-                loss, _ = loss_fn(p, mb)
-                return loss / n_s
-            loss, _ = loss_fn(p, mb, exact_denom=total_valid)
-            return loss
-
-        lnorm, grads = jax.value_and_grad(normalized_loss)(params)
-        acc = jax.tree.map(lambda a, g: a + g.astype(mbs.accum_dtype), acc, grads)
-        loss_sum = loss_sum + lnorm
-    return acc, loss_sum
+    return accumulate_gradients(loss_fn, params, micro_batches, mbs)

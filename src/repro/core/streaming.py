@@ -1,89 +1,33 @@
 """Stream-based pipeline (paper §3.1) — host→device micro-batch streaming.
 
-The paper's MBS streams micro-batches from CPU memory to the GPU
-sequentially. The TPU-native analogue (DESIGN.md §Hardware adaptation) is:
+The executor itself now lives in the unified engine
+(``repro.engine.executors.StreamingExecutor``); this module keeps the
+legacy name plus the host-side prefetch iterator. See DESIGN.md
+§Hardware adaptation for how the paper's CUDA-stream pipeline maps onto
+the TPU/JAX stack:
 
   * compiled mode (production): the already-split ``(N_Sμ, N_μ, ...)`` batch
     is consumed by a ``lax.scan`` inside the jitted train step — XLA keeps
     one micro-batch of activations live; used by ``launch/train.py``.
 
-  * streaming mode (this module): the literal paper pipeline — each
-    micro-batch is transferred with ``jax.device_put`` while the previous
-    one computes (double buffering ≈ CUDA-stream overlap; on TPU,
-    ``device_put`` is async so the transfer overlaps compute), and a jitted
-    per-micro-batch gradient function accumulates into the on-device
-    accumulator (paper Fig. 2 steps ❷–❹). Memory never exceeds
-    model + accumulator + 2 micro-batches.
+  * streaming mode: the literal paper pipeline — each micro-batch is
+    transferred with ``jax.device_put`` while the previous one computes
+    (double buffering ≈ CUDA-stream overlap; on TPU, ``device_put`` is
+    async so the transfer overlaps compute), and a jitted per-micro-batch
+    gradient function accumulates into the on-device accumulator (paper
+    Fig. 2 steps ❷–❹). Memory never exceeds model + accumulator +
+    2 micro-batches.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+from typing import Iterator
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..engine.executors import StreamingExecutor
 
-from . import mbs as mbs_lib
-
-
-class MBSStreamExecutor:
-    """Eager micro-batch streaming executor (the paper's Fig. 1 pipeline)."""
-
-    def __init__(self, loss_fn, optimizer, mbs: mbs_lib.MBSConfig,
-                 device: Optional[Any] = None):
-        self.loss_fn = loss_fn
-        self.optimizer = optimizer
-        self.mbs = mbs
-        self.device = device or jax.devices()[0]
-
-        @jax.jit
-        def _micro_grad(params, mb, inv_n_s):
-            def normalized(p):
-                loss, metrics = loss_fn(p, mb)
-                return loss * inv_n_s, metrics  # Algorithm 1 line 11
-
-            (lnorm, metrics), g = jax.value_and_grad(normalized, has_aux=True)(params)
-            return lnorm, g, metrics
-
-        @jax.jit
-        def _accumulate(acc, g):  # paper step ❹
-            return jax.tree.map(lambda a, x: a + x.astype(a.dtype), acc, g)
-
-        @jax.jit
-        def _update(params, opt_state, acc):  # paper step ❺
-            updates, new_opt = optimizer.update(acc, opt_state, params)
-            new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
-                                      params, updates)
-            return new_params, new_opt
-
-        self._micro_grad = _micro_grad
-        self._accumulate = _accumulate
-        self._update = _update
-
-    def step(self, params, opt_state, minibatch: Dict[str, np.ndarray]
-             ) -> Tuple[Any, Any, Dict[str, float]]:
-        """One mini-batch update via sequential micro-batch streaming."""
-        split = mbs_lib.split_minibatch(minibatch, self.mbs.micro_batch_size)
-        n_s = jax.tree.leaves(split)[0].shape[0]
-        inv = jnp.asarray(1.0 / n_s, jnp.float32)
-        acc = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, self.mbs.accum_dtype), params)
-        loss = 0.0
-
-        # double buffer: issue transfer of micro-batch i+1 while i computes
-        def put(i):
-            return jax.device_put(
-                jax.tree.map(lambda x: x[i], split), self.device)
-
-        nxt = put(0)
-        for i in range(n_s):
-            cur, nxt = nxt, (put(i + 1) if i + 1 < n_s else None)
-            lnorm, g, _ = self._micro_grad(params, cur, inv)
-            acc = self._accumulate(acc, g)
-            loss += float(lnorm)
-        params, opt_state = self._update(params, opt_state, acc)
-        return params, opt_state, {"loss": loss}
+# Legacy name: the eager micro-batch streaming executor (paper Fig. 1).
+# Unlike the pre-engine implementation, it honors the full MBS policy —
+# normalization="exact" and accum_dtype included.
+MBSStreamExecutor = StreamingExecutor
 
 
 def prefetch_iterator(it: Iterator, size: int = 2) -> Iterator:

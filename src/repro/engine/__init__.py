@@ -1,0 +1,19 @@
+"""Unified MBS execution engine: one planner + pluggable executors.
+
+Layer 1 — planner (``plan.py``): :func:`plan_mbs` turns (mini-batch size,
+optional pins, model config, HBM budget) into an :class:`MBSPlan` — micro
+size N_μ, N_Sμ, ragged-tail padding + sample-weight mask, normalization
+mode, accumulator dtype. When the micro-batch size is not pinned it is
+derived from the analytic memory model (``core/memory_model.py``) instead
+of the paper's experimental search (§4.3.2).
+
+Layer 2 — executors (``executors.py``): compiled scan / eager streaming /
+Pallas-fused accumulate, all sharing one normalization–accumulation–update
+core (``exec_core.py``). See DESIGN.md §Engine architecture.
+"""
+from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
+                   plan_mbs, split_minibatch)
+from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
+                        FusedAccumExecutor, StreamingExecutor,
+                        accumulate_gradients, get_executor,
+                        make_baseline_train_step)

@@ -1,0 +1,122 @@
+"""Shared normalization / accumulation / update core.
+
+Every executor (compiled scan, eager streaming, Pallas-fused) expresses the
+paper's Algorithm 1 through these helpers, so the numerics live in exactly
+one place:
+
+  * loss normalization (§3.4, eq. 14): either folded into the micro loss
+    before differentiation ("scaled" form — loss/N_Sμ for "paper",
+    Σ/N_B_valid for "exact"), or deferred to the accumulate ("raw" form —
+    the gradient of the unscaled micro loss is accumulated with the scale
+    fused in, paper Fig. 2 step ❹, which is what the Pallas kernel does);
+  * gradient accumulation in ``accum_dtype`` (fp32 by default, even when
+    micro gradients arrive in bf16);
+  * the single optimizer update per mini-batch (step ❺) + shared metrics.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.grad_accum import grad_accum_tree
+
+
+def denominators(micro_batches) -> Tuple[int, jnp.ndarray]:
+    """(N_Sμ, N_B_valid) of a split batch. N_B_valid comes from the
+    sample-weight mask when present (ragged tails), else N_Sμ · N_μ."""
+    leaves = jax.tree.leaves(micro_batches)
+    n_s = leaves[0].shape[0]
+    w = micro_batches.get("sample_weight") if hasattr(micro_batches, "get") else None
+    total_valid = (jnp.sum(w) if w is not None
+                   else jnp.asarray(float(n_s) * leaves[0].shape[1]))
+    return n_s, total_valid
+
+
+def init_accum(params, dtype):
+    """Zero gradient accumulator, shaped like params, in ``accum_dtype``."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def micro_loss_fn(loss_fn: Callable, normalization: str, n_s, total_valid,
+                  mb, *, defer_scale: bool = False) -> Callable:
+    """The per-micro-batch loss to differentiate.
+
+    Exact-mode contract for ``loss_fn``: with ``exact_denom`` set, micro
+    contributions must SUM to the mini-batch loss — per-sample losses are
+    divided by ``exact_denom``, and any additive (non-per-sample)
+    regularizer must carry the micro-batch's valid-sample share
+    ``n_valid/exact_denom`` (see ``launch/steps.make_loss_fn``'s MoE
+    router aux term). Otherwise executors would weight it inconsistently.
+
+    ``defer_scale=False``: normalization folded in (Algorithm 1 line 11 for
+    "paper"; exact denominator for "exact") — the gradient is accumulated
+    with a plain add.
+
+    ``defer_scale=True``: the raw micro loss ("paper": micro mean; "exact":
+    Σ valid per-sample losses) — the 1/N_Sμ (resp. 1/N_B_valid) scale is
+    applied later, fused into the accumulate (see :func:`deferred_scale`).
+    """
+    def f(p):
+        if normalization == "paper":
+            loss, metrics = loss_fn(p, mb)
+            return (loss, metrics) if defer_scale else (loss / n_s, metrics)
+        if normalization != "exact":
+            raise ValueError(f"unknown normalization {normalization!r}")
+        denom = 1.0 if defer_scale else total_valid
+        loss, metrics = loss_fn(p, mb, exact_denom=denom)
+        return loss, metrics
+    return f
+
+
+def deferred_scale(normalization: str, n_s, total_valid):
+    """The scale fused into the accumulate when the micro loss was raw."""
+    if normalization == "paper":
+        return 1.0 / n_s
+    return 1.0 / total_valid
+
+
+def accumulate(acc, grads, *, scale=None, fused: bool = False,
+               interpret: Optional[bool] = None, block: Optional[int] = None):
+    """acc ← acc + [scale ·] grads, in the accumulator's dtype.
+
+    ``fused=True`` routes through the Pallas kernel
+    (``kernels/grad_accum.py``): scaled accumulate with in-place aliasing on
+    the fp32 buffer, so the scaled gradient is never materialized."""
+    if fused:
+        kw = {"interpret": interpret}
+        if block is not None:
+            kw["block"] = block
+        return grad_accum_tree(acc, grads, 1.0 if scale is None else scale, **kw)
+    if scale is None:
+        return jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+    return jax.tree.map(lambda a, g: a + (g * scale).astype(a.dtype), acc, grads)
+
+
+def metrics_zeros(loss_fn: Callable, normalization: str, params, mb0):
+    """Zero-valued metrics pytree (via eval_shape — no FLOPs) used to seed
+    the accumulation carry."""
+    probe = micro_loss_fn(loss_fn, normalization, 1, jnp.asarray(1.0), mb0)
+    shapes = jax.eval_shape(lambda p: probe(p)[1], params)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def apply_update(optimizer, grads, opt_state, params):
+    """Paper Fig. 2 step ❺: one optimizer update per mini-batch."""
+    updates, new_opt_state = optimizer.update(grads, opt_state, params)
+    new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              params, updates)
+    return new_params, new_opt_state
+
+
+def global_grad_norm(grads) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def finalize_metrics(metric_sum: Dict[str, Any], loss, grads) -> Dict[str, Any]:
+    out = dict(metric_sum)
+    out["loss"] = loss  # Σ normalized micro losses == mini-batch mean loss
+    out["grad_norm"] = global_grad_norm(grads)
+    return out

@@ -1,0 +1,283 @@
+"""Pluggable MBS executors behind one interface.
+
+All three run the same Algorithm 1 through the shared core in
+``exec_core.py`` — only the execution strategy differs:
+
+  * :class:`CompiledScanExecutor` — the TPU-native production path: a
+    ``lax.scan`` over the micro-batch axis inside one jitted step; XLA keeps
+    one micro-batch of activations live (DESIGN.md §Hardware adaptation).
+  * :class:`StreamingExecutor` — the paper's literal Fig. 1 pipeline:
+    host→device transfer of micro-batch i+1 overlaps compute of i (double
+    buffering), one jitted gradient per micro-batch, eager accumulate.
+  * :class:`FusedAccumExecutor` — the compiled scan with accumulation
+    routed through the Pallas kernel ``kernels/grad_accum.py``: the 1/N_Sμ
+    loss-normalization scale is fused into the accumulate (paper Fig. 2
+    step ❹ + eq. 14) with in-place aliasing on the fp32 accumulator.
+
+New strategies (async multi-device, serving) implement the same
+:class:`Executor` surface and register in :data:`EXECUTORS`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, Type, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import exec_core
+from .plan import MBSConfig, MBSPlan
+
+
+def _as_plan(plan) -> MBSPlan:
+    if isinstance(plan, MBSConfig):
+        return MBSPlan.from_config(plan)
+    if isinstance(plan, MBSPlan):
+        return plan
+    raise TypeError(f"expected MBSPlan or MBSConfig, got {type(plan)!r}")
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """One mini-batch-update strategy. ``step`` is the host-level entry
+    (splits the raw mini-batch per the plan); compiled strategies also
+    expose ``make_train_step`` — a pure function over pre-split batches
+    that the launcher jits with shardings/donation; ``gradients`` returns
+    the accumulated normalized gradients only (eq. 15–17's quantity)."""
+    name: str
+    plan: MBSPlan
+
+    def make_train_step(self) -> Callable: ...
+
+    def step(self, params, opt_state, minibatch: Dict[str, np.ndarray]
+             ) -> Tuple[Any, Any, Dict[str, Any]]: ...
+
+    def gradients(self, params, micro_batches) -> Tuple[Any, jnp.ndarray]: ...
+
+
+def _scan_accumulate(loss_fn, plan: MBSPlan, fused: bool, params,
+                     micro_batches, interpret=None, block=None):
+    """Shared compiled core: scan over the micro-batch axis, accumulating
+    normalized gradients + loss + metrics. Returns (grads, loss, metric_sum)."""
+    n_s, total_valid = exec_core.denominators(micro_batches)
+    accum0 = exec_core.init_accum(params, plan.accum_dtype)
+    scale = (exec_core.deferred_scale(plan.normalization, n_s, total_valid)
+             if fused else None)
+    mb0 = jax.tree.map(lambda x: x[0], micro_batches)
+    metrics0 = exec_core.metrics_zeros(loss_fn, plan.normalization, params, mb0)
+
+    def micro_step(carry, mb):
+        acc, loss_sum, metric_sum = carry
+        lfn = exec_core.micro_loss_fn(loss_fn, plan.normalization, n_s,
+                                      total_valid, mb, defer_scale=fused)
+        grad_fn = jax.value_and_grad(lfn, has_aux=True)
+        if plan.remat_micro_step:
+            grad_fn = jax.checkpoint(grad_fn)
+        (l, metrics), grads = grad_fn(params)
+        acc = exec_core.accumulate(acc, grads, scale=scale, fused=fused,
+                                   interpret=interpret, block=block)
+        metric_sum = jax.tree.map(lambda s, m: s + m / n_s, metric_sum, metrics)
+        return (acc, loss_sum + l, metric_sum), None
+
+    (grads, loss, metric_sum), _ = jax.lax.scan(
+        micro_step, (accum0, jnp.zeros((), jnp.float32), metrics0),
+        micro_batches, unroll=plan.unroll)
+    if fused:
+        loss = loss * scale  # normalization was deferred to the accumulate
+    return grads, loss, metric_sum
+
+
+class _CompiledExecutorBase:
+    """Common machinery for scan-based (jit-compiled) executors."""
+    name = "base"
+    fused = False
+
+    def __init__(self, loss_fn, optimizer, plan, *,
+                 interpret: Optional[bool] = None, block: Optional[int] = None):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.plan = _as_plan(plan)
+        self._interpret = interpret
+        self._block = block
+        self._step_jit = None
+        self._grads_jit = None
+
+    def _accumulated(self, params, micro_batches):
+        return _scan_accumulate(self.loss_fn, self.plan, self.fused, params,
+                                micro_batches, self._interpret, self._block)
+
+    def make_train_step(self) -> Callable:
+        """(params, opt_state, split_batch) -> (params, opt_state, metrics);
+        pure — the launcher jits it with shardings and donation."""
+        def train_step(params, opt_state, micro_batches):
+            grads, loss, metric_sum = self._accumulated(params, micro_batches)
+            new_params, new_opt = exec_core.apply_update(
+                self.optimizer, grads, opt_state, params)
+            return new_params, new_opt, exec_core.finalize_metrics(
+                metric_sum, loss, grads)
+        return train_step
+
+    def gradients(self, params, micro_batches):
+        if self._grads_jit is None:
+            self._grads_jit = jax.jit(
+                lambda p, mb: self._accumulated(p, mb)[:2])
+        return self._grads_jit(params, micro_batches)
+
+    def step(self, params, opt_state, minibatch):
+        split = self.plan.device_split(minibatch)
+        if self._step_jit is None:
+            self._step_jit = jax.jit(self.make_train_step())
+        return self._step_jit(params, opt_state, split)
+
+
+class CompiledScanExecutor(_CompiledExecutorBase):
+    """Today's production path: jitted ``lax.scan`` + plain fp32 add."""
+    name = "compiled"
+    fused = False
+
+
+class FusedAccumExecutor(_CompiledExecutorBase):
+    """Compiled scan with the Pallas fused scaled-accumulate (step ❹).
+    ``interpret`` defaults to True off-TPU (set explicitly for tests)."""
+    name = "fused"
+    fused = True
+
+
+class StreamingExecutor:
+    """Eager host→device micro-batch streaming (the paper's Fig. 1
+    pipeline): double-buffered transfers, one jitted grad per micro-batch.
+    Honors the full plan — ``normalization="exact"`` and ``accum_dtype``
+    route through the same shared core as the compiled executors."""
+    name = "streaming"
+
+    def __init__(self, loss_fn, optimizer, plan, device: Optional[Any] = None):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.plan = _as_plan(plan)
+        self.device = device or jax.devices()[0]
+        norm = self.plan.normalization
+
+        @jax.jit
+        def _micro_grad(params, mb, n_s, total_valid):
+            lfn = exec_core.micro_loss_fn(loss_fn, norm, n_s, total_valid, mb)
+            (l, metrics), g = jax.value_and_grad(lfn, has_aux=True)(params)
+            return l, g, metrics
+
+        @jax.jit
+        def _accumulate(acc, g):  # paper step ❹ (accumulator dtype wins)
+            return exec_core.accumulate(acc, g)
+
+        @jax.jit
+        def _update(params, opt_state, acc):  # paper step ❺
+            return exec_core.apply_update(optimizer, acc, opt_state, params)
+
+        self._micro_grad = _micro_grad
+        self._accumulate = _accumulate
+        self._update = _update
+
+    def make_train_step(self) -> Callable:
+        raise NotImplementedError(
+            "StreamingExecutor is an eager host pipeline; use .step() "
+            "(or a compiled executor for a jittable train step)")
+
+    def _denoms(self, split) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        n_s, total_valid = exec_core.denominators(split)
+        return jnp.asarray(float(n_s), jnp.float32), total_valid
+
+    def gradients(self, params, micro_batches):
+        """Eager accumulation over an already-split batch (device arrays)."""
+        n_s = jax.tree.leaves(micro_batches)[0].shape[0]
+        n_s_f, total_valid = self._denoms(micro_batches)
+        acc = exec_core.init_accum(params, self.plan.accum_dtype)
+        loss = jnp.zeros((), jnp.float32)
+        for i in range(n_s):
+            mb = jax.tree.map(lambda x: x[i], micro_batches)
+            l, g, _ = self._micro_grad(params, mb, n_s_f, total_valid)
+            acc = self._accumulate(acc, g)
+            loss = loss + l
+        return acc, loss
+
+    def step(self, params, opt_state, minibatch: Dict[str, np.ndarray]
+             ) -> Tuple[Any, Any, Dict[str, Any]]:
+        """One mini-batch update via sequential micro-batch streaming."""
+        split = self.plan.split(minibatch)
+        n_s = jax.tree.leaves(split)[0].shape[0]
+        n_s_f, total_valid = self._denoms(split)
+        acc = exec_core.init_accum(params, self.plan.accum_dtype)
+        loss = 0.0
+        metric_sum = None
+
+        # double buffer: issue transfer of micro-batch i+1 while i computes
+        def put(i):
+            return jax.device_put(
+                jax.tree.map(lambda x: x[i], split), self.device)
+
+        nxt = put(0)
+        for i in range(n_s):
+            cur, nxt = nxt, (put(i + 1) if i + 1 < n_s else None)
+            lnorm, g, metrics = self._micro_grad(params, cur, n_s_f, total_valid)
+            acc = self._accumulate(acc, g)
+            loss += float(lnorm)
+            metric_sum = (metrics if metric_sum is None else
+                          jax.tree.map(jnp.add, metric_sum, metrics))
+        params, opt_state = self._update(params, opt_state, acc)
+        out: Dict[str, Any] = {k: float(v) / n_s
+                               for k, v in (metric_sum or {}).items()}
+        out["loss"] = loss
+        out["grad_norm"] = float(exec_core.global_grad_norm(acc))
+        return params, opt_state, out
+
+
+EXECUTORS: Dict[str, Type] = {
+    CompiledScanExecutor.name: CompiledScanExecutor,
+    StreamingExecutor.name: StreamingExecutor,
+    FusedAccumExecutor.name: FusedAccumExecutor,
+}
+
+
+def get_executor(name: str) -> Type:
+    try:
+        return EXECUTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {name!r}; available: {sorted(EXECUTORS)}")
+
+
+def accumulate_gradients(loss_fn, params, micro_batches, plan,
+                         *, fused: bool = False,
+                         interpret: Optional[bool] = None):
+    """Eager (python-loop) accumulated, normalized MBS gradients — the
+    quantity eq. (15)–(17) proves equal to the mini-batch gradient. Used by
+    the equivalence tests, benchmarks and the legacy ``mbs_gradients``."""
+    plan = _as_plan(plan)
+    n_s, total_valid = exec_core.denominators(micro_batches)
+    scale = (exec_core.deferred_scale(plan.normalization, n_s, total_valid)
+             if fused else None)
+    acc = exec_core.init_accum(params, plan.accum_dtype)
+    loss_sum = jnp.zeros((), jnp.float32)
+    for i in range(n_s):
+        mb = jax.tree.map(lambda x: x[i], micro_batches)
+        lfn = exec_core.micro_loss_fn(loss_fn, plan.normalization, n_s,
+                                      total_valid, mb, defer_scale=fused)
+        (l, _), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+        acc = exec_core.accumulate(acc, grads, scale=scale, fused=fused,
+                                   interpret=interpret)
+        loss_sum = loss_sum + l
+    if fused:
+        loss_sum = loss_sum * scale
+    return acc, loss_sum
+
+
+def make_baseline_train_step(loss_fn, optimizer) -> Callable:
+    """The no-MBS reference: one forward/backward over the whole mini-batch
+    (what the paper's "w/o MBS" columns do — and what fails beyond the
+    memory limit)."""
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt_state = exec_core.apply_update(
+            optimizer, grads, opt_state, params)
+        return new_params, new_opt_state, exec_core.finalize_metrics(
+            metrics, loss, grads)
+    return train_step

@@ -1,0 +1,187 @@
+"""MBS planner — batch geometry + normalization/accumulation policy.
+
+The paper determines the micro-batch size "experimentally ... the maximum
+size that can compute on GPU" (§4.3.2) and assumes N_B % N_μ == 0. The
+planner replaces both:
+
+  * when the caller does not pin a micro-batch size, ``plan_mbs`` asks the
+    analytic memory model (``core/memory_model.suggest_micro_batch_size``)
+    for the largest micro-batch that fits the HBM budget;
+  * ragged mini-batches (N_B % N_μ != 0) are handled by zero-padding the
+    tail micro-batch and carrying a ``sample_weight`` mask (1 = real
+    sample, 0 = padding) instead of asserting. Because Algorithm 1's
+    ``"paper"`` normalization is only exact for uniform splits, a ragged
+    plan auto-upgrades to ``"exact"`` (eq. 15–17 hold for any split there).
+
+The resulting :class:`MBSPlan` is consumed by every executor in
+``engine/executors.py``; see DESIGN.md §Engine architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MBSConfig:
+    """Legacy per-step policy (kept for backward compatibility; new code
+    should build an :class:`MBSPlan` via :func:`plan_mbs`)."""
+    micro_batch_size: int
+    normalization: str = "paper"  # "paper" | "exact"
+    accum_dtype: Any = jnp.float32
+    remat_micro_step: bool = False  # extra jax.checkpoint around each micro step
+    unroll: int = 1  # scan unroll factor
+
+
+def num_micro_batches(mini_batch_size: int, micro_batch_size: int) -> int:
+    """Algorithm 1 lines 1–5: N_μ ← min(N_μ, N_B); N_Sμ = ceil(N_B / N_μ)."""
+    micro = min(micro_batch_size, mini_batch_size)
+    return int(math.ceil(mini_batch_size / micro))
+
+
+def split_minibatch(batch: Dict[str, np.ndarray], micro_batch_size: int
+                    ) -> Dict[str, np.ndarray]:
+    """Host-side split (paper Fig. 2 step ❶): reshape every leaf from
+    ``(N_B, ...)`` to ``(N_Sμ, N_μ, ...)``, zero-padding the ragged tail and
+    emitting a ``sample_weight`` mask (1 = real sample, 0 = padding)."""
+    leaves = jax.tree.leaves(batch)
+    n_b = leaves[0].shape[0]
+    n_mu = min(micro_batch_size, n_b)
+    n_s = num_micro_batches(n_b, n_mu)
+    pad = n_s * n_mu - n_b
+
+    def split(x):
+        if pad:
+            x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+        return x.reshape(n_s, n_mu, *x.shape[1:])
+
+    out = {k: split(np.asarray(v)) for k, v in batch.items()}
+    w = np.ones((n_b,), np.float32)
+    if pad:
+        w = np.concatenate([w, np.zeros((pad,), np.float32)])
+    out["sample_weight"] = w.reshape(n_s, n_mu)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MBSPlan:
+    """Complete batch-geometry + accumulation policy for one training setup.
+
+    Geometry (host side): ``mini_batch_size`` samples are split into
+    ``num_micro_batches`` micro-batches of ``micro_batch_size`` each, with
+    ``pad`` zero samples appended to the tail (masked via sample_weight).
+
+    Policy (device side): ``normalization`` picks Algorithm 1 verbatim
+    ("paper": micro mean / N_Sμ) vs. the ragged-exact variant ("exact":
+    Σ valid per-sample losses / N_B_valid); ``accum_dtype`` is the gradient
+    accumulator precision; ``remat_micro_step``/``unroll`` tune the
+    compiled scan.
+    """
+    mini_batch_size: int
+    micro_batch_size: int
+    num_micro_batches: int  # N_Sμ
+    pad: int  # zero samples appended to the last micro-batch
+    normalization: str = "paper"  # "paper" | "exact"
+    accum_dtype: Any = jnp.float32
+    remat_micro_step: bool = False
+    unroll: int = 1
+    auto_micro: bool = False  # micro size chosen by the memory model
+    auto_normalization: bool = False  # "paper" upgraded to "exact" (ragged)
+
+    @property
+    def has_ragged_tail(self) -> bool:
+        return self.pad > 0
+
+    def split(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Pad-and-mask split of a host mini-batch (paper Fig. 2 step ❶)."""
+        return split_minibatch(batch, self.micro_batch_size)
+
+    def device_split(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        return {k: jnp.asarray(v) for k, v in self.split(batch).items()}
+
+    def as_config(self) -> MBSConfig:
+        return MBSConfig(self.micro_batch_size, self.normalization,
+                         self.accum_dtype, self.remat_micro_step, self.unroll)
+
+    @classmethod
+    def from_config(cls, cfg: MBSConfig,
+                    mini_batch_size: Optional[int] = None) -> "MBSPlan":
+        """Adapt a legacy MBSConfig. Without a mini-batch size the geometry
+        fields are degenerate (executors derive N_Sμ from the data at trace
+        time; only the policy fields matter)."""
+        mini = mini_batch_size if mini_batch_size is not None else cfg.micro_batch_size
+        micro = min(cfg.micro_batch_size, mini)
+        n_s = num_micro_batches(mini, micro)
+        return cls(mini, micro, n_s, n_s * micro - mini, cfg.normalization,
+                   cfg.accum_dtype, cfg.remat_micro_step, cfg.unroll)
+
+    def describe(self) -> str:
+        src = "memory model" if self.auto_micro else "pinned"
+        norm = self.normalization + (" (auto)" if self.auto_normalization else "")
+        return (f"MBSPlan: mini-batch {self.mini_batch_size} -> "
+                f"{self.num_micro_batches} x micro-batch {self.micro_batch_size}"
+                f" (pad {self.pad}, micro {src}, normalization {norm}, "
+                f"accum {jnp.dtype(self.accum_dtype).name})")
+
+
+def plan_mbs(mini_batch_size: int, *,
+             micro_batch_size: Optional[int] = None,
+             num_microbatches: Optional[int] = None,
+             model_cfg=None, seq_len: Optional[int] = None,
+             budget_bytes: Optional[int] = None,
+             normalization: str = "paper",
+             accum_dtype: Any = jnp.float32,
+             remat_micro_step: bool = False, unroll: int = 1,
+             tp: int = 1, fsdp: int = 1, opt_slots: int = 1,
+             act_bytes: int = 2, remat: bool = True) -> MBSPlan:
+    """Produce an :class:`MBSPlan` for one training setup.
+
+    Micro-batch size resolution, in priority order:
+      1. ``micro_batch_size`` pinned by the caller;
+      2. ``num_microbatches`` pinned by the caller → ceil(N_B / N_Sμ);
+      3. the analytic memory model (needs ``model_cfg`` + ``seq_len``):
+         largest power-of-two micro-batch fitting ``budget_bytes``
+         (default: one v5e HBM) — the paper's "experimentally determined"
+         size (§4.3.2), computed instead of searched. Falls back to
+         micro-batch 1 when even that does not fit (more model parallelism
+         is needed; MBS cannot shrink the model itself);
+      4. no model config at all → one micro-batch (no MBS).
+    """
+    if mini_batch_size < 1:
+        raise ValueError(f"mini_batch_size must be >= 1, got {mini_batch_size}")
+    auto = False
+    if micro_batch_size is not None:
+        micro = micro_batch_size
+    elif num_microbatches is not None:
+        if num_microbatches < 1:
+            raise ValueError(f"num_microbatches must be >= 1, got {num_microbatches}")
+        micro = int(math.ceil(mini_batch_size / num_microbatches))
+    elif model_cfg is not None:
+        if seq_len is None:
+            raise ValueError("auto micro-batch sizing needs seq_len")
+        from ..core import memory_model  # deferred: core imports this module
+        micro = memory_model.suggest_micro_batch_size(
+            model_cfg, seq_len, mini_batch_size,
+            budget_bytes=budget_bytes or memory_model.V5E_HBM_BYTES,
+            tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
+            remat=remat) or 1
+        auto = True
+    else:
+        micro = mini_batch_size
+
+    micro = max(1, min(micro, mini_batch_size))  # Algorithm 1 lines 2–4
+    n_s = num_micro_batches(mini_batch_size, micro)
+    pad = n_s * micro - mini_batch_size
+    auto_norm = False
+    if pad and normalization == "paper":
+        # Algorithm 1 divides each micro mean by N_Sμ, which over-weights a
+        # short tail; "exact" reproduces the mini-batch gradient for any split.
+        normalization, auto_norm = "exact", True
+    return MBSPlan(mini_batch_size, micro, n_s, pad, normalization,
+                   accum_dtype, remat_micro_step, unroll,
+                   auto_micro=auto, auto_normalization=auto_norm)

@@ -32,7 +32,7 @@ import time  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from .. import configs  # noqa: E402
+from .. import configs, engine  # noqa: E402
 from . import mesh as mesh_lib, sharding, steps  # noqa: E402
 
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
@@ -126,7 +126,10 @@ def _compile(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-    cost = dict(compiled.cost_analysis() or {})
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     return compiled, cost, round(t_lower, 2), round(t_compile, 2)
 
 
@@ -139,14 +142,16 @@ def _probe_cfg(cfg, periods: int):
 
 
 def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
-                fsdp: bool = True):
+                fsdp: bool = True, executor: str = "compiled"):
     """Trip-count-corrected flops/bytes/collective-bytes via two unrolled
     probe compiles (see module docstring)."""
     n = num_microbatches if shape.kind == "train" else 1
+    # probe one micro-batch of the planner's (ceil) size — ragged splits pad
     pshape = (dataclasses.replace(
-        shape, global_batch=shape.global_batch // num_microbatches)
+        shape, global_batch=-(-shape.global_batch // num_microbatches))
         if shape.kind == "train" else shape)
-    step_kw = {"remat": remat} if shape.kind == "train" else {}
+    step_kw = ({"remat": remat, "executor": executor}
+               if shape.kind == "train" else {})
     probes = {}
     for P in (1, 2):
         bundle = steps.build_step(_probe_cfg(cfg, P), pshape,
@@ -183,7 +188,8 @@ def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                num_microbatches: int = 8, mesh=None, reduced: bool = False,
                probe: bool = True, verbose: bool = True, remat: bool = True,
-               cfg_overrides: dict = None, fsdp: bool = True):
+               cfg_overrides: dict = None, fsdp: bool = True,
+               executor: str = "compiled"):
     cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
@@ -192,8 +198,20 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "long_500k requires sub-quadratic attention "
                           "(DESIGN.md §long_500k applicability)"}
+    if shape.kind == "train":
+        # resolve N_Smu through the same planner the step builder uses, so
+        # probes/reporting match the compiled step even when the requested
+        # count doesn't divide the global batch (<=0 = auto: micro-batch
+        # size from the analytic memory model)
+        pinned = (num_microbatches if num_microbatches is not None
+                  and num_microbatches > 0 else None)
+        plan = engine.plan_mbs(shape.global_batch, num_microbatches=pinned,
+                               model_cfg=cfg, seq_len=shape.seq_len,
+                               remat=remat)
+        num_microbatches = plan.num_micro_batches
     mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    step_kw = {"remat": remat} if shape.kind == "train" else {}
+    step_kw = {"remat": remat, "executor": executor} \
+        if shape.kind == "train" else {}
     bundle = steps.build_step(cfg, shape, num_microbatches=num_microbatches,
                               **step_kw)
     # multi-pod: extend FSDP over (pod, data) — optimizer-state-bound models
@@ -228,7 +246,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
     if probe:
         result["corrected"] = cost_probes(cfg, shape, mesh, num_microbatches,
-                                          remat=remat, fsdp=fsdp)
+                                          remat=remat, fsdp=fsdp,
+                                          executor=executor)
     if verbose:
         print(json.dumps(result))
     return result
@@ -239,7 +258,12 @@ def main():
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
     ap.add_argument("--shape", required=True, choices=list(configs.SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="N_Smu for train shapes; 0 = auto micro-batch "
+                         "size from the analytic memory model")
+    ap.add_argument("--executor", choices=["compiled", "fused"],
+                    default="compiled",
+                    help="compiled scan vs Pallas fused-accumulate step")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--no-probe", action="store_true")
     ap.add_argument("--no-remat", action="store_true",
@@ -260,7 +284,7 @@ def main():
                      num_microbatches=args.microbatches, reduced=args.reduced,
                      probe=not args.no_probe, verbose=args.out is None,
                      remat=not args.no_remat, cfg_overrides=overrides or None,
-                     fsdp=not args.no_fsdp)
+                     fsdp=not args.no_fsdp, executor=args.executor)
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         tag = "multi" if args.multi_pod else "single"

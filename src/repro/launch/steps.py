@@ -17,8 +17,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import engine
 from ..configs.shapes import InputShape
-from ..core import losses, mbs as mbs_lib
+from ..core import losses
 from ..models import encdec, transformer
 from ..models.config import ModelConfig
 from .. import optim
@@ -75,27 +76,44 @@ def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
         loss = losses.cross_entropy(logits, mb["labels"], sample_weight=sw,
                                     exact_denom=exact_denom)
         if cfg.is_moe:
-            loss = loss + cfg.router_aux_coef * aux / cfg.num_layers
+            aux_term = cfg.router_aux_coef * aux / cfg.num_layers
+            # exact-mode contract: micro contributions SUM to the mini-batch
+            # loss, so additive (non-per-sample) regularizers carry this
+            # micro-batch's valid-sample share — Σ_i (valid_i/N_B_valid)·aux_i
+            # is the weighted mean over micro-batches (== paper mode's
+            # mean when the split is uniform), for every executor.
+            if exact_denom is not None:
+                n_valid = (jnp.sum(sw) if sw is not None
+                           else jnp.asarray(float(jax.tree.leaves(mb)[0].shape[0])))
+                aux_term = aux_term * (n_valid / exact_denom)
+            loss = loss + aux_term
         return loss, {"aux_loss": aux}
 
     return loss_fn
 
 
 def build_train_step(cfg: ModelConfig, shape: InputShape, *,
-                     num_microbatches: int, optimizer=None,
+                     num_microbatches: Optional[int] = None, optimizer=None,
                      dtype=jnp.bfloat16, remat: bool = True,
                      normalization: str = "paper",
-                     scan_unroll: int = 1) -> StepBundle:
+                     scan_unroll: int = 1,
+                     executor: str = "compiled") -> StepBundle:
+    """Compiled train step via the MBS engine. ``num_microbatches=None``
+    auto-sizes the micro-batch from the analytic memory model (the paper's
+    experimentally-determined size, computed — §4.3.2); ragged splits are
+    padded + masked rather than asserted away."""
     optimizer = optimizer or make_optimizer(cfg)
-    assert shape.global_batch % num_microbatches == 0, (
-        shape.global_batch, num_microbatches)
-    micro = shape.global_batch // num_microbatches
-    mcfg = mbs_lib.MBSConfig(micro, normalization=normalization)
+    plan = engine.plan_mbs(shape.global_batch,
+                           num_microbatches=num_microbatches,
+                           model_cfg=cfg, seq_len=shape.seq_len,
+                           normalization=normalization, unroll=scan_unroll,
+                           act_bytes=jnp.dtype(dtype).itemsize, remat=remat)
     loss_fn = make_loss_fn(cfg, dtype, remat, scan_unroll)
-    step = mbs_lib.make_mbs_train_step(loss_fn, optimizer, mcfg)
+    step = engine.get_executor(executor)(
+        loss_fn, optimizer, plan).make_train_step()
 
     s = shape.seq_len
-    n, m = num_microbatches, micro
+    n, m = plan.num_micro_batches, plan.micro_batch_size
     i32, f32 = jnp.int32, jnp.float32
     sds = jax.ShapeDtypeStruct
     if cfg.is_encdec:
@@ -113,6 +131,8 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
             batch["vision_embeds"] = sds(
                 (n, m, N_VISION_TOKENS, transformer.VISION_EMBED_DIM), dtype)
             batch["mrope_positions"] = sds((n, 3, m, s), i32)
+    # the plan's pad-and-mask split always emits the sample-weight mask
+    batch["sample_weight"] = sds((n, m), f32)
 
     params = abstract_params(cfg)
     opt_state = abstract_opt_state(optimizer, params)

@@ -2,10 +2,16 @@
 
 Builds the mesh from the actual device topology (falls back to a host mesh
 when run off-cluster), shards params/optimizer via the divisibility policy,
-and drives the MBS train step with the synthetic data pipeline.
+and drives an MBS engine executor with the synthetic data pipeline.
+
+Batch geometry comes from the engine planner: ``--microbatches`` pins
+N_Sμ; without it the micro-batch size is derived from the analytic memory
+model (``--hbm-budget-gb``). Ragged mini-batches (N_B % N_μ != 0) are
+padded + masked, not rejected.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
-      --reduced --steps 20 --mini-batch 16 --microbatches 4
+      --reduced --steps 20 --mini-batch 16 [--microbatches 4] \
+      [--executor compiled|streaming|fused]
 """
 from __future__ import annotations
 
@@ -16,8 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import checkpoint, configs, optim
-from ..core import mbs as mbs_lib
+from .. import checkpoint, configs, engine, optim
 from ..data import LMDataset
 from ..models import encdec, transformer
 from . import mesh as mesh_lib, sharding, steps
@@ -31,13 +36,43 @@ def build_mesh(args):
     return mesh_lib.make_host_mesh(data=n, model=1)
 
 
+def build_plan(cfg, args) -> engine.MBSPlan:
+    """The launcher's batch geometry: pinned N_Sμ when given, else the
+    memory model picks the micro-batch size (paper §4.3.2, computed)."""
+    budget = (int(args.hbm_budget_gb * 1024 ** 3)
+              if args.hbm_budget_gb else None)
+    dtype_bytes = 4 if args.dtype == "float32" else 2
+    return engine.plan_mbs(
+        args.mini_batch, num_microbatches=args.microbatches,
+        model_cfg=cfg, seq_len=args.seq, budget_bytes=budget,
+        normalization=args.normalization,
+        act_bytes=dtype_bytes, remat=not args.reduced)
+
+
+def build_executor(cfg, plan, args, optimizer=None):
+    """The step path used by main() — also exercised directly by the
+    end-to-end ragged-tail test."""
+    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+    loss_fn = steps.make_loss_fn(cfg, dtype=dtype, remat=not args.reduced)
+    opt = optimizer or optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
+    return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--mini-batch", type=int, default=16)
-    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="pin N_Smu (default: auto micro-batch size from "
+                         "the memory model)")
+    ap.add_argument("--executor", choices=sorted(engine.EXECUTORS),
+                    default="compiled")
+    ap.add_argument("--normalization", choices=["paper", "exact"],
+                    default="paper")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="per-device HBM budget for auto micro-batch sizing")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--mesh", choices=["host", "production"], default="host")
@@ -46,18 +81,37 @@ def main():
     ap.add_argument("--dtype", choices=["float32", "bfloat16"],
                     default="float32")
     args = ap.parse_args()
+    if args.executor == "streaming" and (args.mesh != "host" or args.multi_pod):
+        ap.error("--executor streaming is the single-device eager pipeline "
+                 "(paper Fig. 1); it ignores sharding — use --mesh host, or "
+                 "a compiled executor for production meshes")
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = build_mesh(args)
-    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
-    micro = args.mini_batch // args.microbatches
-    assert micro * args.microbatches == args.mini_batch
+    plan = build_plan(cfg, args)
+    print(plan.describe(), flush=True)
+    executor, opt = build_executor(cfg, plan, args)
 
     init = encdec.init_params if cfg.is_encdec else transformer.init_params
-    opt = optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
-    loss_fn = steps.make_loss_fn(cfg, dtype=dtype, remat=not args.reduced)
-    train_step = mbs_lib.make_mbs_train_step(loss_fn, opt,
-                                             mbs_lib.MBSConfig(micro))
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+
+    def run(params, opt_state, do_step):
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            params, opt_state, m = do_step(params, opt_state,
+                                           ds.batch(args.mini_batch, i))
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
+        if args.ckpt_dir:
+            checkpoint.save(args.ckpt_dir, args.steps, params)
+            print(f"checkpointed to {args.ckpt_dir}")
+
+    if args.executor == "streaming":
+        # eager paper pipeline: single-device double-buffered streaming
+        params = init(cfg, jax.random.PRNGKey(0))
+        run(params, opt.init(params), executor.step)
+        return
 
     with mesh:
         pshapes = jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
@@ -68,21 +122,9 @@ def main():
         opt_state = jax.jit(opt.init, out_shardings=sharding.named(
             sharding.param_specs(jax.eval_shape(opt.init, pshapes), mesh),
             mesh))(params)
-        step = jax.jit(train_step, donate_argnums=(0, 1))
-
-        ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
-        t0 = time.perf_counter()
-        for i in range(args.steps):
-            mini = ds.batch(args.mini_batch, i)
-            split = {k: jnp.asarray(v) for k, v in
-                     mbs_lib.split_minibatch(mini, micro).items()}
-            params, opt_state, m = step(params, opt_state, split)
-            if i % 5 == 0 or i == args.steps - 1:
-                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
-                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
-        if args.ckpt_dir:
-            checkpoint.save(args.ckpt_dir, args.steps, params)
-            print(f"checkpointed to {args.ckpt_dir}")
+        step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1))
+        run(params, opt_state,
+            lambda p, s, mini: step(p, s, plan.device_split(mini)))
 
 
 if __name__ == "__main__":

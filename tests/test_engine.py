@@ -1,0 +1,243 @@
+"""Unified MBS engine: planner geometry + the three executors (compiled
+scan / streaming / Pallas-fused, interpret mode on CPU) produce numerically
+equal gradients and parameter updates — eq. (15)–(17) behind one interface."""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, engine, optim
+from repro.core import losses, memory_model
+from repro.data import LMDataset
+from repro.launch import steps, train as train_lib
+
+EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True}}
+
+
+def _loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
+
+
+def _batch(n, seed=0):
+    rng = np.random.default_rng(seed + 100)
+    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
+            "y": rng.integers(0, 4, n).astype(np.int32)}
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_plan_pins_micro_batch_size():
+    plan = engine.plan_mbs(16, micro_batch_size=4)
+    assert (plan.micro_batch_size, plan.num_micro_batches, plan.pad) == (4, 4, 0)
+    assert not plan.auto_micro and plan.normalization == "paper"
+
+
+def test_plan_pins_num_microbatches_with_ragged_tail():
+    plan = engine.plan_mbs(10, num_microbatches=3)
+    assert (plan.micro_batch_size, plan.num_micro_batches, plan.pad) == (4, 3, 2)
+    # Algorithm 1 ("paper") is only exact for uniform splits: auto-upgrade
+    assert plan.normalization == "exact" and plan.auto_normalization
+
+
+def test_plan_auto_micro_from_memory_model():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    plan = engine.plan_mbs(64, model_cfg=cfg, seq_len=16)
+    assert plan.auto_micro
+    suggested = memory_model.suggest_micro_batch_size(cfg, 16, 64)
+    assert plan.micro_batch_size == (suggested or 1)
+    # the chosen micro-batch actually fits the budget per the model
+    est = memory_model.estimate(cfg, 16)
+    assert est.total(plan.micro_batch_size) <= memory_model.V5E_HBM_BYTES
+
+
+def test_plan_auto_micro_respects_tight_budget():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    act = memory_model.activation_bytes_per_sample(cfg, 16)
+    est = memory_model.estimate(cfg, 16)
+    cap = est.total(0) + act * 3  # room for <= 3 samples of activations
+    plan = engine.plan_mbs(64, model_cfg=cfg, seq_len=16, budget_bytes=cap)
+    assert plan.auto_micro and plan.micro_batch_size <= 3
+
+
+def test_plan_split_is_masked_partition():
+    plan = engine.plan_mbs(10, num_microbatches=3)
+    batch = _batch(10)
+    split = plan.split(batch)
+    assert split["x"].shape == (3, 4, 8)
+    w = split["sample_weight"].reshape(-1)
+    assert w.sum() == 10
+    np.testing.assert_array_equal(split["x"].reshape(-1, 8)[w > 0], batch["x"])
+
+
+def test_plan_from_legacy_config_roundtrip():
+    cfg = engine.MBSConfig(4, "exact", jnp.bfloat16)
+    plan = engine.MBSPlan.from_config(cfg, 12)
+    assert plan.micro_batch_size == 4 and plan.num_micro_batches == 3
+    assert plan.as_config() == cfg
+
+
+# ---------------------------------------------------------------------------
+# executor equivalence (acceptance: all three equal on a shared fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("n_b,n_mu,normalization", [
+    (12, 4, "paper"), (16, 8, "paper"),
+    (12, 4, "exact"), (10, 4, "exact"), (13, 5, "exact"),
+])
+def test_executor_gradients_match_full_batch(executor, n_b, n_mu, normalization):
+    params, batch = _params(), _batch(n_b)
+    _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
+    ref_loss = float(_loss_fn(params, batch)[0])
+    plan = engine.plan_mbs(n_b, micro_batch_size=n_mu,
+                           normalization=normalization)
+    assert plan.normalization == "exact" or n_b % n_mu == 0
+    ex = engine.get_executor(executor)(
+        _loss_fn, optim.sgd(0.1), plan, **EXECUTOR_KW[executor])
+    g, loss = ex.gradients(params, plan.device_split(batch))
+    assert _max_err(g, ref) < 2e-6
+    assert abs(float(loss) - ref_loss) < 2e-6
+
+
+@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+def test_executor_step_matches_baseline_update(executor):
+    """One optimizer step via any engine executor == the no-MBS baseline."""
+    params, batch = _params(2), _batch(16, seed=2)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+    base = engine.make_baseline_train_step(_loss_fn, opt)
+    p_ref, _, m_ref = jax.jit(base)(params, opt.init(params),
+                                    {k: jnp.asarray(v) for k, v in batch.items()})
+    plan = engine.plan_mbs(16, micro_batch_size=4)
+    ex = engine.get_executor(executor)(_loss_fn, opt, plan,
+                                       **EXECUTOR_KW[executor])
+    p, _, m = ex.step(params, opt.init(params), dict(batch))
+    assert _max_err(p, p_ref) < 2e-6
+    assert abs(float(m["loss"]) - float(m_ref["loss"])) < 2e-6
+    assert abs(float(m["grad_norm"]) - float(m_ref["grad_norm"])) < 2e-5
+
+
+def _aux_loss_fn(p, batch, exact_denom=None):
+    """CE + an additive (non-per-sample) regularizer following the exact-mode
+    contract: the aux term carries this micro-batch's valid-sample share."""
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    ce = losses.cross_entropy(logits, batch["y"],
+                              sample_weight=batch.get("sample_weight"),
+                              exact_denom=exact_denom),
+    aux = 0.1 * jnp.mean(jnp.square(h))
+    if exact_denom is not None:
+        sw = batch.get("sample_weight")
+        n_valid = (jnp.sum(sw) if sw is not None
+                   else jnp.asarray(float(batch["x"].shape[0])))
+        aux = aux * (n_valid / exact_denom)
+    return ce[0] + aux, {}
+
+
+@pytest.mark.parametrize("n_b,n_mu", [(12, 4), (10, 4)])
+def test_additive_aux_loss_consistent_across_executors(n_b, n_mu):
+    """Regression: additive regularizers (e.g. MoE router aux) must get the
+    same weight from every executor in exact mode, ragged tails included."""
+    params, batch = _params(), _batch(n_b)
+    plan = engine.plan_mbs(n_b, micro_batch_size=n_mu, normalization="exact")
+    split = plan.device_split(batch)
+    grads, ls = {}, {}
+    for name in sorted(engine.EXECUTORS):
+        ex = engine.get_executor(name)(_aux_loss_fn, optim.sgd(0.1), plan,
+                                       **EXECUTOR_KW[name])
+        grads[name], ls[name] = ex.gradients(params, split)
+    for name in ("streaming", "fused"):
+        assert _max_err(grads[name], grads["compiled"]) < 2e-6
+        assert abs(float(ls[name]) - float(ls["compiled"])) < 2e-6
+    if n_b % n_mu == 0:  # uniform split: exact == paper == mean-of-micro aux
+        plan_p = engine.plan_mbs(n_b, micro_batch_size=n_mu)
+        g_p, _ = engine.CompiledScanExecutor(
+            _aux_loss_fn, optim.sgd(0.1), plan_p).gradients(params, split)
+        assert _max_err(g_p, grads["compiled"]) < 2e-6
+
+
+def test_fused_accum_dtype_is_respected():
+    params, batch = _params(), _batch(8)
+    plan = engine.plan_mbs(8, micro_batch_size=4, accum_dtype=jnp.bfloat16)
+    ex = engine.FusedAccumExecutor(_loss_fn, optim.sgd(0.1), plan,
+                                   interpret=True)
+    g, _ = ex.gradients(params, plan.device_split(batch))
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# ragged end-to-end through launch/train.py's step path
+# ---------------------------------------------------------------------------
+
+def _train_args(**over):
+    base = dict(microbatches=3, executor="compiled", normalization="paper",
+                hbm_budget_gb=None, seq=16, mini_batch=10, dtype="float32",
+                lr=0.05, reduced=True)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+def test_ragged_train_path_matches_full_batch(executor):
+    """mini_batch=10, micro=4 through the launcher's step construction
+    produces the same update as the full-batch baseline (this path used to
+    die on a divisibility assert)."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    args = _train_args(executor=executor)
+    plan = train_lib.build_plan(cfg, args)
+    assert plan.micro_batch_size == 4 and plan.pad == 2
+    assert plan.normalization == "exact"  # auto-upgraded for the ragged tail
+    if executor == "fused":  # CPU: run the Pallas kernel in interpret mode
+        ex, opt = train_lib.build_executor(cfg, plan, args)
+        ex = engine.FusedAccumExecutor(ex.loss_fn, opt, plan, interpret=True)
+    else:
+        ex, opt = train_lib.build_executor(cfg, plan, args)
+
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+    mini = ds.batch(args.mini_batch, 0)
+    from repro.models import transformer
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+    base = jax.jit(engine.make_baseline_train_step(ex.loss_fn, opt))
+    p_ref, _, m_ref = base(params, opt.init(params),
+                           {k: jnp.asarray(v) for k, v in mini.items()})
+    p, _, m = ex.step(params, opt.init(params), mini)
+    assert _max_err(p, p_ref) < 1e-5
+    assert abs(float(m["loss"]) - float(m_ref["loss"])) < 1e-5
+
+
+def test_build_train_step_auto_micro_and_mask_shapes():
+    """steps.build_train_step goes through the planner: no divisibility
+    assert, sample-weight mask in the abstract batch."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    shape = configs.SHAPES["train_4k"]
+    bundle = steps.build_train_step(cfg, shape, num_microbatches=8,
+                                    dtype=jnp.float32, remat=False)
+    batch = bundle.arg_shapes[2]
+    assert batch["tokens"].shape[:2] == (8, 32)
+    assert batch["sample_weight"].shape == (8, 32)
+    # auto: planner consults the memory model when N_Smu is not pinned
+    auto = steps.build_train_step(cfg, shape, dtype=jnp.float32, remat=False)
+    n, m = auto.arg_shapes[2]["tokens"].shape[:2]
+    assert n * m >= shape.global_batch
+    assert m == (memory_model.suggest_micro_batch_size(
+        cfg, shape.seq_len, shape.global_batch) or 1)

@@ -3,10 +3,17 @@ produces the same parameter update as the compiled MBS step."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import losses, mbs as M
 from repro.core.streaming import MBSStreamExecutor, prefetch_iterator
 from repro import optim
+
+
+def _make_batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
+            "y": rng.integers(0, 4, n).astype(np.int32)}
 
 
 def _loss_fn(p, batch, exact_denom=None):
@@ -42,3 +49,45 @@ def test_stream_executor_matches_compiled_step():
 def test_prefetch_iterator_order_and_completeness():
     out = list(prefetch_iterator(iter(range(57)), size=3))
     assert out == list(range(57))
+
+
+@pytest.mark.parametrize("normalization,n_b", [("paper", 12), ("exact", 12),
+                                               ("exact", 10)])
+def test_stream_executor_honors_normalization(normalization, n_b):
+    """Regression: the streaming executor used to silently ignore
+    MBSConfig.normalization="exact" — its gradients must match the compiled
+    executor's in BOTH modes (including a ragged tail in exact mode)."""
+    key = jax.random.PRNGKey(3)
+    params = {"w1": jax.random.normal(key, (8, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.fold_in(key, 1), (16, 4)) * 0.3}
+    batch = _make_batch(n_b)
+    cfg = M.MBSConfig(4, normalization=normalization)
+    split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, 4).items()}
+    opt = optim.sgd(0.1)
+    g_s, l_s = MBSStreamExecutor(_loss_fn, opt, cfg).gradients(params, split)
+    from repro.engine import CompiledScanExecutor
+    g_c, l_c = CompiledScanExecutor(_loss_fn, opt, cfg).gradients(params, split)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(g_s), jax.tree.leaves(g_c)))
+    assert err < 1e-6
+    assert abs(float(l_s) - float(l_c)) < 1e-6
+    # exact mode equals the full-batch gradient even with a ragged tail
+    if normalization == "exact":
+        _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(g_s), jax.tree.leaves(ref)))
+        assert err < 1e-6
+
+
+def test_stream_executor_honors_accum_dtype():
+    """Regression: the streaming executor used to accumulate in whatever
+    zeros_like(params) gave, ignoring MBSConfig.accum_dtype."""
+    key = jax.random.PRNGKey(4)
+    params = {"w1": jax.random.normal(key, (8, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.fold_in(key, 1), (16, 4)) * 0.3}
+    split = {k: jnp.asarray(v)
+             for k, v in M.split_minibatch(_make_batch(8), 4).items()}
+    ex = MBSStreamExecutor(_loss_fn, optim.sgd(0.1),
+                           M.MBSConfig(4, accum_dtype=jnp.bfloat16))
+    g, _ = ex.gradients(params, split)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(g))
