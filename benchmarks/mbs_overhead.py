@@ -2,9 +2,20 @@
 a fixed global batch as a function of the number of micro-batches. The
 paper reports 0.3–5.1% per-epoch overhead; here we measure the compiled
 engine step directly, for both the plain-scan and the Pallas fused-
-accumulate executors."""
+accumulate executors.
+
+``--pipeline`` runs the input-pipeline benchmark instead (paper §3.1 /
+Fig. 1): full step-loop time through the synchronous hot loop (inline
+``ds.batch`` + blocking per-step metrics readback — what the launcher
+used to do) vs. the async ``Pipeline`` + ``Trainer`` path (background
+batch synthesis/split, double-buffered device staging, metrics read one
+step late). Results land in ``BENCH_pipeline.json`` together with the
+pipeline's measured input-wait fraction, so the perf trajectory of the
+input path is recorded run over run."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -55,5 +66,81 @@ def main(quick: bool = True):
     return rows
 
 
+def _loop_sync(ex, ds, params, opt_state, mini_batch: int, n_steps: int
+               ) -> float:
+    """The pre-pipeline launcher hot loop: synchronous batch synthesis,
+    host split in the loop, blocking metrics readback every step."""
+    p, s = params, opt_state
+    t0 = time.perf_counter()
+    for i in range(n_steps):
+        p, s, m = ex.step(p, s, ds.batch(mini_batch, i))
+        float(m["loss"])  # per-step host sync
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / n_steps
+
+
+def _loop_overlap(ex, ds, plan, params, opt_state, n_steps: int):
+    """Pipeline + Trainer: background synthesis/split, double-buffered
+    staging, async metrics readback."""
+    device = getattr(ex, "device", None)
+    pipeline = engine.Pipeline(ds, plan, prefetch=2, sharding=device)
+    trainer = engine.Trainer(ex.step_split, pipeline, log_fn=None)
+    t0 = time.perf_counter()
+    p, s, _ = trainer.fit(params, opt_state, n_steps)
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / n_steps, pipeline.stats
+
+
+def pipeline_main(quick: bool = True, out_path: str = "BENCH_pipeline.json"):
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32, remat=False)
+    opt = optim.sgd(0.01, momentum=0.9)
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=64, seed=0)
+    mini_batch = 16
+    plan = engine.plan_mbs(mini_batch, num_microbatches=4)
+    n_steps = 8 if quick else 30
+
+    results = {"benchmark": "pipeline_overlap", "steps": n_steps,
+               "mini_batch": mini_batch,
+               "num_microbatches": plan.num_micro_batches, "executors": {}}
+    for name in ("streaming", "compiled"):
+        ex = engine.get_executor(name)(loss_fn, opt, plan)
+        # compile + warm caches outside the timed region
+        p, s, m = ex.step(params, opt.init(params), ds.batch(mini_batch, 0))
+        jax.block_until_ready(m["loss"])
+
+        sync_s = _loop_sync(ex, ds, params, opt.init(params),
+                            mini_batch, n_steps)
+        overlap_s, stats = _loop_overlap(ex, ds, plan, params,
+                                         opt.init(params), n_steps)
+        results["executors"][name] = {
+            "sync_step_s": sync_s,
+            "overlap_step_s": overlap_s,
+            "speedup": sync_s / overlap_s,
+            "input_wait_fraction": stats.input_wait_fraction,
+            "input_wait_s": stats.wait_s,
+            "elapsed_s": stats.elapsed_s,
+        }
+        emit(f"pipeline/{name}/sync", sync_s * 1e6, "per-step, no overlap")
+        emit(f"pipeline/{name}/overlap", overlap_s * 1e6,
+             f"speedup={sync_s / overlap_s:.2f}x "
+             f"input_wait={stats.input_wait_fraction:.3f}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 if __name__ == "__main__":
-    main(quick=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the input-pipeline overlap benchmark and "
+                         "write BENCH_pipeline.json")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    a = ap.parse_args()
+    if a.pipeline:
+        pipeline_main(quick=a.quick, out_path=a.out)
+    else:
+        main(quick=a.quick)

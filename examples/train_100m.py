@@ -1,19 +1,20 @@
 """End-to-end training driver: a ~100M-parameter decoder-only LM trained
 with the full production stack — MBS micro-batch streaming, auto
-micro-batch sizing from the memory model, LR schedule, checkpointing and
-restart.
+micro-batch sizing from the memory model, LR schedule, and the engine's
+async input pipeline + resumable Trainer (background batch synthesis,
+double-buffered device staging, async metrics readback, periodic
+checkpoints of params AND optimizer state).
 
 Default invocation is CPU-sized; pass --full for the ~100M/200-step run.
 
     PYTHONPATH=src python examples/train_100m.py [--full] [--steps N]
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint, engine, optim
+from repro import engine, optim
 from repro.core import memory_model
 from repro.data import LMDataset
 from repro.launch import steps as steps_lib
@@ -69,24 +70,21 @@ def main():
     executor = engine.get_executor(args.executor)(loss_fn, opt, plan)
     opt_state = opt.init(params)
 
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
+    pipeline = engine.Pipeline(ds, plan, prefetch=2)
+    trainer = engine.Trainer(executor.step_split, pipeline,
+                             ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every, log_every=10)
+
     start = 0
-    if checkpoint.latest_step(args.ckpt_dir) is not None:
-        start = checkpoint.latest_step(args.ckpt_dir)
-        params = checkpoint.restore(args.ckpt_dir, params, start)
+    restored = trainer.restore(params, opt_state)
+    if restored is not None:
+        params, opt_state, start = restored
         print(f"restored checkpoint at step {start}")
 
-    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
-    t0 = time.perf_counter()
-    for i in range(start, num_steps):
-        params, opt_state, m = executor.step(params, opt_state,
-                                             ds.batch(args.mini_batch, i))
-        if i % 10 == 0 or i == num_steps - 1:
-            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
-                  f"|g| {float(m['grad_norm']):.3f}  "
-                  f"{time.perf_counter() - t0:.1f}s")
-        if (i + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, i + 1, params)
-    print("done.")
+    trainer.fit(params, opt_state, num_steps, start_step=start)
+    stats = pipeline.stats
+    print(f"done. input-wait fraction {stats.input_wait_fraction:.3f}")
 
 
 if __name__ == "__main__":

@@ -53,17 +53,24 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(directory: str, template, step: Optional[int] = None):
-    """Restore into the structure of ``template`` (shapes must match)."""
+def restore(directory: str, template, step: Optional[int] = None, *,
+            shardings=None):
+    """Restore into the structure of ``template`` (shapes must match).
+
+    With ``shardings`` (a pytree of ``jax.sharding.Sharding``/devices
+    matching ``template``, or a single sharding), the restored tree is
+    placed on device via ``jax.device_put`` instead of being returned as
+    bare host numpy arrays — resuming a sharded run must re-apply the
+    run's placement, not silently replicate."""
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
     flat_t = _flatten(template)
-    missing = set(flat_t) - set(data.files)
-    if missing:
-        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-    leaves_by_key = {k: data[k] for k in flat_t}
+    with np.load(os.path.join(directory, f"ckpt_{step:08d}.npz")) as data:
+        missing = set(flat_t) - set(data.files)
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+        leaves_by_key = {k: data[k] for k in flat_t}
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     new_leaves = []
     for path, leaf in paths:
@@ -71,4 +78,7 @@ def restore(directory: str, template, step: Optional[int] = None):
         arr = leaves_by_key[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         new_leaves.append(arr.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -30,8 +30,20 @@ from ..engine.executors import StreamingExecutor
 MBSStreamExecutor = StreamingExecutor
 
 
+class _WorkerError:
+    """Queue sentinel carrying an exception out of the prefetch thread."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 def prefetch_iterator(it: Iterator, size: int = 2) -> Iterator:
-    """Background-thread prefetch for host data pipelines."""
+    """Background-thread prefetch for host data pipelines.
+
+    Exceptions raised by the producer are re-raised in the consumer (with
+    the worker's traceback attached) rather than silently ending the
+    stream — a failed data pipeline must never truncate an epoch.
+    """
     import queue
     import threading
 
@@ -42,7 +54,9 @@ def prefetch_iterator(it: Iterator, size: int = 2) -> Iterator:
         try:
             for item in it:
                 q.put(item)
-        finally:
+        except BaseException as exc:  # noqa: BLE001 — relayed to consumer
+            q.put(_WorkerError(exc))
+        else:
             q.put(stop)
 
     threading.Thread(target=worker, daemon=True).start()
@@ -50,4 +64,6 @@ def prefetch_iterator(it: Iterator, size: int = 2) -> Iterator:
         item = q.get()
         if item is stop:
             return
+        if isinstance(item, _WorkerError):
+            raise item.exc
         yield item

@@ -1,13 +1,19 @@
-"""Data loader: composes a dataset with MBS host-side splitting (paper
-Fig. 2 step ❶) and background prefetch."""
+"""Data loader — thin facade over the engine's async input pipeline.
+
+``MBSLoader`` keeps its historical surface (dataset + mini/micro batch
+sizes → iterator of host-side ``(N_Sμ, N_μ, ...)`` splits) but routes
+through :func:`repro.engine.plan_mbs` and :class:`repro.engine.Pipeline`,
+so it inherits the planner's geometry (ragged tails pad + mask, paper
+normalization auto-upgraded to exact) and the pipeline's background
+prefetch with proper worker-exception propagation. New code that also
+wants device staging should use ``engine.Pipeline`` directly."""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
-from ..core import mbs as mbs_lib
-from ..core.streaming import prefetch_iterator
+from ..engine import Pipeline, plan_mbs
 
 
 class MBSLoader:
@@ -22,14 +28,10 @@ class MBSLoader:
         self.prefetch = prefetch
         self.seed = seed
         self.batch_kw = batch_kw
+        self.plan = plan_mbs(mini_batch_size,
+                             micro_batch_size=micro_batch_size)
+        self._pipeline = Pipeline(dataset, self.plan, prefetch=prefetch,
+                                  stage=False, seed=seed, batch_kw=batch_kw)
 
     def __call__(self, num_batches: int) -> Iterator[Dict[str, np.ndarray]]:
-        def gen():
-            for i in range(num_batches):
-                mini = self.dataset.batch(self.mini_batch_size,
-                                          self.seed + i, **self.batch_kw)
-                yield mbs_lib.split_minibatch(mini, self.micro_batch_size)
-
-        if self.prefetch:
-            return prefetch_iterator(gen(), self.prefetch)
-        return gen()
+        return self._pipeline.batches(num_batches)

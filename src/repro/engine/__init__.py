@@ -10,6 +10,12 @@ of the paper's experimental search (§4.3.2).
 Layer 2 — executors (``executors.py``): compiled scan / eager streaming /
 Pallas-fused accumulate, all sharing one normalization–accumulation–update
 core (``exec_core.py``). See DESIGN.md §Engine architecture.
+
+Layer 3 — input pipeline + loop (``pipeline.py`` / ``trainer.py``): the
+:class:`Pipeline` turns (dataset, plan) into pre-split, device-staged
+batches with background prefetch and double buffering; the
+:class:`Trainer` owns the step loop — async metrics readback, periodic
+checkpointing, sharding-aware resume. See DESIGN.md §Input pipeline.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
@@ -17,3 +23,5 @@ from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
                         FusedAccumExecutor, StreamingExecutor,
                         accumulate_gradients, get_executor,
                         make_baseline_train_step)
+from .pipeline import Pipeline, PipelineStats  # noqa: F401
+from .trainer import Trainer  # noqa: F401

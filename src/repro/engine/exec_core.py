@@ -24,8 +24,11 @@ from ..kernels.grad_accum import grad_accum_tree
 
 
 def denominators(micro_batches) -> Tuple[int, jnp.ndarray]:
-    """(N_Sμ, N_B_valid) of a split batch. N_B_valid comes from the
-    sample-weight mask when present (ragged tails), else N_Sμ · N_μ."""
+    """(N_Sμ, N_B_valid) of a split batch. N_B_valid is the total sample
+    weight when a mask is present — padded tail samples contribute 0 and
+    dataset-provided fractional weights contribute their weight (the split
+    composes mask × weights, see ``plan.split_minibatch``), so exact-mode
+    normalization is the weighted mini-batch mean. Else N_Sμ · N_μ."""
     leaves = jax.tree.leaves(micro_batches)
     n_s = leaves[0].shape[0]
     w = micro_batches.get("sample_weight") if hasattr(micro_batches, "get") else None

@@ -53,6 +53,9 @@ class Executor(Protocol):
     def step(self, params, opt_state, minibatch: Dict[str, np.ndarray]
              ) -> Tuple[Any, Any, Dict[str, Any]]: ...
 
+    def step_split(self, params, opt_state, micro_batches
+                   ) -> Tuple[Any, Any, Dict[str, Any]]: ...
+
     def gradients(self, params, micro_batches) -> Tuple[Any, jnp.ndarray]: ...
 
 
@@ -124,11 +127,17 @@ class _CompiledExecutorBase:
                 lambda p, mb: self._accumulated(p, mb)[:2])
         return self._grads_jit(params, micro_batches)
 
-    def step(self, params, opt_state, minibatch):
-        split = self.plan.device_split(minibatch)
+    def step_split(self, params, opt_state, micro_batches):
+        """Jitted step over an already-split ``(N_Sμ, N_μ, ...)`` batch —
+        the entry used by the ``Trainer``/``Pipeline`` pair (staging done
+        upstream). Metrics come back as device scalars (no host sync)."""
         if self._step_jit is None:
             self._step_jit = jax.jit(self.make_train_step())
-        return self._step_jit(params, opt_state, split)
+        return self._step_jit(params, opt_state, micro_batches)
+
+    def step(self, params, opt_state, minibatch):
+        return self.step_split(params, opt_state,
+                               self.plan.device_split(minibatch))
 
 
 class CompiledScanExecutor(_CompiledExecutorBase):
@@ -146,9 +155,17 @@ class FusedAccumExecutor(_CompiledExecutorBase):
 
 class StreamingExecutor:
     """Eager host→device micro-batch streaming (the paper's Fig. 1
-    pipeline): double-buffered transfers, one jitted grad per micro-batch.
-    Honors the full plan — ``normalization="exact"`` and ``accum_dtype``
-    route through the same shared core as the compiled executors."""
+    pipeline): double-buffered transfers, one jitted micro step per
+    micro-batch. Honors the full plan — ``normalization="exact"`` and
+    ``accum_dtype`` route through the same shared core as the compiled
+    executors.
+
+    Loss and metrics stay on device for the whole loop (the jitted micro
+    step carries them alongside the gradient accumulator) and the step
+    returns device scalars, so nothing forces a host sync between
+    micro-batches and the double buffer actually overlaps transfer with
+    compute. Callers read metrics back when they need them (the
+    ``Trainer`` does so asynchronously, one step late)."""
     name = "streaming"
 
     def __init__(self, loss_fn, optimizer, plan, device: Optional[Any] = None):
@@ -165,6 +182,17 @@ class StreamingExecutor:
             return l, g, metrics
 
         @jax.jit
+        def _micro_step(params, carry, mb, n_s, total_valid):
+            # grad + accumulate + on-device loss/metric sums in ONE dispatch
+            # (paper Fig. 2 steps ❷–❹); no host value ever materializes here.
+            acc, loss_sum, metric_sum = carry
+            lfn = exec_core.micro_loss_fn(loss_fn, norm, n_s, total_valid, mb)
+            (l, metrics), g = jax.value_and_grad(lfn, has_aux=True)(params)
+            acc = exec_core.accumulate(acc, g)
+            metric_sum = jax.tree.map(jnp.add, metric_sum, metrics)
+            return acc, loss_sum + l, metric_sum
+
+        @jax.jit
         def _accumulate(acc, g):  # paper step ❹ (accumulator dtype wins)
             return exec_core.accumulate(acc, g)
 
@@ -173,6 +201,7 @@ class StreamingExecutor:
             return exec_core.apply_update(optimizer, acc, opt_state, params)
 
         self._micro_grad = _micro_grad
+        self._micro_step = _micro_step
         self._accumulate = _accumulate
         self._update = _update
 
@@ -198,35 +227,51 @@ class StreamingExecutor:
             loss = loss + l
         return acc, loss
 
+    def _run(self, params, opt_state, micro_iter, n_s: int, split
+             ) -> Tuple[Any, Any, Dict[str, Any]]:
+        n_s_f, total_valid = self._denoms(split)
+        mb0 = jax.tree.map(lambda x: x[0], split)
+        carry = (exec_core.init_accum(params, self.plan.accum_dtype),
+                 jnp.zeros((), jnp.float32),
+                 exec_core.metrics_zeros(self.loss_fn,
+                                         self.plan.normalization, params, mb0))
+        for cur in micro_iter:
+            carry = self._micro_step(params, carry, cur, n_s_f, total_valid)
+        acc, loss, metric_sum = carry
+        params, opt_state = self._update(params, opt_state, acc)
+        out: Dict[str, Any] = {k: v / n_s for k, v in metric_sum.items()}
+        out["loss"] = loss  # Σ normalized micro losses == mini-batch loss
+        out["grad_norm"] = exec_core.global_grad_norm(acc)
+        return params, opt_state, out
+
+    def step_split(self, params, opt_state, micro_batches
+                   ) -> Tuple[Any, Any, Dict[str, Any]]:
+        """Streaming update over a pre-split (and typically pre-staged)
+        ``(N_Sμ, N_μ, ...)`` batch — the ``Pipeline`` overlaps the
+        mini-batch transfer, so micro-batches are sliced on device."""
+        n_s = jax.tree.leaves(micro_batches)[0].shape[0]
+        micro_iter = (jax.tree.map(lambda x, i=i: x[i], micro_batches)
+                      for i in range(n_s))
+        return self._run(params, opt_state, micro_iter, n_s, micro_batches)
+
     def step(self, params, opt_state, minibatch: Dict[str, np.ndarray]
              ) -> Tuple[Any, Any, Dict[str, Any]]:
         """One mini-batch update via sequential micro-batch streaming."""
         split = self.plan.split(minibatch)
         n_s = jax.tree.leaves(split)[0].shape[0]
-        n_s_f, total_valid = self._denoms(split)
-        acc = exec_core.init_accum(params, self.plan.accum_dtype)
-        loss = 0.0
-        metric_sum = None
 
         # double buffer: issue transfer of micro-batch i+1 while i computes
         def put(i):
             return jax.device_put(
                 jax.tree.map(lambda x: x[i], split), self.device)
 
-        nxt = put(0)
-        for i in range(n_s):
-            cur, nxt = nxt, (put(i + 1) if i + 1 < n_s else None)
-            lnorm, g, metrics = self._micro_grad(params, cur, n_s_f, total_valid)
-            acc = self._accumulate(acc, g)
-            loss += float(lnorm)
-            metric_sum = (metrics if metric_sum is None else
-                          jax.tree.map(jnp.add, metric_sum, metrics))
-        params, opt_state = self._update(params, opt_state, acc)
-        out: Dict[str, Any] = {k: float(v) / n_s
-                               for k, v in (metric_sum or {}).items()}
-        out["loss"] = loss
-        out["grad_norm"] = float(exec_core.global_grad_norm(acc))
-        return params, opt_state, out
+        def micro_iter():
+            nxt = put(0)
+            for i in range(n_s):
+                cur, nxt = nxt, (put(i + 1) if i + 1 < n_s else None)
+                yield cur
+
+        return self._run(params, opt_state, micro_iter(), n_s, split)
 
 
 EXECUTORS: Dict[str, Type] = {

@@ -48,8 +48,14 @@ def split_minibatch(batch: Dict[str, np.ndarray], micro_batch_size: int
                     ) -> Dict[str, np.ndarray]:
     """Host-side split (paper Fig. 2 step ❶): reshape every leaf from
     ``(N_B, ...)`` to ``(N_Sμ, N_μ, ...)``, zero-padding the ragged tail and
-    emitting a ``sample_weight`` mask (1 = real sample, 0 = padding)."""
-    leaves = jax.tree.leaves(batch)
+    emitting a ``sample_weight`` mask (1 = real sample, 0 = padding).
+
+    A dataset-provided per-sample ``sample_weight`` is composed with the
+    padding mask (weight × mask) rather than clobbered, so weighted
+    datasets keep their weighting through the MBS split."""
+    existing_w = batch.get("sample_weight")
+    rest = {k: v for k, v in batch.items() if k != "sample_weight"}
+    leaves = jax.tree.leaves(rest or batch)
     n_b = leaves[0].shape[0]
     n_mu = min(micro_batch_size, n_b)
     n_s = num_micro_batches(n_b, n_mu)
@@ -60,8 +66,10 @@ def split_minibatch(batch: Dict[str, np.ndarray], micro_batch_size: int
             x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
         return x.reshape(n_s, n_mu, *x.shape[1:])
 
-    out = {k: split(np.asarray(v)) for k, v in batch.items()}
+    out = {k: split(np.asarray(v)) for k, v in rest.items()}
     w = np.ones((n_b,), np.float32)
+    if existing_w is not None:
+        w = w * np.asarray(existing_w, np.float32).reshape(n_b)
     if pad:
         w = np.concatenate([w, np.zeros((pad,), np.float32)])
     out["sample_weight"] = w.reshape(n_s, n_mu)
@@ -98,7 +106,21 @@ class MBSPlan:
         return self.pad > 0
 
     def split(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        """Pad-and-mask split of a host mini-batch (paper Fig. 2 step ❶)."""
+        """Pad-and-mask split of a host mini-batch (paper Fig. 2 step ❶).
+
+        Non-uniform dataset sample weights are only normalized correctly
+        by "exact" mode (Algorithm 1 averages micro means with equal
+        1/N_Sμ weight, which mis-weights unequal micro totals exactly
+        like a ragged tail does) — refuse loudly rather than corrupt the
+        gradient silently."""
+        w = batch.get("sample_weight") if hasattr(batch, "get") else None
+        if w is not None and self.normalization == "paper":
+            w = np.asarray(w)
+            if w.size and not np.all(w == w.flat[0]):
+                raise ValueError(
+                    'batch carries a non-uniform sample_weight, which '
+                    '"paper" normalization cannot weight correctly — '
+                    'build the plan with normalization="exact"')
         return split_minibatch(batch, self.micro_batch_size)
 
     def device_split(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:

@@ -2,7 +2,11 @@
 
 Builds the mesh from the actual device topology (falls back to a host mesh
 when run off-cluster), shards params/optimizer via the divisibility policy,
-and drives an MBS engine executor with the synthetic data pipeline.
+and drives an MBS engine executor through the async input pipeline: the
+dataset is batched + plan-split in a background worker (exceptions
+propagate), staged host→device with the launcher's batch shardings
+(double-buffered at mini-batch granularity), and the ``Trainer`` owns the
+step loop — async metrics readback, periodic checkpointing, ``--resume``.
 
 Batch geometry comes from the engine planner: ``--microbatches`` pins
 N_Sμ; without it the micro-batch size is derived from the analytic memory
@@ -11,18 +15,17 @@ padded + masked, not rejected.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
       --reduced --steps 20 --mini-batch 16 [--microbatches 4] \
-      [--executor compiled|streaming|fused]
+      [--executor compiled|streaming|fused] \
+      [--ckpt-dir /tmp/ckpt --ckpt-every 10 --resume]
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .. import checkpoint, configs, engine, optim
+from .. import configs, engine, optim
 from ..data import LMDataset
 from ..models import encdec, transformer
 from . import mesh as mesh_lib, sharding, steps
@@ -58,6 +61,26 @@ def build_executor(cfg, plan, args, optimizer=None):
     return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
 
 
+def run_trainer(trainer, params, opt_state, args):
+    """Resume (when asked) + fit; shared by both executor paths."""
+    start = 0
+    if args.resume:
+        restored = trainer.restore(params, opt_state)
+        if restored is not None:
+            params, opt_state, start = restored
+            print(f"resumed from step {start}", flush=True)
+        else:
+            print("no checkpoint to resume from; starting fresh", flush=True)
+    params, opt_state, last = trainer.fit(params, opt_state, args.steps,
+                                          start_step=start)
+    if args.ckpt_dir:
+        print(f"checkpointed to {args.ckpt_dir}", flush=True)
+    stats = trainer.pipeline.stats
+    print(f"input-wait fraction {stats.input_wait_fraction:.3f} "
+          f"({stats.wait_s:.2f}s of {stats.elapsed_s:.2f}s)", flush=True)
+    return params, opt_state, last
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
@@ -78,6 +101,15 @@ def main():
     ap.add_argument("--mesh", choices=["host", "production"], default="host")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (0: only at the end)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params+opt state from the latest "
+                         "checkpoint in --ckpt-dir and continue from its step")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host batches buffered by the input pipeline "
+                         "(0: synchronous)")
+    ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--dtype", choices=["float32", "bfloat16"],
                     default="float32")
     args = ap.parse_args()
@@ -85,6 +117,8 @@ def main():
         ap.error("--executor streaming is the single-device eager pipeline "
                  "(paper Fig. 1); it ignores sharding — use --mesh host, or "
                  "a compiled executor for production meshes")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = build_mesh(args)
@@ -95,22 +129,18 @@ def main():
     init = encdec.init_params if cfg.is_encdec else transformer.init_params
     ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
 
-    def run(params, opt_state, do_step):
-        t0 = time.perf_counter()
-        for i in range(args.steps):
-            params, opt_state, m = do_step(params, opt_state,
-                                           ds.batch(args.mini_batch, i))
-            if i % 5 == 0 or i == args.steps - 1:
-                print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
-                      f"({time.perf_counter() - t0:.1f}s)", flush=True)
-        if args.ckpt_dir:
-            checkpoint.save(args.ckpt_dir, args.steps, params)
-            print(f"checkpointed to {args.ckpt_dir}")
-
     if args.executor == "streaming":
-        # eager paper pipeline: single-device double-buffered streaming
+        # eager paper pipeline: single-device double-buffered streaming;
+        # the Pipeline stages whole split mini-batches to the device, the
+        # executor slices micro-batches on device
         params = init(cfg, jax.random.PRNGKey(0))
-        run(params, opt.init(params), executor.step)
+        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                   sharding=executor.device)
+        trainer = engine.Trainer(executor.step_split, pipeline,
+                                 ckpt_dir=args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every,
+                                 log_every=args.log_every)
+        run_trainer(trainer, params, opt.init(params), args)
         return
 
     with mesh:
@@ -119,12 +149,22 @@ def main():
         params = jax.jit(lambda k: init(cfg, k),
                          out_shardings=sharding.named(pspecs, mesh))(
             jax.random.PRNGKey(0))
+        opt_specs = sharding.param_specs(
+            jax.eval_shape(opt.init, pshapes), mesh)
         opt_state = jax.jit(opt.init, out_shardings=sharding.named(
-            sharding.param_specs(jax.eval_shape(opt.init, pshapes), mesh),
-            mesh))(params)
+            opt_specs, mesh))(params)
         step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1))
-        run(params, opt_state,
-            lambda p, s, mini: step(p, s, plan.device_split(mini)))
+        pipeline = engine.Pipeline(
+            ds, plan, prefetch=args.prefetch,
+            sharding=lambda split: sharding.named(
+                sharding.batch_specs(split, mesh), mesh))
+        trainer = engine.Trainer(
+            step, pipeline, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, log_every=args.log_every,
+            state_shardings={
+                "params": sharding.named(pspecs, mesh),
+                "opt_state": sharding.named(opt_specs, mesh)})
+        run_trainer(trainer, params, opt_state, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,335 @@
+"""Async input pipeline + resumable Trainer (engine layer 3).
+
+Covers the regressions this layer exists to prevent:
+  * prefetch worker exceptions must propagate, never truncate the epoch;
+  * Pipeline/MBSLoader batches go through the planner, so ragged
+    mini-batches get exact normalization and match the full-batch
+    gradient on every executor;
+  * dataset-provided sample weights survive the split (composed with the
+    padding mask) instead of being clobbered;
+  * save → resume through the Trainer reproduces an uninterrupted run
+    bitwise (params AND optimizer state round-trip with placement).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, optim
+from repro.core import losses
+from repro.core.streaming import prefetch_iterator
+from repro.data import MBSLoader
+
+EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True}}
+
+
+def _loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
+
+
+@dataclasses.dataclass
+class _ToyDataset:
+    """Deterministic-in-(seed, step) dataset, like the synthetic ones."""
+    n_features: int = 8
+    n_classes: int = 4
+    seed: int = 0
+
+    def batch(self, batch_size, seed):
+        rng = np.random.default_rng((self.seed, seed))
+        return {"x": rng.normal(size=(batch_size, self.n_features)
+                                ).astype(np.float32),
+                "y": rng.integers(0, self.n_classes, batch_size
+                                  ).astype(np.int32)}
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# prefetch error propagation
+# ---------------------------------------------------------------------------
+
+def test_prefetch_propagates_worker_exception():
+    """Regression: a raising producer used to silently END the stream
+    (epoch truncation); it must re-raise in the consumer."""
+    def gen():
+        yield 0
+        yield 1
+        raise ValueError("corrupt shard")
+
+    it = prefetch_iterator(gen(), size=2)
+    assert next(it) == 0 and next(it) == 1
+    with pytest.raises(ValueError, match="corrupt shard"):
+        next(it)
+
+
+def test_prefetch_propagates_immediate_exception():
+    def gen():
+        raise RuntimeError("boom")
+        yield  # pragma: no cover
+
+    with pytest.raises(RuntimeError, match="boom"):
+        list(prefetch_iterator(gen(), size=1))
+
+
+def test_pipeline_propagates_dataset_exception():
+    class Bad:
+        def batch(self, batch_size, seed):
+            if seed >= 2:
+                raise OSError("read failed")
+            return {"x": np.zeros((batch_size, 4), np.float32)}
+
+    pipe = engine.Pipeline(Bad(), engine.plan_mbs(6, micro_batch_size=2),
+                           prefetch=2, stage=False)
+    with pytest.raises(OSError, match="read failed"):
+        list(pipe.batches(5))
+
+
+# ---------------------------------------------------------------------------
+# plan-aware splitting: ragged + weighted batches through the pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+def test_pipeline_ragged_batch_matches_full_batch(executor):
+    """mini=10, micro=4 through Pipeline: the planner auto-upgrades to
+    exact normalization, so every executor reproduces the full-batch
+    gradient from the pipeline's pre-split batch."""
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    assert plan.normalization == "exact" and plan.pad == 2
+    pipe = engine.Pipeline(ds, plan, prefetch=2)
+    split = next(iter(pipe.batches(1)))
+    assert split["x"].shape == (3, 4, 8)
+
+    params = _params()
+    ex = engine.get_executor(executor)(_loss_fn, optim.sgd(0.1), plan,
+                                       **EXECUTOR_KW[executor])
+    g, loss = ex.gradients(params, split)
+
+    full = ds.batch(10, 0)
+    _, ref = jax.value_and_grad(lambda p: _loss_fn(p, full)[0])(params)
+    assert _max_err(g, ref) < 2e-6
+    assert abs(float(loss) - float(_loss_fn(params, full)[0])) < 2e-6
+
+
+def test_mbs_loader_goes_through_planner():
+    """Regression: MBSLoader used to bypass plan_mbs, keeping the
+    tail-over-weighting paper normalization on ragged mini-batches."""
+    loader = MBSLoader(_ToyDataset(), mini_batch_size=10,
+                       micro_batch_size=4, prefetch=0)
+    assert loader.plan.normalization == "exact"
+    assert loader.plan.auto_normalization
+    batches = list(loader(2))
+    assert len(batches) == 2
+    assert batches[0]["x"].shape == (3, 4, 8)
+    assert batches[0]["sample_weight"].sum() == 10
+
+
+@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+def test_split_composes_dataset_sample_weight(executor):
+    """Regression: split_minibatch used to clobber a dataset-provided
+    sample_weight with the all-ones padding mask. Composed weights must
+    reproduce the weighted full-batch gradient in exact mode."""
+    rng = np.random.default_rng(5)
+    w = rng.uniform(0.25, 1.0, 10).astype(np.float32)
+    batch = _ToyDataset().batch(10, 0)
+    batch["sample_weight"] = w
+
+    plan = engine.plan_mbs(10, micro_batch_size=4, normalization="exact")
+    split = plan.split(batch)
+    sw = split["sample_weight"].reshape(-1)
+    np.testing.assert_allclose(sw[:10], w, rtol=1e-6)  # weights kept
+    np.testing.assert_array_equal(sw[10:], 0)  # padding masked
+
+    params = _params()
+    ex = engine.get_executor(executor)(_loss_fn, optim.sgd(0.1), plan,
+                                       **EXECUTOR_KW[executor])
+    g, loss = ex.gradients(params, plan.device_split(batch))
+    _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
+    assert _max_err(g, ref) < 2e-6
+    assert abs(float(loss) - float(_loss_fn(params, batch)[0])) < 2e-6
+
+
+def test_split_rejects_nonuniform_weights_in_paper_mode():
+    """Paper normalization averages micro means with equal 1/N_Sμ weight,
+    which silently mis-normalizes non-uniform sample weights even on a
+    uniform split — the plan must refuse, not corrupt the gradient."""
+    batch = _ToyDataset().batch(12, 0)
+    batch["sample_weight"] = np.linspace(0.2, 1.0, 12).astype(np.float32)
+    plan = engine.plan_mbs(12, micro_batch_size=4)  # uniform: stays "paper"
+    assert plan.normalization == "paper"
+    with pytest.raises(ValueError, match="exact"):
+        plan.split(batch)
+    # uniform weights are fine in paper mode (weighted mean == mean)
+    batch["sample_weight"] = np.full(12, 0.5, np.float32)
+    assert plan.split(batch)["x"].shape == (3, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# streaming executor: no per-micro-batch host sync
+# ---------------------------------------------------------------------------
+
+def test_streaming_step_returns_device_metrics():
+    """Regression: step() used to float() the loss every micro-batch,
+    serializing the double buffer; metrics now stay on device."""
+    plan = engine.plan_mbs(8, micro_batch_size=4)
+    ex = engine.StreamingExecutor(_loss_fn, optim.sgd(0.1), plan)
+    params = _params()
+    batch = _ToyDataset().batch(8, 0)
+    _, _, m = ex.step(params, optim.sgd(0.1).init(params), batch)
+    assert isinstance(m["loss"], jax.Array)
+    assert isinstance(m["grad_norm"], jax.Array)
+
+
+def test_streaming_step_split_matches_step():
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1, momentum=0.9)
+    ex = engine.StreamingExecutor(_loss_fn, opt, plan)
+    params = _params()
+    batch = _ToyDataset().batch(10, 0)
+    p1, _, m1 = ex.step(params, opt.init(params), dict(batch))
+    p2, _, m2 = ex.step_split(params, opt.init(params),
+                              plan.device_split(batch))
+    assert _max_err(p1, p2) == 0
+    assert float(m1["loss"]) == float(m2["loss"])
+
+
+# ---------------------------------------------------------------------------
+# trainer: save -> resume bitwise round-trip
+# ---------------------------------------------------------------------------
+
+def _fit(tmp_path, num_steps, *, ckpt_every=0, resume=False, subdir="a"):
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+    ex = engine.CompiledScanExecutor(_loss_fn, opt, plan)
+    pipe = engine.Pipeline(ds, plan, prefetch=2)
+    trainer = engine.Trainer(ex.step_split, pipe,
+                             ckpt_dir=str(tmp_path / subdir),
+                             ckpt_every=ckpt_every, log_fn=None)
+    params, opt_state = _params(), opt.init(_params())
+    start = 0
+    if resume:
+        restored = trainer.restore(params, opt_state)
+        assert restored is not None
+        params, opt_state, start = restored
+    return trainer.fit(params, opt_state, num_steps, start_step=start)
+
+
+def test_save_resume_matches_uninterrupted_run_bitwise(tmp_path):
+    p_full, s_full, _ = _fit(tmp_path, 6, subdir="full")
+    # interrupted run: 3 steps, checkpoint, fresh Trainer resumes 3 -> 6
+    _fit(tmp_path, 3, ckpt_every=3, subdir="resumed")
+    p_res, s_res, _ = _fit(tmp_path, 6, resume=True, subdir="resumed")
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_full), jax.tree.leaves(s_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_final_checkpoint_and_restore_placement(tmp_path):
+    p, s, last = _fit(tmp_path, 4, subdir="final")
+    from repro import checkpoint
+    assert checkpoint.latest_step(str(tmp_path / "final")) == 4
+    # restore returns device-placed arrays, not bare host numpy
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+    ex = engine.CompiledScanExecutor(_loss_fn, opt, plan)
+    trainer = engine.Trainer(ex.step_split,
+                             engine.Pipeline(ds, plan, prefetch=0),
+                             ckpt_dir=str(tmp_path / "final"), log_fn=None)
+    params, opt_state, step = trainer.restore(_params(),
+                                              opt.init(_params()))
+    assert step == 4
+    assert all(isinstance(l, jax.Array) for l in jax.tree.leaves(params))
+    assert all(isinstance(l, jax.Array)
+               for l in jax.tree.leaves(opt_state))
+    assert "loss" in last and isinstance(last["loss"], float)
+
+
+def test_trainer_restores_legacy_params_only_checkpoint(tmp_path):
+    """Pre-Trainer checkpoints held bare params; restore must fall back
+    to them (fresh optimizer state) instead of raising KeyError."""
+    from repro import checkpoint
+    params = _params()
+    checkpoint.save(str(tmp_path), 7, params)
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1, momentum=0.9)
+    ex = engine.CompiledScanExecutor(_loss_fn, opt, plan)
+    trainer = engine.Trainer(ex.step_split,
+                             engine.Pipeline(_ToyDataset(), plan, prefetch=0),
+                             ckpt_dir=str(tmp_path), log_fn=None)
+    p, s, step = trainer.restore(params, opt.init(params))
+    assert step == 7
+    assert _max_err(p, params) == 0
+
+
+def test_trainer_fit_past_end_does_not_mislabel_checkpoint(tmp_path):
+    """Resuming with num_steps < start_step must not overwrite/emit a
+    checkpoint tagged with the earlier step index."""
+    _fit(tmp_path, 4, subdir="past")
+    from repro import checkpoint
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+    ex = engine.CompiledScanExecutor(_loss_fn, opt, plan)
+    trainer = engine.Trainer(ex.step_split,
+                             engine.Pipeline(ds, plan, prefetch=2),
+                             ckpt_dir=str(tmp_path / "past"), log_fn=None)
+    params, opt_state, start = trainer.restore(_params(),
+                                               opt.init(_params()))
+    trainer.fit(params, opt_state, 2, start_step=start)  # already past 2
+    assert checkpoint.latest_step(str(tmp_path / "past")) == 4
+    import os
+    assert not os.path.exists(str(tmp_path / "past" / "ckpt_00000002.npz"))
+
+
+def test_trainer_fit_finalizes_pipeline_stats(tmp_path):
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    opt = optim.sgd(0.1)
+    ex = engine.CompiledScanExecutor(_loss_fn, opt, plan)
+    pipe = engine.Pipeline(ds, plan, prefetch=2)
+    trainer = engine.Trainer(ex.step_split, pipe, log_fn=None)
+    trainer.fit(_params(), opt.init(_params()), 3)
+    assert pipe.stats.batches == 3
+    assert pipe.stats.elapsed_s > 0  # finalized by exhaustion, not GC
+
+
+def test_pipeline_stats_track_input_wait():
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(8, micro_batch_size=4)
+    pipe = engine.Pipeline(ds, plan, prefetch=2, stage=False)
+    n = sum(1 for _ in pipe.batches(5))
+    assert n == 5
+    assert pipe.stats.batches == 5
+    assert 0.0 <= pipe.stats.input_wait_fraction <= 1.0
+    assert pipe.stats.elapsed_s > 0
+
+
+def test_pipeline_seeding_is_step_indexed():
+    """batches(n, start=k) must yield exactly the tail of batches(n+k) —
+    the invariant resume correctness rests on."""
+    ds = _ToyDataset()
+    plan = engine.plan_mbs(6, micro_batch_size=3)
+    pipe = engine.Pipeline(ds, plan, prefetch=0, stage=False)
+    full = list(pipe.batches(4))
+    tail = list(pipe.batches(2, start=2))
+    for a, b in zip(full[2:], tail):
+        np.testing.assert_array_equal(a["x"], b["x"])
