@@ -6,6 +6,17 @@ import time
 from typing import Callable, Iterable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def many_leaf_params(num_leaves: int, seed: int = 0):
+    """Synthetic many-leaf fp32 param tree with ragged (non-block) sizes —
+    the regime where per-leaf update paths pay O(num_leaves) launches."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(500, 40_000, num_leaves)
+    return {f"p{i}": jnp.asarray(rng.normal(size=int(s)), jnp.float32)
+            for i, s in enumerate(sizes)}
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -7,10 +7,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import optim
+from repro.engine import FlatSpec, exec_core
 from repro.kernels import ref
 from repro.models import attention
 
-from .common import emit, time_fn
+from .common import emit, many_leaf_params, time_fn
 
 
 def main(quick: bool = True):
@@ -48,6 +50,49 @@ def main(quick: bool = True):
     accum = jax.jit(lambda a, g: ref.grad_accum_ref(a, g, 0.125))
     t_acc = time_fn(accum, acc, g)
     rows.append(emit("kernel/grad_accum_ref", t_acc, f"bytes={N * 12}"))
+
+    # per-leaf vs bucketed grad-accum (reference arithmetic: one add per
+    # leaf vs one add over the contiguous bucket). The derived launch count
+    # is the Pallas dispatch knob on TPU: O(num_leaves) -> O(num_buckets).
+    params = many_leaf_params(32 if quick else 96)
+    spec = FlatSpec.for_tree(params)
+    grads = jax.tree.map(lambda p: p * 0.5 + 0.1, params)  # same layout
+    acc_tree = jax.tree.map(jnp.zeros_like, params)
+    per_leaf = jax.jit(lambda a, g: jax.tree.map(
+        lambda a_, g_: ref.grad_accum_ref(a_, g_, 0.125), a, g))
+    bucketed = jax.jit(lambda a, g: [ref.grad_accum_ref(a_, g_, 0.125)
+                                     for a_, g_ in zip(a, g)])
+    t_leafwise = time_fn(per_leaf, acc_tree, grads)
+    t_bucket = time_fn(bucketed, spec.zeros(jnp.float32),
+                       spec.flatten(grads))
+    rows.append(emit("kernel/grad_accum_per_leaf", t_leafwise,
+                     f"launches={spec.num_leaves}"))
+    rows.append(emit("kernel/grad_accum_bucketed", t_bucket,
+                     f"launches={spec.num_buckets}"))
+
+    # fused flat optimizer update vs the unfused tree reference (oracle of
+    # the one-pass kernel arithmetic, kernels/fused_update.py), both fed
+    # the SAME gradient values: the fused path writes params+state in
+    # place — no updates/opt-state transients
+    opt = optim.sgd(0.01, momentum=0.9, weight_decay=5e-4)
+    fs = opt.fused
+    state = opt.init(params)
+    unfused = jax.jit(lambda g_, s_, p_: exec_core.apply_update(
+        opt, g_, s_, p_))
+    fused = jax.jit(lambda g_, m_, p_: [ref.fused_sgd_ref(
+        p1, g1, m1, 0.01, momentum=fs.momentum, weight_decay=fs.weight_decay)
+        for p1, g1, m1 in zip(p_, g_, m_)])
+    pbytes = sum(l.size * 4 for l in jax.tree.leaves(params))
+    t_unfused = time_fn(unfused, grads, state, params)
+    t_fused = time_fn(fused, spec.flatten(grads),
+                      spec.flatten(state["mom"]), spec.flatten(params))
+    rows.append(emit("kernel/optimizer_update_unfused", t_unfused,
+                     f"transient_bytes={2 * pbytes}"))
+    # derived reports the KERNEL path's transient; the timing itself is the
+    # donation-less jnp oracle (compiled-TPU proxy; it still allocates its
+    # outputs here — see mbs_overhead --update-bench for the kernel timings)
+    rows.append(emit("kernel/optimizer_update_fused_flat", t_fused,
+                     "kernel_path_transient_bytes=0 (oracle timing)"))
     return rows
 
 

@@ -11,7 +11,13 @@ used to do) vs. the async ``Pipeline`` + ``Trainer`` path (background
 batch synthesis/split, double-buffered device staging, metrics read one
 step late). Results land in ``BENCH_pipeline.json`` together with the
 pipeline's measured input-wait fraction, so the perf trajectory of the
-input path is recorded run over run."""
+input path is recorded run over run.
+
+``--update-bench`` benchmarks the update path (paper Fig. 2 steps ❹–❺)
+and writes ``BENCH_update.json``: Pallas launches per update (per-leaf
+O(num_leaves) vs flat-bucketed O(num_buckets)), step-❺ wall time for the
+unfused tree reference vs the fused flat path, and the analytic peak
+update-transient bytes each admits into the micro-batch budget."""
 from __future__ import annotations
 
 import argparse
@@ -22,11 +28,14 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs, engine, optim
+from repro.core import memory_model
 from repro.data import LMDataset
+from repro.engine import exec_core
+from repro.kernels import grad_accum as ga, ref as kref
 from repro.launch import steps
 from repro.models import transformer
 
-from .common import emit
+from .common import emit, many_leaf_params, time_fn
 
 
 def _time_step(step, params, opt_state, split, iters: int) -> float:
@@ -49,7 +58,7 @@ def main(quick: bool = True):
     mini = ds.batch(global_batch, 0)
     iters = 3 if quick else 10
     rows = []
-    for name in ("compiled", "fused"):
+    for name in ("compiled", "fused", "flat"):
         base_t = None
         for n_micro in (1, 2, 4, 8):
             plan = engine.plan_mbs(global_batch, num_microbatches=n_micro)
@@ -106,14 +115,17 @@ def pipeline_main(quick: bool = True, out_path: str = "BENCH_pipeline.json"):
                "num_microbatches": plan.num_micro_batches, "executors": {}}
     for name in ("streaming", "compiled"):
         ex = engine.get_executor(name)(loss_fn, opt, plan)
+
+        def fresh():  # compiled executors donate: never reuse stepped state
+            p = jax.tree.map(jnp.copy, params)
+            return p, opt.init(p)
+
         # compile + warm caches outside the timed region
-        p, s, m = ex.step(params, opt.init(params), ds.batch(mini_batch, 0))
+        p, s, m = ex.step(*fresh(), ds.batch(mini_batch, 0))
         jax.block_until_ready(m["loss"])
 
-        sync_s = _loop_sync(ex, ds, params, opt.init(params),
-                            mini_batch, n_steps)
-        overlap_s, stats = _loop_overlap(ex, ds, plan, params,
-                                         opt.init(params), n_steps)
+        sync_s = _loop_sync(ex, ds, *fresh(), mini_batch, n_steps)
+        overlap_s, stats = _loop_overlap(ex, ds, plan, *fresh(), n_steps)
         results["executors"][name] = {
             "sync_step_s": sync_s,
             "overlap_step_s": overlap_s,
@@ -132,15 +144,131 @@ def pipeline_main(quick: bool = True, out_path: str = "BENCH_pipeline.json"):
     return results
 
 
+def _bench_update_path(name: str, params, opt, iters: int) -> dict:
+    """Launch counts + step-❹/❺ wall times for one param tree."""
+    spec = engine.FlatSpec.for_tree(params)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32), params)
+    gbufs = spec.flatten(grads, dtype=jnp.float32)
+    pbufs = spec.flatten(params)
+    state = opt.init(params)
+    pbytes = sum(l.size * jnp.dtype(l.dtype).itemsize
+                 for l in jax.tree.leaves(params))
+
+    # step ❹: one scaled accumulate over the whole gradient
+    t_accum_leaf = time_fn(
+        jax.jit(lambda a, g: ga.grad_accum_tree(a, g, 0.125, interpret=True)),
+        jax.tree.map(jnp.zeros_like, grads), grads, iters=iters)
+    t_accum_bucket = time_fn(
+        jax.jit(lambda a, g: ga.grad_accum_buckets(a, g, 0.125,
+                                                   interpret=True)),
+        spec.zeros(jnp.float32), gbufs, iters=iters)
+
+    # step ❺: unfused tree reference vs the fused flat path. The interpret
+    # timing runs the real kernels (dispatch count dominates on this CPU
+    # host); the oracle timing is the same one-pass flat arithmetic as a
+    # single compiled XLA expression — the compiled-TPU-path proxy.
+    t_unfused = time_fn(
+        jax.jit(lambda g_, s_, p_: exec_core.apply_update(opt, g_, s_, p_)),
+        grads, state, params, iters=iters)
+    t_fused = time_fn(
+        jax.jit(lambda b_, s_, p_: exec_core.apply_update_flat(
+            opt, spec, b_, s_, p_, interpret=True)),
+        gbufs, state, params, iters=iters)
+    fs = opt.fused
+    mbufs = spec.flatten(state["mom"])
+    t_fused_oracle = time_fn(
+        jax.jit(lambda b_, m_, p_: [kref.fused_sgd_ref(
+            p1, g1, m1, 0.01, momentum=fs.momentum,
+            weight_decay=fs.weight_decay)
+            for p1, g1, m1 in zip(p_, b_, m_)]),
+        gbufs, mbufs, pbufs, iters=iters)
+
+    res = {
+        "num_leaves": spec.num_leaves,
+        "num_buckets": spec.num_buckets,
+        "param_bytes": int(pbytes),
+        "grad_accum": {
+            "per_leaf": {"pallas_launches": spec.num_leaves,
+                         "time_s": t_accum_leaf / 1e6},
+            "bucketed": {"pallas_launches": spec.num_buckets,
+                         "time_s": t_accum_bucket / 1e6},
+        },
+        "optimizer_update": {
+            "unfused": {"pallas_launches": 0,
+                        "time_s": t_unfused / 1e6,
+                        "transient_bytes": memory_model.update_transient_bytes(
+                            int(pbytes))},
+            "fused_flat": {"pallas_launches": spec.num_buckets,
+                           "time_s_interpret": t_fused / 1e6,
+                           "time_s": t_fused_oracle / 1e6,
+                           "transient_bytes": 0},
+        },
+        "step5_speedup_vs_unfused": t_unfused / t_fused_oracle,
+        "accum_launch_reduction": spec.num_leaves / spec.num_buckets,
+    }
+    emit(f"update/{name}/accum_per_leaf", t_accum_leaf,
+         f"launches={spec.num_leaves}")
+    emit(f"update/{name}/accum_bucketed", t_accum_bucket,
+         f"launches={spec.num_buckets}")
+    emit(f"update/{name}/step5_unfused", t_unfused,
+         f"transient_bytes={res['optimizer_update']['unfused']['transient_bytes']}")
+    emit(f"update/{name}/step5_fused_flat", t_fused_oracle,
+         f"speedup={res['step5_speedup_vs_unfused']:.2f}x (interpret "
+         f"{t_fused:.0f}us)")
+    return res
+
+
+def update_main(quick: bool = True, out_path: str = "BENCH_update.json"):
+    """Update-path benchmark (``--update-bench``): per-leaf vs flat-bucketed
+    step ❹/❺ on a real (stacked, few-leaf) config and a many-leaf tree,
+    plus the memory-model admission delta the fused path buys."""
+    iters = 3 if quick else 10
+    opt = optim.sgd(0.01, momentum=0.9, weight_decay=5e-4)
+    cfg = configs.get_reduced("qwen2-1.5b")
+    real = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    results = {"benchmark": "update_path", "configs": {}}
+    results["configs"]["qwen2-1.5b-reduced"] = _bench_update_path(
+        "qwen2-1.5b-reduced", real, opt, iters)
+    results["configs"]["synthetic-manyleaf"] = _bench_update_path(
+        "synthetic-manyleaf", many_leaf_params(32 if quick else 96),
+        opt, iters)
+
+    # what the eliminated transient buys: the largest micro-batch the
+    # memory model admits at a budget the unfused update just overflows
+    seq, mini = 64, 256
+    est = memory_model.estimate(cfg, seq)
+    unfused_admit = memory_model.suggest_micro_batch_size(
+        cfg, seq, mini, budget_bytes=est.total(8)) or 0
+    budget = est.total(2 * max(unfused_admit, 1)) - 1
+    results["memory_model"] = {
+        "arch": "qwen2-1.5b-reduced", "seq": seq,
+        "budget_bytes": int(budget),
+        "update_transient_bytes_unfused": est.update_transient_bytes,
+        "micro_batch_admitted_unfused": memory_model.suggest_micro_batch_size(
+            cfg, seq, mini, budget_bytes=budget) or 0,
+        "micro_batch_admitted_fused": memory_model.suggest_micro_batch_size(
+            cfg, seq, mini, budget_bytes=budget, fused_update=True) or 0,
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", action="store_true",
                     help="run the input-pipeline overlap benchmark and "
                          "write BENCH_pipeline.json")
+    ap.add_argument("--update-bench", action="store_true",
+                    help="run the update-path benchmark and write "
+                         "BENCH_update.json")
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--out", default=None)
     a = ap.parse_args()
     if a.pipeline:
-        pipeline_main(quick=a.quick, out_path=a.out)
+        pipeline_main(quick=a.quick, out_path=a.out or "BENCH_pipeline.json")
+    elif a.update_bench:
+        update_main(quick=a.quick, out_path=a.out or "BENCH_update.json")
     else:
         main(quick=a.quick)

@@ -10,6 +10,12 @@ The model (per device, for the transformer families):
   params           P/ (tp * fsdp)                       * 4 B (fp32 master)
   grads (accum)    same as params                       * 4 B
   optimizer state  k_opt * params bytes (SGD-m: 1, Adam: 2)
+  update transient step-❺ peak on top of the steady state: the unfused
+                   update materializes the full ``updates`` tree plus
+                   fresh momentum/m/v trees that coexist with the old
+                   state until the swap — (1 + k_opt) * params bytes.
+                   The fused flat path (``kernels/fused_update.py``,
+                   in-place aliasing + donation) eliminates it.
   activations      per-period remat boundary + live period working set,
                    proportional to micro_batch * seq (the MBS knob)
 """
@@ -22,6 +28,44 @@ from ..models.config import ModelConfig
 
 V5E_HBM_BYTES = 16 * 1024 ** 3
 
+# optimizer-state slots per optimizer (momentum / m+v trees)
+OPT_SLOTS = {"sgd": 1, "sgd_plain": 0, "adam": 2, "adamw": 2}
+
+
+def _resolve_slots(optimizer: str, opt_slots: Optional[int]) -> int:
+    if opt_slots is not None:
+        return opt_slots
+    try:
+        return OPT_SLOTS[optimizer]
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer {optimizer!r}; known: {sorted(OPT_SLOTS)} "
+            "(or pass opt_slots explicitly)")
+
+
+def update_transient_bytes(params_bytes: int, optimizer: str = "sgd",
+                           fused: bool = False, *,
+                           opt_slots: Optional[int] = None) -> int:
+    """Peak transient bytes of paper step ❺ beyond the steady state.
+
+    The unfused reference (``optimizer.update`` + ``apply_update``) holds
+    the full fp32 ``updates`` tree plus the freshly built optimizer-state
+    trees while the old ones are still live. The fused flat update path
+    writes params and opt state in place (``input_output_aliases`` +
+    donation), leaving only O(kernel block) scratch — counted as zero.
+
+    Fused-path caveat: the flat step still *gathers* the param/opt-state
+    trees into contiguous buckets (and scatters them back), which is a
+    copy at the XLA level. Those copies are counted as zero because they
+    are live only at step ❺, when the donated split batch and the
+    micro-batch activations — whose bytes this model already budgets and
+    which dominate them at any admitted micro-batch size — have been
+    freed for reuse; keeping state flat *across* steps (eliminating the
+    gather entirely) is the noted next step in DESIGN.md §Update path."""
+    if fused:
+        return 0
+    return (1 + _resolve_slots(optimizer, opt_slots)) * params_bytes
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryEstimate:
@@ -30,10 +74,16 @@ class MemoryEstimate:
     opt_bytes: int
     activation_bytes_per_sample: int  # per micro-batch sample, at given seq
     fixed_bytes: int
+    update_transient_bytes: int = 0  # step-❺ peak (0 for the fused path)
 
     def total(self, micro_batch: int) -> int:
+        """Conservative peak-bytes upper bound: sums the forward/backward
+        activation peak and the step-❺ update transient even though the
+        two phases do not coexist (activations are freed before the
+        update). Summing can under-admit a micro-batch but never
+        over-admits one — the safe direction for an OOM model."""
         return (self.params_bytes + self.grads_bytes + self.opt_bytes
-                + self.fixed_bytes
+                + self.fixed_bytes + self.update_transient_bytes
                 + self.activation_bytes_per_sample * micro_batch)
 
 
@@ -65,29 +115,42 @@ def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
 
 
 def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
-             opt_slots: int = 1, act_bytes: int = 2,
-             remat: bool = True) -> MemoryEstimate:
+             opt_slots: Optional[int] = None, act_bytes: int = 2,
+             remat: bool = True, optimizer: str = "sgd",
+             fused_update: bool = False) -> MemoryEstimate:
+    """``optimizer`` names the update rule (state-slot count + step-❺
+    transient); ``fused_update=True`` models the flat in-place path
+    (``--executor flat``) whose update transient is eliminated. An explicit
+    ``opt_slots`` overrides the per-optimizer slot count."""
     p_bytes = cfg.param_count() * 4 // (tp * fsdp)
+    slots = _resolve_slots(optimizer, opt_slots)
     return MemoryEstimate(
         params_bytes=p_bytes,
         grads_bytes=p_bytes,
-        opt_bytes=opt_slots * p_bytes,
+        opt_bytes=slots * p_bytes,
         activation_bytes_per_sample=activation_bytes_per_sample(
             cfg, seq, act_bytes, remat) // tp,
         fixed_bytes=64 * 1024 ** 2,
+        update_transient_bytes=update_transient_bytes(
+            p_bytes, optimizer, fused_update, opt_slots=slots),
     )
 
 
 def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
                              budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
-                             fsdp: int = 1, opt_slots: int = 1,
+                             fsdp: int = 1, opt_slots: Optional[int] = None,
                              act_bytes: int = 2,
-                             remat: bool = True) -> Optional[int]:
+                             remat: bool = True, optimizer: str = "sgd",
+                             fused_update: bool = False) -> Optional[int]:
     """Largest power-of-two micro-batch (≤ mini_batch) that fits the budget.
     Returns None if even micro-batch 1 exceeds the budget (the model itself
-    does not fit — MBS cannot help; that needs more model parallelism)."""
+    does not fit — MBS cannot help; that needs more model parallelism).
+    The step-❺ transient term (see :func:`update_transient_bytes`) stops
+    this from admitting micro-batches that would OOM at the update; with
+    ``fused_update=True`` that headroom is reclaimed for activations."""
     est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
-                   act_bytes=act_bytes, remat=remat)
+                   act_bytes=act_bytes, remat=remat, optimizer=optimizer,
+                   fused_update=fused_update)
     best = None
     m = 1
     while m <= mini_batch:
@@ -99,13 +162,15 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
 
 def max_minibatch_without_mbs(cfg: ModelConfig, seq: int, *,
                               budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
-                              fsdp: int = 1, opt_slots: int = 1,
+                              fsdp: int = 1, opt_slots: Optional[int] = None,
                               act_bytes: int = 2,
-                              remat: bool = True) -> int:
+                              remat: bool = True, optimizer: str = "sgd",
+                              fused_update: bool = False) -> int:
     """The paper's "w/o MBS" failure point: the largest mini-batch whose
     whole-batch activations fit (beyond it, the run 'Fails')."""
     est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
-                   act_bytes=act_bytes, remat=remat)
+                   act_bytes=act_bytes, remat=remat, optimizer=optimizer,
+                   fused_update=fused_update)
     m = 0
     while est.total(m + 1) <= budget_bytes:
         m += 1

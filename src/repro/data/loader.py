@@ -21,15 +21,19 @@ class MBSLoader:
     stacks ready for the compiled MBS train step."""
 
     def __init__(self, dataset, mini_batch_size: int, micro_batch_size: int,
-                 *, prefetch: int = 2, seed: int = 0, **batch_kw):
+                 *, prefetch: int = 2, seed: int = 0,
+                 normalization: str = "paper", **batch_kw):
         self.dataset = dataset
         self.mini_batch_size = mini_batch_size
         self.micro_batch_size = micro_batch_size
         self.prefetch = prefetch
         self.seed = seed
         self.batch_kw = batch_kw
+        # weighted datasets need normalization="exact" — "paper" cannot
+        # weight non-uniform samples correctly and plan.split refuses them
         self.plan = plan_mbs(mini_batch_size,
-                             micro_batch_size=micro_batch_size)
+                             micro_batch_size=micro_batch_size,
+                             normalization=normalization)
         self._pipeline = Pipeline(dataset, self.plan, prefetch=prefetch,
                                   stage=False, seed=seed, batch_kw=batch_kw)
 

@@ -16,12 +16,19 @@ Layer 3 — input pipeline + loop (``pipeline.py`` / ``trainer.py``): the
 batches with background prefetch and double buffering; the
 :class:`Trainer` owns the step loop — async metrics readback, periodic
 checkpointing, sharding-aware resume. See DESIGN.md §Input pipeline.
+
+Layer 4 — fused flat update path (``flat.py`` + ``kernels/fused_update.py``):
+:class:`FlatSpec` buckets the param/grad/opt-state trees into contiguous
+per-dtype 1-D buffers so step ❹ accumulates with one Pallas launch per
+bucket and step ❺ runs through in-place fused optimizer kernels with
+donation — no ``updates``/opt-state transients. See DESIGN.md §Update path.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
+from .flat import FlatSpec, LeafSlot  # noqa: F401
 from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
-                        FusedAccumExecutor, StreamingExecutor,
-                        accumulate_gradients, get_executor,
-                        make_baseline_train_step)
+                        FlatFusedExecutor, FusedAccumExecutor,
+                        StreamingExecutor, accumulate_gradients,
+                        get_executor, make_baseline_train_step)
 from .pipeline import Pipeline, PipelineStats  # noqa: F401
 from .trainer import Trainer  # noqa: F401

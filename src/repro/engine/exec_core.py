@@ -20,7 +20,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.grad_accum import grad_accum_tree
+from ..kernels import fused_update
+from ..kernels.grad_accum import grad_accum_buckets, grad_accum_tree
+from .flat import FlatSpec
 
 
 def denominators(micro_batches) -> Tuple[int, jnp.ndarray]:
@@ -111,6 +113,81 @@ def apply_update(optimizer, grads, opt_state, params):
     new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
                               params, updates)
     return new_params, new_opt_state
+
+
+def accumulate_flat(acc_buffers, spec: FlatSpec, grads, *, scale=None,
+                    interpret: Optional[bool] = None,
+                    block: Optional[int] = None):
+    """Bucketed step ❹: route a micro-batch's gradient tree into the flat
+    ``accum_dtype`` buffers — one masked Pallas launch per dtype bucket
+    (O(num_buckets), vs ``accumulate(fused=True)``'s O(num_leaves))."""
+    gbufs = spec.flatten(grads, dtype=acc_buffers[0].dtype)
+    kw = {"interpret": interpret}
+    if block is not None:
+        kw["block"] = block
+    return grad_accum_buckets(acc_buffers, gbufs,
+                              1.0 if scale is None else scale, **kw)
+
+
+def apply_update_flat(optimizer, spec: FlatSpec, acc_buffers, opt_state,
+                      params, *, interpret: Optional[bool] = None,
+                      block: Optional[int] = None):
+    """Step ❺ over flat buffers: one in-place Pallas launch per bucket.
+
+    Reads the fp32 flat accumulator and writes params + optimizer state
+    through ``kernels/fused_update.py`` (``input_output_aliases`` on every
+    state buffer) — no ``updates`` tree, no fresh momentum/``m``/``v``
+    trees, and the global-norm clip scale (``FusedUpdateSpec.clip_norm``)
+    is computed from the flat accumulator and carried into the kernel
+    instead of materializing a scaled gradient tree. Optimizers without a
+    ``fused`` hook fall back to the reference tree update."""
+    fs = getattr(optimizer, "fused", None)
+    if fs is None:
+        return apply_update(optimizer, spec.unflatten(acc_buffers, cast=False),
+                            opt_state, params)
+    kw = {"interpret": interpret}
+    if block is not None:
+        kw["block"] = block
+    gscale = jnp.asarray(1.0, jnp.float32)
+    if fs.clip_norm is not None:
+        norm = global_grad_norm(acc_buffers)
+        gscale = jnp.minimum(1.0, fs.clip_norm / (norm + 1e-12))
+    step = opt_state["step"]
+    lr_t = fs.schedule(step)
+    flat_p = spec.flatten(params)
+
+    if fs.kind == "sgd":
+        if fs.momentum:
+            flat_m = spec.flatten(opt_state["mom"])
+            outs = [fused_update.fused_sgd(
+                p, g, m, lr_t, gscale, momentum=fs.momentum,
+                weight_decay=fs.weight_decay, nesterov=fs.nesterov, **kw)
+                for p, g, m in zip(flat_p, acc_buffers, flat_m)]
+            return (spec.unflatten([o[0] for o in outs]),
+                    {"mom": spec.unflatten([o[1] for o in outs]),
+                     "step": step + 1})
+        new_p = [fused_update.fused_sgd(
+            p, g, None, lr_t, gscale, weight_decay=fs.weight_decay, **kw)
+            for p, g in zip(flat_p, acc_buffers)]
+        return spec.unflatten(new_p), {"mom": None, "step": step + 1}
+
+    if fs.kind == "adam":
+        step1 = step + 1
+        bc1 = 1 - fs.b1 ** step1.astype(jnp.float32)
+        bc2 = 1 - fs.b2 ** step1.astype(jnp.float32)
+        flat_m = spec.flatten(opt_state["m"])
+        flat_v = spec.flatten(opt_state["v"])
+        outs = [fused_update.fused_adam(
+            p, g, m, v, lr_t, bc1, bc2, gscale, b1=fs.b1, b2=fs.b2,
+            eps=fs.eps, weight_decay=fs.weight_decay,
+            decoupled=fs.decoupled, **kw)
+            for p, g, m, v in zip(flat_p, acc_buffers, flat_m, flat_v)]
+        return (spec.unflatten([o[0] for o in outs]),
+                {"m": spec.unflatten([o[1] for o in outs]),
+                 "v": spec.unflatten([o[2] for o in outs]),
+                 "step": step1})
+
+    raise ValueError(f"unknown fused update kind {fs.kind!r}")
 
 
 def global_grad_norm(grads) -> jnp.ndarray:

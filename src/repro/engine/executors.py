@@ -13,6 +13,16 @@ All three run the same Algorithm 1 through the shared core in
     routed through the Pallas kernel ``kernels/grad_accum.py``: the 1/N_Sμ
     loss-normalization scale is fused into the accumulate (paper Fig. 2
     step ❹ + eq. 14) with in-place aliasing on the fp32 accumulator.
+  * :class:`FlatFusedExecutor` — the fused flat-buffer update path: the
+    accumulator lives in dtype-bucketed contiguous 1-D buffers
+    (``engine/flat.py``) for the whole scan, so step ❹ is one masked
+    Pallas launch per *bucket* (not per leaf) and step ❺ runs through the
+    in-place fused optimizer kernels (``kernels/fused_update.py``) with no
+    ``updates``/opt-state transients (DESIGN.md §Update path).
+
+Compiled executors donate params/opt-state/split-batch buffers at the
+``step_split`` jit boundary (construct with ``donate=False`` for callers
+that must reuse inputs across calls — see DESIGN.md for the contract).
 
 New strategies (async multi-device, serving) implement the same
 :class:`Executor` surface and register in :data:`EXECUTORS`.
@@ -26,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import exec_core
+from . import exec_core, flat
 from .plan import MBSConfig, MBSPlan
 
 
@@ -92,17 +102,25 @@ def _scan_accumulate(loss_fn, plan: MBSPlan, fused: bool, params,
 
 
 class _CompiledExecutorBase:
-    """Common machinery for scan-based (jit-compiled) executors."""
+    """Common machinery for scan-based (jit-compiled) executors.
+
+    ``donate=True`` (default) donates params/opt-state/split-batch at the
+    ``step_split`` jit boundary: callers must thread the returned state
+    (the ``Trainer`` does) and never touch a donated buffer again. Pass
+    ``donate=False`` when inputs are reused across calls (A/B comparisons,
+    benchmarks timing the same state repeatedly)."""
     name = "base"
     fused = False
 
     def __init__(self, loss_fn, optimizer, plan, *,
-                 interpret: Optional[bool] = None, block: Optional[int] = None):
+                 interpret: Optional[bool] = None, block: Optional[int] = None,
+                 donate: bool = True):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.plan = _as_plan(plan)
         self._interpret = interpret
         self._block = block
+        self._donate = donate
         self._step_jit = None
         self._grads_jit = None
 
@@ -130,9 +148,14 @@ class _CompiledExecutorBase:
     def step_split(self, params, opt_state, micro_batches):
         """Jitted step over an already-split ``(N_Sμ, N_μ, ...)`` batch —
         the entry used by the ``Trainer``/``Pipeline`` pair (staging done
-        upstream). Metrics come back as device scalars (no host sync)."""
+        upstream). Metrics come back as device scalars (no host sync).
+        Inputs are donated (unless constructed with ``donate=False``): the
+        params/opt-state buffers are reused in place for the new state and
+        the spent split batch is freed for step-❺ temporaries."""
         if self._step_jit is None:
-            self._step_jit = jax.jit(self.make_train_step())
+            self._step_jit = jax.jit(
+                self.make_train_step(),
+                donate_argnums=(0, 1, 2) if self._donate else ())
         return self._step_jit(params, opt_state, micro_batches)
 
     def step(self, params, opt_state, minibatch):
@@ -151,6 +174,77 @@ class FusedAccumExecutor(_CompiledExecutorBase):
     ``interpret`` defaults to True off-TPU (set explicitly for tests)."""
     name = "fused"
     fused = True
+
+
+class FlatFusedExecutor(_CompiledExecutorBase):
+    """Fused flat-buffer update path (DESIGN.md §Update path).
+
+    The gradient accumulator is kept as dtype-bucketed contiguous 1-D
+    buffers (``engine/flat.py``) across the whole micro-batch scan, so the
+    scaled accumulate (step ❹, normalization deferred into the kernel) is
+    one masked Pallas launch per *bucket* instead of one per leaf; the
+    optimizer update (step ❺) reads the fp32 accumulator and writes params
+    + opt state in one in-place pass through ``kernels/fused_update.py``
+    (``input_output_aliases`` everywhere, global-norm clip carried in as a
+    scalar). Combined with ``step_split``'s donation this eliminates the
+    ``updates`` tree and all optimizer-state transients — see
+    ``core/memory_model.update_transient_bytes``. ``interpret`` defaults
+    to True off-TPU."""
+    name = "flat"
+    fused = True  # raw micro losses; normalization fused into the accumulate
+
+    def _accumulated_flat(self, params, micro_batches):
+        """Like ``_scan_accumulate`` but the carry holds flat buckets."""
+        plan = self.plan
+        spec = flat.FlatSpec.for_tree(params)  # static at trace time
+        n_s, total_valid = exec_core.denominators(micro_batches)
+        scale = exec_core.deferred_scale(plan.normalization, n_s, total_valid)
+        mb0 = jax.tree.map(lambda x: x[0], micro_batches)
+        metrics0 = exec_core.metrics_zeros(self.loss_fn, plan.normalization,
+                                           params, mb0)
+
+        def micro_step(carry, mb):
+            acc, loss_sum, metric_sum = carry
+            lfn = exec_core.micro_loss_fn(self.loss_fn, plan.normalization,
+                                          n_s, total_valid, mb,
+                                          defer_scale=True)
+            grad_fn = jax.value_and_grad(lfn, has_aux=True)
+            if plan.remat_micro_step:
+                grad_fn = jax.checkpoint(grad_fn)
+            (l, metrics), grads = grad_fn(params)
+            acc = exec_core.accumulate_flat(acc, spec, grads, scale=scale,
+                                            interpret=self._interpret,
+                                            block=self._block)
+            metric_sum = jax.tree.map(lambda s, m: s + m / n_s,
+                                      metric_sum, metrics)
+            return (acc, loss_sum + l, metric_sum), None
+
+        (acc, loss, metric_sum), _ = jax.lax.scan(
+            micro_step,
+            (spec.zeros(plan.accum_dtype), jnp.zeros((), jnp.float32),
+             metrics0),
+            micro_batches, unroll=plan.unroll)
+        return spec, acc, loss * scale, metric_sum
+
+    def make_train_step(self) -> Callable:
+        def train_step(params, opt_state, micro_batches):
+            spec, acc, loss, metric_sum = self._accumulated_flat(
+                params, micro_batches)
+            new_params, new_opt = exec_core.apply_update_flat(
+                self.optimizer, spec, acc, opt_state, params,
+                interpret=self._interpret, block=self._block)
+            # grad_norm straight off the flat buffers (a tuple is a pytree)
+            return new_params, new_opt, exec_core.finalize_metrics(
+                metric_sum, loss, acc)
+        return train_step
+
+    def gradients(self, params, micro_batches):
+        if self._grads_jit is None:
+            def run(p, mb):
+                spec, acc, loss, _ = self._accumulated_flat(p, mb)
+                return spec.unflatten(acc, cast=False), loss
+            self._grads_jit = jax.jit(run)
+        return self._grads_jit(params, micro_batches)
 
 
 class StreamingExecutor:
@@ -176,10 +270,13 @@ class StreamingExecutor:
         norm = self.plan.normalization
 
         @jax.jit
-        def _micro_grad(params, mb, n_s, total_valid):
+        def _micro_grad_accum(params, acc, loss_sum, mb, n_s, total_valid):
+            # grad + accumulate in ONE dispatch (the gradients-only analogue
+            # of _micro_step; a separate _accumulate launch per micro-batch
+            # used to double the dispatch count)
             lfn = exec_core.micro_loss_fn(loss_fn, norm, n_s, total_valid, mb)
-            (l, metrics), g = jax.value_and_grad(lfn, has_aux=True)(params)
-            return l, g, metrics
+            (l, _), g = jax.value_and_grad(lfn, has_aux=True)(params)
+            return exec_core.accumulate(acc, g), loss_sum + l
 
         @jax.jit
         def _micro_step(params, carry, mb, n_s, total_valid):
@@ -193,16 +290,11 @@ class StreamingExecutor:
             return acc, loss_sum + l, metric_sum
 
         @jax.jit
-        def _accumulate(acc, g):  # paper step ❹ (accumulator dtype wins)
-            return exec_core.accumulate(acc, g)
-
-        @jax.jit
         def _update(params, opt_state, acc):  # paper step ❺
             return exec_core.apply_update(optimizer, acc, opt_state, params)
 
-        self._micro_grad = _micro_grad
+        self._micro_grad_accum = _micro_grad_accum
         self._micro_step = _micro_step
-        self._accumulate = _accumulate
         self._update = _update
 
     def make_train_step(self) -> Callable:
@@ -215,16 +307,16 @@ class StreamingExecutor:
         return jnp.asarray(float(n_s), jnp.float32), total_valid
 
     def gradients(self, params, micro_batches):
-        """Eager accumulation over an already-split batch (device arrays)."""
+        """Eager accumulation over an already-split batch (device arrays) —
+        one jitted dispatch per micro-batch (grad + accumulate fused)."""
         n_s = jax.tree.leaves(micro_batches)[0].shape[0]
         n_s_f, total_valid = self._denoms(micro_batches)
         acc = exec_core.init_accum(params, self.plan.accum_dtype)
         loss = jnp.zeros((), jnp.float32)
         for i in range(n_s):
             mb = jax.tree.map(lambda x: x[i], micro_batches)
-            l, g, _ = self._micro_grad(params, mb, n_s_f, total_valid)
-            acc = self._accumulate(acc, g)
-            loss = loss + l
+            acc, loss = self._micro_grad_accum(params, acc, loss, mb,
+                                               n_s_f, total_valid)
         return acc, loss
 
     def _run(self, params, opt_state, micro_iter, n_s: int, split
@@ -278,6 +370,7 @@ EXECUTORS: Dict[str, Type] = {
     CompiledScanExecutor.name: CompiledScanExecutor,
     StreamingExecutor.name: StreamingExecutor,
     FusedAccumExecutor.name: FusedAccumExecutor,
+    FlatFusedExecutor.name: FlatFusedExecutor,
 }
 
 

@@ -1,0 +1,111 @@
+"""Flat-buffer layer: pytrees ⇄ contiguous dtype-bucketed 1-D buffers.
+
+The update step (paper Fig. 2 steps ❹–❺) is leaf-count-bound, not
+byte-bound: ``grad_accum_tree`` pays one ``pallas_call`` per parameter
+leaf and the unfused optimizer materializes per-leaf transients. A
+:class:`FlatSpec` collapses the param/grad/opt-state trees into one
+contiguous 1-D buffer **per dtype** ("bucket"), so the accumulate and the
+fused optimizer kernels launch O(num_buckets) times per step instead of
+O(num_leaves).
+
+Contract:
+
+  * **stable leaf ordering** — buckets follow ``jax.tree.flatten`` order
+    (deterministic for a fixed tree structure); a spec built from one tree
+    round-trips any tree with the same structure/shapes/dtypes.
+  * **dtype bucketing** — leaves sharing a dtype share a bucket (buckets
+    ordered by first appearance). Gradient/accumulator buffers reuse the
+    *param* bucket partitioning but may carry a different dtype
+    (``flatten(grads, dtype=accum_dtype)``), so offsets always line up
+    with the param buffers inside the fused kernels.
+  * **no padded copies** — buckets are exact-sized; the kernels mask the
+    ragged final block through the grid (``kernels/grad_accum.py``)
+    instead of ``jnp.pad``-ing operands.
+
+All methods are trace-safe: a spec is built from abstract shapes/dtypes
+(at trace time when called on tracers) and holds only Python ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside the flat buffers."""
+    bucket: int
+    offset: int
+    size: int
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Layout of one pytree as dtype-bucketed contiguous 1-D buffers."""
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    bucket_sizes: Tuple[int, ...]
+    bucket_dtypes: Tuple[Any, ...]
+
+    @classmethod
+    def for_tree(cls, tree) -> "FlatSpec":
+        leaves, treedef = jax.tree.flatten(tree)
+        buckets: dict = {}  # canonical dtype -> bucket index (first appearance)
+        fill: list = []  # bytes filled per bucket so far (in elements)
+        slots = []
+        for leaf in leaves:
+            dt = jnp.dtype(leaf.dtype)
+            if dt not in buckets:
+                buckets[dt] = len(fill)
+                fill.append(0)
+            b = buckets[dt]
+            size = int(leaf.size) if hasattr(leaf, "size") else 1
+            slots.append(LeafSlot(b, fill[b], size, tuple(leaf.shape), dt))
+            fill[b] += size
+        return cls(treedef, tuple(slots), tuple(fill),
+                   tuple(buckets))  # dict preserves insertion order
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.slots)
+
+    def zeros(self, dtype) -> Tuple[jnp.ndarray, ...]:
+        """Zero accumulator buffers: param bucket partitioning, one dtype."""
+        return tuple(jnp.zeros((n,), dtype) for n in self.bucket_sizes)
+
+    def flatten(self, tree, dtype: Optional[Any] = None
+                ) -> Tuple[jnp.ndarray, ...]:
+        """Tree → bucketed 1-D buffers. ``dtype`` casts every leaf (used to
+        route gradients into the ``accum_dtype`` buffers); default keeps
+        each bucket in its own dtype."""
+        leaves = jax.tree.flatten(tree)[0]
+        if len(leaves) != len(self.slots):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, spec expects {len(self.slots)}")
+        parts: list = [[] for _ in self.bucket_sizes]
+        for leaf, slot in zip(leaves, self.slots):
+            flat = jnp.asarray(leaf).reshape(-1)
+            parts[slot.bucket].append(
+                flat if dtype is None else flat.astype(dtype))
+        return tuple(p[0] if len(p) == 1 else jnp.concatenate(p)
+                     for p in parts)
+
+    def unflatten(self, buffers: Sequence[jnp.ndarray], *,
+                  cast: bool = True):
+        """Bucketed buffers → tree. ``cast=False`` keeps the buffer dtype
+        on every leaf (for gradient trees held in ``accum_dtype``)."""
+        leaves = []
+        for slot in self.slots:
+            leaf = buffers[slot.bucket][
+                slot.offset:slot.offset + slot.size].reshape(slot.shape)
+            leaves.append(leaf.astype(slot.dtype) if cast else leaf)
+        return jax.tree.unflatten(self.treedef, leaves)

@@ -159,8 +159,9 @@ def plan_mbs(mini_batch_size: int, *,
              normalization: str = "paper",
              accum_dtype: Any = jnp.float32,
              remat_micro_step: bool = False, unroll: int = 1,
-             tp: int = 1, fsdp: int = 1, opt_slots: int = 1,
-             act_bytes: int = 2, remat: bool = True) -> MBSPlan:
+             tp: int = 1, fsdp: int = 1, opt_slots: Optional[int] = None,
+             act_bytes: int = 2, remat: bool = True,
+             optimizer: str = "sgd", fused_update: bool = False) -> MBSPlan:
     """Produce an :class:`MBSPlan` for one training setup.
 
     Micro-batch size resolution, in priority order:
@@ -169,7 +170,11 @@ def plan_mbs(mini_batch_size: int, *,
       3. the analytic memory model (needs ``model_cfg`` + ``seq_len``):
          largest power-of-two micro-batch fitting ``budget_bytes``
          (default: one v5e HBM) — the paper's "experimentally determined"
-         size (§4.3.2), computed instead of searched. Falls back to
+         size (§4.3.2), computed instead of searched. The model includes a
+         step-❺ transient term for ``optimizer`` (see
+         ``memory_model.update_transient_bytes``); ``fused_update=True``
+         (the ``flat`` executor's in-place kernels) drops it, admitting
+         micro-batches the unfused update would OOM on. Falls back to
          micro-batch 1 when even that does not fit (more model parallelism
          is needed; MBS cannot shrink the model itself);
       4. no model config at all → one micro-batch (no MBS).
@@ -191,7 +196,8 @@ def plan_mbs(mini_batch_size: int, *,
             model_cfg, seq_len, mini_batch_size,
             budget_bytes=budget_bytes or memory_model.V5E_HBM_BYTES,
             tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
-            remat=remat) or 1
+            remat=remat, optimizer=optimizer,
+            fused_update=fused_update) or 1
         auto = True
     else:
         micro = mini_batch_size

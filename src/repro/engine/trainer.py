@@ -79,9 +79,13 @@ class Trainer:
                                       shardings=self.state_shardings)
         except KeyError:
             # legacy params-only checkpoint: restore what is there and
-            # keep the caller's (fresh) optimizer state
-            pshard = (self.state_shardings or {}).get("params") \
-                if isinstance(self.state_shardings, dict) else None
+            # keep the caller's (fresh) optimizer state. A non-dict
+            # state_shardings (one sharding for every leaf) applies as-is —
+            # dropping it would hand the step bare host numpy arrays and
+            # silently re-place them with default sharding.
+            pshard = (self.state_shardings.get("params")
+                      if isinstance(self.state_shardings, dict)
+                      else self.state_shardings)
             params = checkpoint.restore(self.ckpt_dir, params_template,
                                         step, shardings=pshard)
             tree = {"params": params, "opt_state": opt_state_template}

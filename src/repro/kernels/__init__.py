@@ -1,4 +1,5 @@
 """Pallas kernels. Import the jit'd wrappers from ``repro.kernels.ops``
 (the submodules flash_attention/cross_entropy/grad_accum hold the raw
 pallas_call implementations; ref holds the pure-jnp oracles)."""
-from . import cross_entropy, flash_attention, grad_accum, ops, ref  # noqa: F401
+from . import (cross_entropy, flash_attention, fused_update,  # noqa: F401
+               grad_accum, ops, ref)

@@ -1,0 +1,162 @@
+"""Fused in-place optimizer updates as Pallas TPU kernels (paper step ❺).
+
+The unfused reference (``optim.Optimizer.update`` + ``exec_core.apply_update``)
+materializes a full ``updates`` tree plus fresh momentum/``m``/``v`` trees on
+top of the steady state — exactly the transient that bounds the batch size at
+the update step (paper Fig. 2 steps ❹–❺ / eq. 14). These kernels read the
+fp32 flat gradient accumulator and write new params + optimizer state in ONE
+pass with ``input_output_aliases`` on every state buffer, so step ❺ runs with
+O(block) scratch instead of O(params) transients.
+
+Operands are the engine's dtype-bucketed 1-D flat buffers
+(``engine/flat.py``): one launch per bucket, ragged tails masked by the grid
+(no padded copies). The arithmetic mirrors ``optim.sgd``/``optim.adam``
+cast-for-cast so the fused path is bit-equivalent to the unfused reference
+for matching dtypes.
+
+Traced scalars (learning rate, global-norm clip scale, Adam bias
+corrections) arrive through a small fp32 operand broadcast to every block;
+static hyperparameters (momentum, decay, betas, flags) are baked into the
+kernel closure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .grad_accum import BUCKET_BLOCK
+
+
+def _interpret_default(interpret: Optional[bool]) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _specs(n_bufs: int, block: int):
+    """(scalars, n_bufs data operands) block specs for a 1-D launch."""
+    return ([pl.BlockSpec((4,), lambda i: (0,))]
+            + [pl.BlockSpec((block,), lambda i: (i,))] * n_bufs)
+
+
+def _scalars(*vals) -> jnp.ndarray:
+    padded = list(vals) + [0.0] * (4 - len(vals))
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in padded])
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum, coupled weight decay, nesterov)
+# ---------------------------------------------------------------------------
+
+def _sgd_mom_kernel(momentum, weight_decay, nesterov,
+                    s_ref, p_ref, g_ref, m_ref, p_out, m_out):
+    lr, gscale = s_ref[0], s_ref[1]
+    p = p_ref[...]
+    g = g_ref[...] * gscale.astype(g_ref.dtype)
+    if weight_decay:
+        g = g + weight_decay * p.astype(g.dtype)
+    m = momentum * m_ref[...] + g.astype(m_ref.dtype)
+    eff = g + momentum * m if nesterov else m
+    u = -lr * eff.astype(jnp.float32)
+    p_out[...] = p + u.astype(p_out.dtype)
+    m_out[...] = m
+
+
+def _sgd_kernel(weight_decay, s_ref, p_ref, g_ref, p_out):
+    lr, gscale = s_ref[0], s_ref[1]
+    p = p_ref[...]
+    g = g_ref[...] * gscale.astype(g_ref.dtype)
+    if weight_decay:
+        g = g + weight_decay * p.astype(g.dtype)
+    u = -lr * g.astype(jnp.float32)
+    p_out[...] = p + u.astype(p_out.dtype)
+
+
+def fused_sgd(params, grads, mom, lr, clip_scale=1.0, *,
+              momentum: float = 0.0, weight_decay: float = 0.0,
+              nesterov: bool = False, block: int = BUCKET_BLOCK,
+              interpret: Optional[bool] = None):
+    """One in-place SGD(-momentum) step over a flat bucket.
+
+    params/mom: (N,) in the bucket dtype; grads: (N,) accumulator (fp32).
+    Returns (new_params, new_mom) — or new_params alone when ``mom`` is
+    None (momentum-less SGD has no state buffer). Both outputs alias their
+    input buffers; donate the inputs at the jit boundary to realize the
+    in-place update."""
+    N = params.shape[0]
+    interpret = _interpret_default(interpret)
+    block = min(block, N)
+    grid = (pl.cdiv(N, block),)
+    scal = _scalars(lr, clip_scale)
+    if mom is None:
+        return pl.pallas_call(
+            functools.partial(_sgd_kernel, weight_decay),
+            grid=grid,
+            in_specs=_specs(2, block),
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((N,), params.dtype),
+            input_output_aliases={1: 0},
+            interpret=interpret,
+        )(scal, params, grads)
+    return tuple(pl.pallas_call(
+        functools.partial(_sgd_mom_kernel, momentum, weight_decay, nesterov),
+        grid=grid,
+        in_specs=_specs(3, block),
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((N,), params.dtype),
+                   jax.ShapeDtypeStruct((N,), mom.dtype)],
+        input_output_aliases={1: 0, 3: 1},
+        interpret=interpret,
+    )(scal, params, grads, mom))
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def _adam_kernel(b1, b2, eps, weight_decay, decoupled,
+                 s_ref, p_ref, g_ref, m_ref, v_ref, p_out, m_out, v_out):
+    lr, gscale, bc1, bc2 = s_ref[0], s_ref[1], s_ref[2], s_ref[3]
+    p = p_ref[...]
+    g = g_ref[...] * gscale.astype(g_ref.dtype)
+    if weight_decay and not decoupled:
+        g = g + weight_decay * p.astype(g.dtype)
+    m = b1 * m_ref[...] + (1 - b1) * g.astype(m_ref.dtype)
+    v = b2 * v_ref[...] + (1 - b2) * jnp.square(g.astype(v_ref.dtype))
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    if weight_decay and decoupled:
+        u = u + weight_decay * p.astype(u.dtype)
+    u = -lr * u.astype(jnp.float32)
+    p_out[...] = p + u.astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def fused_adam(params, grads, m, v, lr, bias_corr1, bias_corr2,
+               clip_scale=1.0, *, b1: float = 0.9, b2: float = 0.999,
+               eps: float = 1e-8, weight_decay: float = 0.0,
+               decoupled: bool = False, block: int = BUCKET_BLOCK,
+               interpret: Optional[bool] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One in-place Adam/AdamW step over a flat bucket.
+
+    params/m/v: (N,) bucket buffers; grads: (N,) fp32 accumulator.
+    ``bias_corr{1,2}`` are the traced ``1 - beta**step`` scalars (computed
+    once by the caller). Returns (new_params, new_m, new_v), all aliasing
+    their input buffers."""
+    N = params.shape[0]
+    interpret = _interpret_default(interpret)
+    block = min(block, N)
+    return tuple(pl.pallas_call(
+        functools.partial(_adam_kernel, b1, b2, eps, weight_decay, decoupled),
+        grid=(pl.cdiv(N, block),),
+        in_specs=_specs(4, block),
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((N,), params.dtype),
+                   jax.ShapeDtypeStruct((N,), m.dtype),
+                   jax.ShapeDtypeStruct((N,), v.dtype)],
+        input_output_aliases={1: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(_scalars(lr, clip_scale, bias_corr1, bias_corr2), params, grads, m, v))

@@ -3,17 +3,26 @@
 Paper Fig. 2 step ❹ + eq. (14): ``acc ← acc + grad · (1/N_Sμ)``, fusing the
 loss-normalization scale into the accumulate so the scaled gradient is never
 materialized, with in-place aliasing on the fp32 accumulator (the gradient
-may arrive in bf16)."""
+may arrive in bf16).
+
+Ragged tails are handled by the grid, not by padding: the launch covers
+``ceil(N / block)`` blocks and Pallas masks the final partial block
+(out-of-bounds lanes are dropped on store), so no ``jnp.pad`` copy of
+either operand is ever materialized. ``grad_accum_buckets`` applies the
+same kernel to the engine's dtype-bucketed flat buffers — one launch per
+bucket instead of one per parameter leaf (see ``engine/flat.py``).
+"""
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 4096
+# flat dtype buckets hold whole models; amortize the per-block dispatch
+BUCKET_BLOCK = 65536
 
 
 def _accum_kernel(scale_ref, acc_ref, g_ref, out_ref):
@@ -24,38 +33,45 @@ def _accum_kernel(scale_ref, acc_ref, g_ref, out_ref):
 def grad_accum(acc, grad, scale, *, block: int = DEFAULT_BLOCK,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """acc: (N,) fp32 (or any 1-D); grad: (N,); scale: scalar.
-    Returns acc + scale*grad, aliasing the accumulator buffer in place."""
+    Returns acc + scale*grad, aliasing the accumulator buffer in place.
+    N need not divide the block: the final block is masked by the grid
+    machinery (no padded copies)."""
     N = acc.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     block = min(block, N)
-    pad = (-N) % block
-    if pad:
-        acc_p = jnp.pad(acc, (0, pad))
-        grad_p = jnp.pad(grad, (0, pad))
-    else:
-        acc_p, grad_p = acc, grad
     scale_arr = jnp.asarray([scale], acc.dtype)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         _accum_kernel,
-        grid=(acc_p.shape[0] // block,),
+        grid=(pl.cdiv(N, block),),
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),  # scale (broadcast)
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct(acc_p.shape, acc.dtype),
+        out_shape=jax.ShapeDtypeStruct((N,), acc.dtype),
         input_output_aliases={1: 0},  # acc buffer reused in place
         interpret=interpret,
-    )(scale_arr, acc_p, grad_p)
-    return out[:N] if pad else out
+    )(scale_arr, acc, grad)
 
 
 def grad_accum_tree(acc_tree, grad_tree, scale, **kw):
     """Apply the fused accumulate leaf-wise over parameter pytrees
-    (flattening each leaf to 1-D)."""
+    (flattening each leaf to 1-D) — the per-leaf compatibility path;
+    O(num_leaves) launches. Prefer :func:`grad_accum_buckets` on the
+    engine's flat buffers (O(num_buckets) launches)."""
     def one(a, g):
         return grad_accum(a.reshape(-1), g.reshape(-1), scale,
                           **kw).reshape(a.shape)
     return jax.tree.map(one, acc_tree, grad_tree)
+
+
+def grad_accum_buckets(acc_buffers: Sequence[jnp.ndarray],
+                       grad_buffers: Sequence[jnp.ndarray], scale, *,
+                       block: int = BUCKET_BLOCK,
+                       interpret: Optional[bool] = None) -> Tuple[jnp.ndarray, ...]:
+    """Bucketed accumulate: one masked launch per dtype bucket. The buffers
+    come from ``engine.flat.FlatSpec.flatten`` (contiguous 1-D per dtype)."""
+    return tuple(grad_accum(a, g, scale, block=block, interpret=interpret)
+                 for a, g in zip(acc_buffers, grad_buffers))

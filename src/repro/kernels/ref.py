@@ -47,3 +47,40 @@ def grad_accum_ref(acc, grad, scale) -> jnp.ndarray:
     """Paper step ❹ with eq. (14) normalization: acc + scale * grad,
     accumulating in acc's dtype (fp32)."""
     return acc + grad.astype(acc.dtype) * jnp.asarray(scale, acc.dtype)
+
+
+def fused_sgd_ref(p, g, m, lr, clip_scale=1.0, *, momentum: float = 0.0,
+                  weight_decay: float = 0.0, nesterov: bool = False):
+    """Oracle for ``fused_update.fused_sgd``: the exact arithmetic of
+    ``optim.sgd``'s update + ``exec_core.apply_update``, expressed as one
+    pass over flat buffers. Returns (new_p, new_m) — new_m is None when
+    ``m`` is None (momentum-less)."""
+    lr = jnp.asarray(lr, jnp.float32)
+    g = g * jnp.asarray(clip_scale, jnp.float32).astype(g.dtype)
+    if weight_decay:
+        g = g + weight_decay * p.astype(g.dtype)
+    if m is not None:
+        m = momentum * m + g.astype(m.dtype)
+        eff = g + momentum * m if nesterov else m
+    else:
+        eff = g
+    u = -lr * eff.astype(jnp.float32)
+    return p + u.astype(p.dtype), m
+
+
+def fused_adam_ref(p, g, m, v, lr, bias_corr1, bias_corr2, clip_scale=1.0, *,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                   weight_decay: float = 0.0, decoupled: bool = False):
+    """Oracle for ``fused_update.fused_adam`` (``optim.adam``'s arithmetic
+    as one flat pass). Returns (new_p, new_m, new_v)."""
+    lr = jnp.asarray(lr, jnp.float32)
+    g = g * jnp.asarray(clip_scale, jnp.float32).astype(g.dtype)
+    if weight_decay and not decoupled:
+        g = g + weight_decay * p.astype(g.dtype)
+    m = b1 * m + (1 - b1) * g.astype(m.dtype)
+    v = b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype))
+    u = (m / bias_corr1) / (jnp.sqrt(v / bias_corr2) + eps)
+    if weight_decay and decoupled:
+        u = u + weight_decay * p.astype(u.dtype)
+    u = -lr * u.astype(jnp.float32)
+    return p + u.astype(p.dtype), m, v

@@ -261,9 +261,10 @@ def main():
     ap.add_argument("--microbatches", type=int, default=8,
                     help="N_Smu for train shapes; 0 = auto micro-batch "
                          "size from the analytic memory model")
-    ap.add_argument("--executor", choices=["compiled", "fused"],
+    ap.add_argument("--executor", choices=["compiled", "fused", "flat"],
                     default="compiled",
-                    help="compiled scan vs Pallas fused-accumulate step")
+                    help="compiled scan vs Pallas fused-accumulate vs "
+                         "fused flat-buffer update step")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--no-probe", action="store_true")
     ap.add_argument("--no-remat", action="store_true",

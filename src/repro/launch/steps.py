@@ -107,7 +107,9 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
                            num_microbatches=num_microbatches,
                            model_cfg=cfg, seq_len=shape.seq_len,
                            normalization=normalization, unroll=scan_unroll,
-                           act_bytes=jnp.dtype(dtype).itemsize, remat=remat)
+                           act_bytes=jnp.dtype(dtype).itemsize, remat=remat,
+                           **optim.memory_model_kw(optimizer,
+                                                   fused=executor == "flat"))
     loss_fn = make_loss_fn(cfg, dtype, remat, scan_unroll)
     step = engine.get_executor(executor)(
         loss_fn, optimizer, plan).make_train_step()
@@ -136,8 +138,10 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
 
     params = abstract_params(cfg)
     opt_state = abstract_opt_state(optimizer, params)
+    # donate state AND the split batch: the batch is spent after the scan,
+    # freeing its buffers for the update step's temporaries
     return StepBundle("train", step, (params, opt_state, batch),
-                      donate_argnums=(0, 1))
+                      donate_argnums=(0, 1, 2))
 
 
 # ---------------------------------------------------------------------------

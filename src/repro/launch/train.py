@@ -39,17 +39,27 @@ def build_mesh(args):
     return mesh_lib.make_host_mesh(data=n, model=1)
 
 
-def build_plan(cfg, args) -> engine.MBSPlan:
+def default_optimizer(args) -> optim.Optimizer:
+    return optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
+
+
+def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
     """The launcher's batch geometry: pinned N_Sμ when given, else the
-    memory model picks the micro-batch size (paper §4.3.2, computed)."""
+    memory model picks the micro-batch size (paper §4.3.2, computed).
+    ``optimizer`` (default: the launcher's SGD-momentum) feeds the model's
+    state-slot count and step-❺ transient: the flat executor updates in
+    place, so its plan admits larger auto micro-batches — but only when
+    the optimizer actually publishes a fused hook."""
     budget = (int(args.hbm_budget_gb * 1024 ** 3)
               if args.hbm_budget_gb else None)
     dtype_bytes = 4 if args.dtype == "float32" else 2
+    optimizer = optimizer or default_optimizer(args)
     return engine.plan_mbs(
         args.mini_batch, num_microbatches=args.microbatches,
         model_cfg=cfg, seq_len=args.seq, budget_bytes=budget,
         normalization=args.normalization,
-        act_bytes=dtype_bytes, remat=not args.reduced)
+        act_bytes=dtype_bytes, remat=not args.reduced,
+        **optim.memory_model_kw(optimizer, fused=args.executor == "flat"))
 
 
 def build_executor(cfg, plan, args, optimizer=None):
@@ -57,7 +67,7 @@ def build_executor(cfg, plan, args, optimizer=None):
     end-to-end ragged-tail test."""
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     loss_fn = steps.make_loss_fn(cfg, dtype=dtype, remat=not args.reduced)
-    opt = optimizer or optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
+    opt = optimizer or default_optimizer(args)
     return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
 
 
@@ -153,7 +163,10 @@ def main():
             jax.eval_shape(opt.init, pshapes), mesh)
         opt_state = jax.jit(opt.init, out_shardings=sharding.named(
             opt_specs, mesh))(params)
-        step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1))
+        # donate params/opt-state (reused in place for the new state) AND
+        # the spent split batch (freed for step-❺ temporaries); the Trainer
+        # threads state and never touches a donated buffer again
+        step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1, 2))
         pipeline = engine.Pipeline(
             ds, plan, prefetch=args.prefetch,
             sharding=lambda split: sharding.named(

@@ -41,9 +41,35 @@ def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
     return lr if callable(lr) else constant(lr)
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedUpdateSpec:
+    """Per-optimizer hook for the fused flat update path (paper step ❺).
+
+    Describes the update arithmetic so the engine can run it through the
+    in-place Pallas kernels (``kernels/fused_update.py``) on dtype-bucketed
+    flat buffers instead of ``optimizer.update`` + ``apply_update`` over
+    trees. Static hyperparameters are baked into the kernel; the schedule
+    (and the global-norm clip, when ``clip_norm`` is set) produce traced
+    scalars carried *into* the kernel — no scaled-gradient or ``updates``
+    tree is ever materialized. Consumed by
+    ``engine.exec_core.apply_update_flat``.
+    """
+    kind: str  # "sgd" | "adam"
+    schedule: Schedule
+    momentum: float = 0.0
+    nesterov: bool = False
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    decoupled: bool = False
+    clip_norm: Optional[float] = None
+
+
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    fused: Optional[FusedUpdateSpec] = None  # flat fused-kernel hook
 
 
 def sgd(lr: Union[float, Schedule], momentum: float = 0.0,
@@ -71,7 +97,9 @@ def sgd(lr: Union[float, Schedule], momentum: float = 0.0,
         updates = jax.tree.map(lambda u: -lr_t * u.astype(jnp.float32), eff)
         return updates, {"mom": mom, "step": state["step"] + 1}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, FusedUpdateSpec(
+        "sgd", sched, momentum=momentum, nesterov=nesterov,
+        weight_decay=weight_decay))
 
 
 def adam(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.999,
@@ -107,14 +135,39 @@ def adam(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.999,
         updates = jax.tree.map(upd, m, v, params)
         return updates, {"m": m, "v": v, "step": step}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, FusedUpdateSpec(
+        "adam", sched, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+        decoupled=decoupled))
 
 
 def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
     return adam(lr, b1, b2, eps, weight_decay, decoupled=True)
 
 
+def memory_model_kw(optimizer: Optimizer, *, fused: bool = False) -> dict:
+    """Memory-model kwargs (``opt_slots=``/``fused_update=``) for
+    ``plan_mbs``/``memory_model.estimate``, derived from the *actual*
+    optimizer: the state-slot count is measured from the optimizer's own
+    ``init`` (abstractly, via ``eval_shape`` — exact for any custom
+    optimizer, not just the built-ins), and ``fused_update`` only holds
+    when the optimizer publishes a fused hook — otherwise the engine falls
+    back to the unfused tree update and its step-❺ transient must stay in
+    the model."""
+    probe = jax.ShapeDtypeStruct((2, 3), jnp.float32)
+    state = jax.eval_shape(optimizer.init, {"p": probe})
+    slots = sum(1 for leaf in jax.tree.leaves(state)
+                if getattr(leaf, "shape", None) == probe.shape)
+    return {"opt_slots": slots,
+            "fused_update": fused and optimizer.fused is not None}
+
+
 def clip_by_global_norm(optimizer: Optimizer, max_norm: float) -> Optimizer:
+    """Scale gradients so their global norm is at most ``max_norm``.
+
+    The unfused path below must materialize a scaled gradient tree before
+    the wrapped update; the fused flat path instead carries ``clip_norm``
+    in the :class:`FusedUpdateSpec` so the engine computes the scale from
+    the flat accumulator and applies it *inside* the update kernel."""
     def update(grads, state, params):
         norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                             for g in jax.tree.leaves(grads)))
@@ -122,4 +175,9 @@ def clip_by_global_norm(optimizer: Optimizer, max_norm: float) -> Optimizer:
         grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
         return optimizer.update(grads, state, params)
 
-    return Optimizer(optimizer.init, update)
+    # one clip scalar rides into the kernel; a double-wrapped clip cannot,
+    # so it drops the hook and falls back to the reference tree update
+    fused = (dataclasses.replace(optimizer.fused, clip_norm=max_norm)
+             if optimizer.fused is not None
+             and optimizer.fused.clip_norm is None else None)
+    return Optimizer(optimizer.init, update, fused)

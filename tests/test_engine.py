@@ -13,7 +13,8 @@ from repro.core import losses, memory_model
 from repro.data import LMDataset
 from repro.launch import steps, train as train_lib
 
-EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True}}
+EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True},
+               "flat": {"interpret": True}}
 
 
 def _loss_fn(p, batch, exact_denom=None):

@@ -1,0 +1,436 @@
+"""Fused flat-buffer update path (DESIGN.md §Update path, Layer 4):
+
+  * FlatSpec round-trip — flatten/unflatten identity for arbitrary trees
+    (property-based when hypothesis is installed), stable leaf ordering,
+    dtype bucketing;
+  * fused SGD-m / Adam / AdamW kernels vs the unfused ``apply_update``
+    reference, on flat buffers and end-to-end through every executor
+    (ragged tails + exact normalization + global-norm clip included);
+  * donation safety — ``step_split`` donates params/opt-state/batch, so a
+    threading caller must survive the donated buffers actually dying;
+  * the memory model's step-❺ transient term — the fused path admits a
+    micro-batch the unfused model rejects, corroborated by a dryrun-style
+    ``memory_analysis`` of the compiled step (donation aliases the state
+    buffers in place).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, engine, optim
+from repro.core import losses, memory_model
+from repro.engine import exec_core, flat
+from repro.kernels import fused_update, ref
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+def _loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
+
+
+def _batch(n, seed=0):
+    rng = np.random.default_rng(seed + 100)
+    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
+            "y": rng.integers(0, 4, n).astype(np.int32)}
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _mixed_tree(seed=0):
+    """Nested tree with mixed dtypes/shapes incl. ragged (non-block) sizes."""
+    rng = np.random.default_rng(seed)
+    return {
+        "emb": jnp.asarray(rng.normal(size=(7, 5)), jnp.float32),
+        "blocks": [
+            {"w": jnp.asarray(rng.normal(size=(3, 11)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(11,)), jnp.bfloat16)},
+            {"w": jnp.asarray(rng.normal(size=(13,)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(2, 2, 3)), jnp.bfloat16)},
+        ],
+        "head": jnp.asarray(rng.normal(size=(1,)), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FlatSpec round-trip
+# ---------------------------------------------------------------------------
+
+def test_flat_roundtrip_mixed_dtypes():
+    tree = _mixed_tree()
+    spec = flat.FlatSpec.for_tree(tree)
+    assert spec.num_leaves == len(jax.tree.leaves(tree))
+    assert spec.num_buckets == 2  # fp32 + bf16
+    bufs = spec.flatten(tree)
+    assert all(b.ndim == 1 for b in bufs)
+    assert [b.dtype for b in bufs] == list(spec.bucket_dtypes)
+    assert sum(b.size for b in bufs) == sum(
+        l.size for l in jax.tree.leaves(tree))
+    back = spec.unflatten(bufs)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_flat_ordering_is_stable_and_offsets_contiguous():
+    tree = _mixed_tree()
+    spec1 = flat.FlatSpec.for_tree(tree)
+    spec2 = flat.FlatSpec.for_tree(jax.tree.map(lambda x: x * 2, tree))
+    assert spec1.slots == spec2.slots  # same structure -> same layout
+    fill = [0] * spec1.num_buckets
+    for slot in spec1.slots:  # leaf order fills each bucket densely
+        assert slot.offset == fill[slot.bucket]
+        fill[slot.bucket] += slot.size
+    assert tuple(fill) == spec1.bucket_sizes
+
+
+def test_flat_grads_share_param_layout():
+    """Gradients flattened with dtype=accum route into buffers whose
+    offsets line up with the param buckets (the fused-kernel contract)."""
+    tree = _mixed_tree()
+    spec = flat.FlatSpec.for_tree(tree)
+    gbufs = spec.flatten(tree, dtype=jnp.float32)
+    assert all(b.dtype == jnp.float32 for b in gbufs)
+    assert tuple(b.size for b in gbufs) == spec.bucket_sizes
+    # cast=False round-trips the accumulator as an fp32-leaf tree
+    gtree = spec.unflatten(gbufs, cast=False)
+    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(gtree))
+
+
+def test_flat_roundtrip_property():
+    hp = pytest.importorskip("hypothesis",
+                             reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 60), st.booleans()),
+                    min_size=1, max_size=12),
+           st.integers(0, 2 ** 16))
+    def run(shapes, seed):
+        rng = np.random.default_rng(seed)
+        tree = {f"l{i}": jnp.asarray(rng.normal(size=n),
+                                     jnp.bfloat16 if bf else jnp.float32)
+                for i, (n, bf) in enumerate(shapes)}
+        spec = flat.FlatSpec.for_tree(tree)
+        back = spec.unflatten(spec.flatten(tree))
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# fused kernels vs the unfused reference (flat buffers, ragged blocks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("momentum,nesterov,wd", [
+    (0.0, False, 0.0), (0.9, False, 5e-4), (0.9, True, 1e-4)])
+def test_fused_sgd_kernel_matches_reference(momentum, nesterov, wd):
+    rng = np.random.default_rng(1)
+    N = 1000  # not a multiple of the block: masked final block
+    p = jnp.asarray(rng.normal(size=N), jnp.float32)
+    g = jnp.asarray(rng.normal(size=N), jnp.float32)
+    m = jnp.asarray(rng.normal(size=N), jnp.float32) if momentum else None
+    out = fused_update.fused_sgd(p, g, m, 0.1, 0.7, momentum=momentum,
+                                 weight_decay=wd, nesterov=nesterov,
+                                 block=256, interpret=True)
+    p2, m2 = out if momentum else (out, None)
+    pr, mr = ref.fused_sgd_ref(p, g, m, 0.1, 0.7, momentum=momentum,
+                               weight_decay=wd, nesterov=nesterov)
+    np.testing.assert_allclose(p2, pr, atol=1e-6, rtol=1e-6)
+    if momentum:
+        np.testing.assert_allclose(m2, mr, atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("decoupled", [False, True])
+def test_fused_adam_kernel_matches_reference(decoupled):
+    rng = np.random.default_rng(2)
+    N = 777
+    p = jnp.asarray(rng.normal(size=N), jnp.float32)
+    g = jnp.asarray(rng.normal(size=N), jnp.float32)
+    m = jnp.asarray(rng.normal(size=N), jnp.float32)
+    v = jnp.abs(jnp.asarray(rng.normal(size=N), jnp.float32))
+    kw = dict(b1=0.9, b2=0.999, eps=1e-8, weight_decay=1e-2,
+              decoupled=decoupled)
+    p2, m2, v2 = fused_update.fused_adam(p, g, m, v, 0.01, 0.1, 0.002, 0.9,
+                                         block=128, interpret=True, **kw)
+    pr, mr, vr = ref.fused_adam_ref(p, g, m, v, 0.01, 0.1, 0.002, 0.9, **kw)
+    np.testing.assert_allclose(p2, pr, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(m2, mr, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(v2, vr, atol=1e-6, rtol=1e-6)
+
+
+def _optimizers():
+    return [
+        ("sgd", optim.sgd(0.1)),
+        ("sgd-m", optim.sgd(0.1, momentum=0.9, weight_decay=5e-4)),
+        ("sgd-nesterov", optim.sgd(0.1, momentum=0.9, nesterov=True)),
+        ("adam", optim.adam(0.01, weight_decay=5e-4)),
+        ("adamw", optim.adamw(0.01)),
+        ("clip-sgd-m",
+         optim.clip_by_global_norm(optim.sgd(0.1, momentum=0.9), 0.05)),
+        ("clip-adam", optim.clip_by_global_norm(optim.adam(0.01), 0.05)),
+    ]
+
+
+@pytest.mark.parametrize("name,opt", _optimizers(), ids=lambda o: o
+                         if isinstance(o, str) else "")
+def test_apply_update_flat_matches_reference(name, opt):
+    """Two consecutive fused flat updates == two unfused reference updates
+    (state threading included), on a mixed ragged tree."""
+    tree = {k: v for k, v in _mixed_tree().items() if k != "blocks"}
+    tree["blocks"] = [jax.tree.map(lambda x: x.astype(jnp.float32), b)
+                      for b in _mixed_tree()["blocks"]]  # fp32 for tolerance
+    spec = flat.FlatSpec.for_tree(tree)
+    rng = np.random.default_rng(3)
+    grads = jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32), tree)
+
+    p_ref, s_ref = tree, opt.init(tree)
+    p_fl, s_fl = tree, opt.init(tree)
+    for _ in range(2):
+        p_ref, s_ref = exec_core.apply_update(opt, grads, s_ref, p_ref)
+        p_fl, s_fl = exec_core.apply_update_flat(
+            opt, spec, spec.flatten(grads, dtype=jnp.float32), s_fl, p_fl,
+            interpret=True, block=64)
+    assert _max_err(p_fl, p_ref) < 1e-6
+    assert int(s_fl["step"]) == int(s_ref["step"]) == 2
+    state_leaves = [(a, b) for a, b in zip(jax.tree.leaves(s_fl),
+                                           jax.tree.leaves(s_ref))]
+    assert _max_err([a for a, _ in state_leaves],
+                    [b for _, b in state_leaves]) < 1e-6
+
+
+def test_double_clip_drops_fused_hook():
+    """Only one clip scalar rides into the kernel: a double-wrapped clip
+    falls back to the reference update (both clips applied) instead of
+    silently dropping the inner one."""
+    opt = optim.clip_by_global_norm(
+        optim.clip_by_global_norm(optim.sgd(0.1, momentum=0.9), 0.5), 0.05)
+    assert opt.fused is None
+    tree = _params()
+    spec = flat.FlatSpec.for_tree(tree)
+    grads = jax.tree.map(jnp.ones_like, tree)
+    p1, _ = exec_core.apply_update_flat(
+        opt, spec, spec.flatten(grads, dtype=jnp.float32),
+        opt.init(tree), tree)
+    p2, _ = exec_core.apply_update(opt, grads, opt.init(tree), tree)
+    assert _max_err(p1, p2) < 1e-7
+
+
+def test_apply_update_flat_falls_back_without_hook():
+    """Optimizers with no fused spec route through the reference update."""
+    base = optim.sgd(0.1, momentum=0.9)
+    nohook = optim.Optimizer(base.init, base.update)  # fused defaults None
+    tree = _params()
+    spec = flat.FlatSpec.for_tree(tree)
+    grads = jax.tree.map(jnp.ones_like, tree)
+    p1, s1 = exec_core.apply_update_flat(
+        nohook, spec, spec.flatten(grads, dtype=jnp.float32),
+        nohook.init(tree), tree)
+    p2, s2 = exec_core.apply_update(base, grads, base.init(tree), tree)
+    assert _max_err(p1, p2) < 1e-7
+    assert _max_err(s1["mom"], s2["mom"]) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the flat executor vs every other executor + the baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_b,n_mu,normalization", [
+    (16, 4, "paper"), (10, 4, "exact"), (13, 5, "exact")])
+@pytest.mark.parametrize("opt_name", ["sgd-m", "adam", "clip-sgd-m"])
+def test_flat_executor_step_matches_baseline(n_b, n_mu, normalization,
+                                             opt_name):
+    """Ragged tails, exact normalization, clipping: the full flat step
+    (bucketed accumulate + fused in-place update) equals the no-MBS
+    baseline update."""
+    opt = dict(_optimizers())[opt_name]
+    params, batch = _params(4), _batch(n_b, seed=4)
+    base = jax.jit(engine.make_baseline_train_step(_loss_fn, opt))
+    p_ref, s_ref, m_ref = base(params, opt.init(params),
+                               {k: jnp.asarray(v) for k, v in batch.items()})
+    plan = engine.plan_mbs(n_b, micro_batch_size=n_mu,
+                           normalization=normalization)
+    ex = engine.FlatFusedExecutor(_loss_fn, opt, plan, interpret=True,
+                                  donate=False)
+    p, s, m = ex.step(params, opt.init(params), dict(batch))
+    assert _max_err(p, p_ref) < 2e-6
+    assert abs(float(m["loss"]) - float(m_ref["loss"])) < 2e-6
+    assert abs(float(m["grad_norm"]) - float(m_ref["grad_norm"])) < 2e-5
+
+
+def test_flat_executor_matches_other_executors():
+    """All four executors produce the same update from the same split."""
+    params, batch = _params(5), _batch(12, seed=5)
+    opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
+    plan = engine.plan_mbs(12, micro_batch_size=4)
+    results = {}
+    for name in sorted(engine.EXECUTORS):
+        kw = ({"interpret": True} if name in ("fused", "flat") else {})
+        if name != "streaming":
+            kw["donate"] = False
+        ex = engine.get_executor(name)(_loss_fn, opt, plan, **kw)
+        results[name] = ex.step(params, opt.init(params), dict(batch))
+    for name in ("streaming", "fused", "flat"):
+        assert _max_err(results[name][0], results["compiled"][0]) < 2e-6
+        assert abs(float(results[name][2]["loss"])
+                   - float(results["compiled"][2]["loss"])) < 2e-6
+
+
+def test_flat_executor_respects_accum_dtype():
+    params, batch = _params(), _batch(8)
+    plan = engine.plan_mbs(8, micro_batch_size=4, accum_dtype=jnp.bfloat16)
+    ex = engine.FlatFusedExecutor(_loss_fn, optim.sgd(0.1), plan,
+                                  interpret=True)
+    g, _ = ex.gradients(params, plan.device_split(batch))
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# donation safety
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["compiled", "flat"])
+def test_step_split_donation_safety(executor):
+    """step_split donates params/opt-state/batch. Thread the state through
+    three steps and assert (a) the outputs never alias a dead buffer —
+    every output stays readable after its inputs are deleted — and (b) the
+    donated inputs really died (donation supported on this backend), so a
+    buffer reuse anywhere in the step would have raised."""
+    opt = optim.sgd(0.1, momentum=0.9)
+    plan = engine.plan_mbs(8, micro_batch_size=4)
+    kw = {"interpret": True} if executor == "flat" else {}
+    ex = engine.get_executor(executor)(_loss_fn, opt, plan, **kw)
+    params = _params(6)
+    opt_state = opt.init(params)
+    for i in range(3):
+        split = plan.device_split(_batch(8, seed=10 + i))
+        donated = (jax.tree.leaves(params) + jax.tree.leaves(opt_state)
+                   + jax.tree.leaves(split))
+        params, opt_state, metrics = ex.step_split(params, opt_state, split)
+        # outputs are alive and independent of the donated inputs
+        for leaf in jax.tree.leaves((params, opt_state)):
+            assert not leaf.is_deleted()
+            np.asarray(leaf)  # readable
+        float(metrics["loss"])
+        # donated buffers were consumed (not silently copied & kept alive):
+        # the big fp32 state buffers must be gone on backends with donation
+        dead = [l for l in donated if l.is_deleted()]
+        if jax.default_backend() in ("cpu", "tpu", "gpu"):
+            assert dead, "donation had no effect — step_split stopped donating?"
+
+
+def test_step_split_donate_false_allows_reuse():
+    """Benchmarks/A-B comparisons construct with donate=False and may call
+    step_split repeatedly with the same buffers."""
+    opt = optim.sgd(0.1)
+    plan = engine.plan_mbs(8, micro_batch_size=4)
+    ex = engine.FlatFusedExecutor(_loss_fn, opt, plan, interpret=True,
+                                  donate=False)
+    params, opt_state = _params(), opt.init(_params())
+    split = plan.device_split(_batch(8))
+    p1, _, _ = ex.step_split(params, opt_state, split)
+    p2, _, _ = ex.step_split(params, opt_state, split)  # same buffers again
+    assert _max_err(p1, p2) == 0
+    assert not any(l.is_deleted() for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# memory model: the eliminated step-❺ transient changes admission
+# ---------------------------------------------------------------------------
+
+def test_update_transient_term_and_fused_admission():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    est_u = memory_model.estimate(cfg, 16)
+    est_f = memory_model.estimate(cfg, 16, fused_update=True)
+    # the two estimates differ exactly by the step-❺ transient
+    assert est_u.update_transient_bytes == \
+        memory_model.update_transient_bytes(est_u.params_bytes, "sgd")
+    assert est_f.update_transient_bytes == 0
+    assert est_u.total(4) - est_f.total(4) == est_u.update_transient_bytes
+    # adam carries two fresh state trees in its transient
+    est_a = memory_model.estimate(cfg, 16, optimizer="adam")
+    assert est_a.update_transient_bytes == 3 * est_a.params_bytes
+
+    # a budget the unfused update just overflows: fused admits more
+    budget = est_u.total(4) - 1
+    mu_u = memory_model.suggest_micro_batch_size(
+        cfg, 16, 64, budget_bytes=budget)
+    mu_f = memory_model.suggest_micro_batch_size(
+        cfg, 16, 64, budget_bytes=budget, fused_update=True)
+    assert (mu_u or 0) < 4 <= (mu_f or 0)
+    # plan_mbs wires the flag through (launch/train.py --executor flat)
+    plan_u = engine.plan_mbs(64, model_cfg=cfg, seq_len=16,
+                             budget_bytes=budget)
+    plan_f = engine.plan_mbs(64, model_cfg=cfg, seq_len=16,
+                             budget_bytes=budget, fused_update=True)
+    assert plan_f.micro_batch_size > plan_u.micro_batch_size
+
+
+def test_fused_admission_gated_on_optimizer_hook():
+    """The planner only drops the step-❺ transient when the optimizer
+    actually publishes a fused hook — a hook-less optimizer under
+    ``--executor flat`` falls back to the unfused tree update at runtime,
+    so its transient must stay modeled (``optim.memory_model_kw``)."""
+    hooked = optim.sgd(0.05, momentum=0.9)
+    nohook = optim.Optimizer(hooked.init, hooked.update)
+    assert optim.memory_model_kw(hooked, fused=True) == {
+        "opt_slots": 1, "fused_update": True}
+    assert optim.memory_model_kw(nohook, fused=True) == {
+        "opt_slots": 1, "fused_update": False}
+    # the slot count is measured from the optimizer's own init — a
+    # hook-less Adam still budgets its two state trees
+    adam = optim.adam(1e-3)
+    assert optim.memory_model_kw(optim.Optimizer(adam.init, adam.update),
+                                 fused=True) == {
+        "opt_slots": 2, "fused_update": False}
+    assert optim.memory_model_kw(optim.sgd(0.1), fused=True) == {
+        "opt_slots": 0, "fused_update": True}
+
+
+def test_dryrun_memory_analysis_reflects_donated_update():
+    """Dryrun-style corroboration: lower+compile the donating train step
+    and read XLA's own memory analysis — the donated state buffers are
+    aliased in place (alias bytes cover params + opt state), which is the
+    mechanism that removes the unfused path's update transients."""
+    opt = optim.sgd(0.1, momentum=0.9)
+    plan = engine.plan_mbs(8, micro_batch_size=4)
+    params = _params(7)
+    opt_state = opt.init(params)
+    split = plan.device_split(_batch(8, seed=7))
+    state_bytes = sum(l.size * jnp.dtype(l.dtype).itemsize
+                      for l in jax.tree.leaves((params, opt_state))
+                      if hasattr(l, "size"))
+    for name in ("compiled", "flat"):
+        kw = {"interpret": True} if name == "flat" else {}
+        ex = engine.get_executor(name)(_loss_fn, opt, plan, **kw)
+        compiled = jax.jit(ex.make_train_step(),
+                           donate_argnums=(0, 1, 2)).lower(
+            params, opt_state, split).compile()
+        mem = compiled.memory_analysis()
+        alias = getattr(mem, "alias_size_in_bytes", 0)
+        assert alias >= state_bytes, (
+            f"{name}: donated state not aliased in place "
+            f"(alias={alias}, state={state_bytes})")

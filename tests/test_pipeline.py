@@ -22,7 +22,8 @@ from repro.core import losses
 from repro.core.streaming import prefetch_iterator
 from repro.data import MBSLoader
 
-EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True}}
+EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True},
+               "flat": {"interpret": True}}
 
 
 def _loss_fn(p, batch, exact_denom=None):
