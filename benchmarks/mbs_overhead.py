@@ -17,7 +17,14 @@ input path is recorded run over run.
 and writes ``BENCH_update.json``: Pallas launches per update (per-leaf
 O(num_leaves) vs flat-bucketed O(num_buckets)), step-❺ wall time for the
 unfused tree reference vs the fused flat path, and the analytic peak
-update-transient bytes each admits into the micro-batch budget."""
+update-transient bytes each admits into the micro-batch budget.
+
+``--remat-bench`` benchmarks the remat-policy axis (engine Layer 5) and
+writes ``BENCH_remat.json``: per policy on the lattice, the measured
+compiled-step time (the recompute cost of heavier checkpointing) and the
+micro-batch the memory model admits at several HBM budgets — plus the
+planner's joint "auto" choice at each budget, showing where escalation
+buys batch the cheaper policies cannot."""
 from __future__ import annotations
 
 import argparse
@@ -255,6 +262,77 @@ def update_main(quick: bool = True, out_path: str = "BENCH_update.json"):
     return results
 
 
+def remat_main(quick: bool = True, out_path: str = "BENCH_remat.json"):
+    """Remat-policy benchmark (``--remat-bench``): per-policy compiled step
+    time on the reduced transformer stack + per-budget admission table."""
+    from repro.models import remat as remat_lib
+
+    cfg = configs.get_reduced("qwen2-1.5b")
+    seq = 32
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.sgd(0.01, momentum=0.9)
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
+    mini_batch = 16
+    iters = 3 if quick else 10
+
+    results = {"benchmark": "remat_policy", "arch": "qwen2-1.5b-reduced",
+               "seq": seq, "mini_batch": mini_batch,
+               "policies": {}, "budgets": {}}
+
+    # step time per policy at fixed geometry: the recompute cost axis
+    plan = engine.plan_mbs(mini_batch, num_microbatches=4)
+    mini = ds.batch(mini_batch, 0)
+    split = plan.device_split(mini)
+    base_t = None
+    for policy in remat_lib.POLICIES:
+        loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32,
+                                     remat_policy=policy)
+        ex = engine.CompiledScanExecutor(loss_fn, opt, plan)
+        step = jax.jit(ex.make_train_step())
+        dt = _time_step(step, params, opt.init(params), split, iters)
+        if base_t is None:
+            base_t = dt
+        results["policies"][policy] = {
+            "step_time_s": dt,
+            "overhead_vs_none": dt / base_t - 1,
+            "activation_bytes_per_sample":
+                memory_model.activation_bytes_per_sample(
+                    cfg, seq, act_bytes=4, remat_policy=policy),
+        }
+        emit(f"remat/{policy}/step", dt * 1e6,
+             f"overhead={100 * (dt / base_t - 1):.1f}%")
+
+    # admission per policy at tight/medium/roomy budgets + the joint choice
+    est_none = memory_model.estimate(cfg, seq, act_bytes=4,
+                                     remat_policy="none")
+    act_none = est_none.activation_bytes_per_sample
+    budgets = {
+        "tight": est_none.total(0) + 2 * act_none,
+        "medium": est_none.total(0) + 6 * act_none,
+        "roomy": est_none.total(0) + int(1.5 * mini_batch * act_none),
+    }
+    for tag, budget in budgets.items():
+        admitted = {
+            policy: memory_model.suggest_micro_batch_size(
+                cfg, seq, mini_batch, budget_bytes=budget, act_bytes=4,
+                remat_policy=policy) or 0
+            for policy in remat_lib.POLICIES}
+        auto_policy, auto_micro = memory_model.suggest_remat_policy_and_micro(
+            cfg, seq, mini_batch, budget_bytes=budget, act_bytes=4)
+        results["budgets"][tag] = {
+            "budget_bytes": int(budget),
+            "admitted_micro_batch": admitted,
+            "auto": {"policy": auto_policy, "micro_batch": auto_micro or 0},
+        }
+        emit(f"remat/admission/{tag}", float(auto_micro or 0),
+             f"auto={auto_policy} " +
+             " ".join(f"{p}:{m}" for p, m in admitted.items()))
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", action="store_true",
@@ -263,6 +341,9 @@ if __name__ == "__main__":
     ap.add_argument("--update-bench", action="store_true",
                     help="run the update-path benchmark and write "
                          "BENCH_update.json")
+    ap.add_argument("--remat-bench", action="store_true",
+                    help="run the remat-policy benchmark and write "
+                         "BENCH_remat.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
@@ -270,5 +351,7 @@ if __name__ == "__main__":
         pipeline_main(quick=a.quick, out_path=a.out or "BENCH_pipeline.json")
     elif a.update_bench:
         update_main(quick=a.quick, out_path=a.out or "BENCH_update.json")
+    elif a.remat_bench:
+        remat_main(quick=a.quick, out_path=a.out or "BENCH_remat.json")
     else:
         main(quick=a.quick)

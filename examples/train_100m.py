@@ -57,14 +57,17 @@ def main():
     # engine planner: auto micro-batch from the memory model (replaces the
     # paper's experimentally-determined size)
     plan = engine.plan_mbs(args.mini_batch, model_cfg=cfg, seq_len=seq,
-                           budget_bytes=memory_model.V5E_HBM_BYTES)
+                           budget_bytes=memory_model.V5E_HBM_BYTES,
+                           remat=bool(args.full))
     if not args.full and plan.micro_batch_size > 8:
-        plan = engine.plan_mbs(args.mini_batch, micro_batch_size=8)
+        plan = engine.plan_mbs(args.mini_batch, micro_batch_size=8,
+                               remat=bool(args.full))
     print(plan.describe())
 
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    # the loss compiles under the plan's remat policy (engine Layer 5)
     loss_fn = steps_lib.make_loss_fn(cfg, dtype=jnp.float32,
-                                     remat=bool(args.full))
+                                     remat_policy=plan.remat_policy)
     opt = optim.sgd(optim.cosine_decay(0.3, num_steps, warmup=10),
                     momentum=0.9, weight_decay=1e-4)
     executor = engine.get_executor(args.executor)(loss_fn, opt, plan)

@@ -16,17 +16,32 @@ The model (per device, for the transformer families):
                    state until the swap — (1 + k_opt) * params bytes.
                    The fused flat path (``kernels/fused_update.py``,
                    in-place aliasing + donation) eliminates it.
-  activations      per-period remat boundary + live period working set,
-                   proportional to micro_batch * seq (the MBS knob)
+  activations      per-period remat boundary + the live working set the
+                   remat policy leaves, proportional to micro_batch * seq
+                   (the MBS knob). The graded ``remat_policy`` lattice
+                   (``models/remat.POLICIES``) scales the working-set term:
+                     none    every period's working set stays live
+                     dots    matmul outputs of every period stay saved
+                             (~half the working set) + one period recompute
+                     period  one period's working set (historical remat=True)
+                     full    one block's working set (nested per-block remat)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
+from ..models import remat as remat_lib
 from ..models.config import ModelConfig
 
 V5E_HBM_BYTES = 16 * 1024 ** 3
+
+# lattice order == the planner's escalation order (cheapest recompute first)
+POLICY_ORDER = remat_lib.POLICIES
+
+# fraction of a period's working set that checkpoint_dots keeps saved (the
+# matmul outputs; elementwise intermediates are recomputed)
+DOTS_SAVED_FRACTION = 0.5
 
 # optimizer-state slots per optimizer (momentum / m+v trees)
 OPT_SLOTS = {"sgd": 1, "sgd_plain": 0, "adam": 2, "adamw": 2}
@@ -89,13 +104,26 @@ class MemoryEstimate:
 
 def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
                                 act_bytes: int = 2,
-                                remat: bool = True) -> int:
+                                remat: bool = True,
+                                remat_policy: Optional[str] = None) -> int:
     """Live activation bytes for ONE sample of length ``seq``.
 
-    With per-period remat: residual-stream checkpoints at every period
-    boundary (num_periods * seq * d_model) + the recompute working set of a
-    single period (~ c * seq * max(d_model, d_ff, moe_active)).
+    Always present: residual-stream checkpoints at every period boundary
+    (num_periods * seq * d_model) and the blocked-CE logits slice. The
+    policy scales the live working-set term (one period's intermediates,
+    ~ c * seq * max(d_model, d_ff, moe_active) * pattern_len):
+
+      none    all ``num_periods`` working sets live simultaneously;
+      dots    ``DOTS_SAVED_FRACTION`` of every period's working set stays
+              saved (the dot outputs) + one period recomputing;
+      period  exactly one period's working set (the recompute unit);
+      full    nested per-block checkpoints shrink the recompute unit to a
+              single block: one period's working set / pattern_len.
+
+    ``remat_policy`` overrides the legacy ``remat`` bool (True → "period",
+    False → "none") — the mapping lives in ``models/remat.resolve``.
     """
+    policy = remat_lib.resolve(remat, remat_policy)
     d = cfg.d_model
     boundary = cfg.num_periods * seq * d * act_bytes
     widths = [d * 6]  # qkv + attn out + residuals
@@ -109,19 +137,29 @@ def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
         widths.append(cfg.lru_width * 6)
     period_live = seq * int(max(widths)) * act_bytes * cfg.pattern_len
     logits_live = seq * cfg.vocab_size * 4 // 8  # blocked CE kernel: 1/8 vocab
-    if not remat:
-        period_live *= cfg.num_periods
-    return boundary + period_live + logits_live
+    if policy == "none":
+        live = cfg.num_periods * period_live
+    elif policy == "dots":
+        live = period_live + int(
+            DOTS_SAVED_FRACTION * (cfg.num_periods - 1) * period_live)
+    elif policy == "period":
+        live = period_live
+    else:  # "full"
+        live = -(-period_live // cfg.pattern_len)
+    return boundary + live + logits_live
 
 
 def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
              opt_slots: Optional[int] = None, act_bytes: int = 2,
-             remat: bool = True, optimizer: str = "sgd",
+             remat: bool = True, remat_policy: Optional[str] = None,
+             optimizer: str = "sgd",
              fused_update: bool = False) -> MemoryEstimate:
     """``optimizer`` names the update rule (state-slot count + step-❺
     transient); ``fused_update=True`` models the flat in-place path
     (``--executor flat``) whose update transient is eliminated. An explicit
-    ``opt_slots`` overrides the per-optimizer slot count."""
+    ``opt_slots`` overrides the per-optimizer slot count; ``remat_policy``
+    overrides the legacy ``remat`` bool (see
+    :func:`activation_bytes_per_sample`)."""
     p_bytes = cfg.param_count() * 4 // (tp * fsdp)
     slots = _resolve_slots(optimizer, opt_slots)
     return MemoryEstimate(
@@ -129,7 +167,7 @@ def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
         grads_bytes=p_bytes,
         opt_bytes=slots * p_bytes,
         activation_bytes_per_sample=activation_bytes_per_sample(
-            cfg, seq, act_bytes, remat) // tp,
+            cfg, seq, act_bytes, remat, remat_policy) // tp,
         fixed_bytes=64 * 1024 ** 2,
         update_transient_bytes=update_transient_bytes(
             p_bytes, optimizer, fused_update, opt_slots=slots),
@@ -140,7 +178,9 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
                              budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
                              fsdp: int = 1, opt_slots: Optional[int] = None,
                              act_bytes: int = 2,
-                             remat: bool = True, optimizer: str = "sgd",
+                             remat: bool = True,
+                             remat_policy: Optional[str] = None,
+                             optimizer: str = "sgd",
                              fused_update: bool = False) -> Optional[int]:
     """Largest power-of-two micro-batch (≤ mini_batch) that fits the budget.
     Returns None if even micro-batch 1 exceeds the budget (the model itself
@@ -149,7 +189,8 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
     this from admitting micro-batches that would OOM at the update; with
     ``fused_update=True`` that headroom is reclaimed for activations."""
     est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
-                   act_bytes=act_bytes, remat=remat, optimizer=optimizer,
+                   act_bytes=act_bytes, remat=remat,
+                   remat_policy=remat_policy, optimizer=optimizer,
                    fused_update=fused_update)
     best = None
     m = 1
@@ -160,16 +201,52 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
     return best
 
 
+def suggest_remat_policy_and_micro(
+        cfg: ModelConfig, seq: int, mini_batch: int, *,
+        budget_bytes: int = V5E_HBM_BYTES, tp: int = 1, fsdp: int = 1,
+        opt_slots: Optional[int] = None, act_bytes: int = 2,
+        optimizer: str = "sgd", fused_update: bool = False,
+        target_micro: Optional[int] = None
+        ) -> Tuple[str, Optional[int]]:
+    """Joint (remat policy, micro-batch) choice — engine Layer 5.
+
+    Walks the lattice from cheapest recompute to heaviest, returning the
+    FIRST policy whose admitted micro-batch reaches ``target_micro``
+    (default: the whole mini-batch — i.e. no gradient accumulation needed).
+    When no policy reaches the target the policy admitting the largest
+    micro-batch wins, ties broken toward cheaper recompute — heavier remat
+    is bought only when it actually converts into batch. Returns
+    ``(policy, None)`` with the heaviest policy when even micro-batch 1
+    does not fit anywhere (the model needs more parallelism, not MBS).
+    """
+    target = min(target_micro or mini_batch, mini_batch)
+    best_policy, best_micro = POLICY_ORDER[-1], None
+    for policy in POLICY_ORDER:
+        micro = suggest_micro_batch_size(
+            cfg, seq, mini_batch, budget_bytes=budget_bytes, tp=tp,
+            fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
+            remat_policy=policy, optimizer=optimizer,
+            fused_update=fused_update)
+        if micro is not None and micro >= target:
+            return policy, micro
+        if micro is not None and (best_micro is None or micro > best_micro):
+            best_policy, best_micro = policy, micro
+    return best_policy, best_micro
+
+
 def max_minibatch_without_mbs(cfg: ModelConfig, seq: int, *,
                               budget_bytes: int = V5E_HBM_BYTES, tp: int = 1,
                               fsdp: int = 1, opt_slots: Optional[int] = None,
                               act_bytes: int = 2,
-                              remat: bool = True, optimizer: str = "sgd",
+                              remat: bool = True,
+                              remat_policy: Optional[str] = None,
+                              optimizer: str = "sgd",
                               fused_update: bool = False) -> int:
     """The paper's "w/o MBS" failure point: the largest mini-batch whose
     whole-batch activations fit (beyond it, the run 'Fails')."""
     est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
-                   act_bytes=act_bytes, remat=remat, optimizer=optimizer,
+                   act_bytes=act_bytes, remat=remat,
+                   remat_policy=remat_policy, optimizer=optimizer,
                    fused_update=fused_update)
     m = 0
     while est.total(m + 1) <= budget_bytes:

@@ -22,6 +22,13 @@ Layer 4 — fused flat update path (``flat.py`` + ``kernels/fused_update.py``):
 per-dtype 1-D buffers so step ❹ accumulates with one Pallas launch per
 bucket and step ❺ runs through in-place fused optimizer kernels with
 donation — no ``updates``/opt-state transients. See DESIGN.md §Update path.
+
+Layer 5 — remat planner (``models/remat.py`` + the joint search in
+``core/memory_model.suggest_remat_policy_and_micro``): a graded
+activation-checkpointing lattice (none | dots | period | full) chosen
+jointly with the micro-batch size — ``plan_mbs(remat_policy="auto")``
+escalates to heavier recompute only when it buys batch the budget would
+otherwise refuse. See DESIGN.md §Remat planner.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)

@@ -89,6 +89,12 @@ class MBSPlan:
     Σ valid per-sample losses / N_B_valid); ``accum_dtype`` is the gradient
     accumulator precision; ``remat_micro_step``/``unroll`` tune the
     compiled scan.
+
+    Remat (model side): ``remat_policy`` is the graded activation-
+    checkpointing policy (``models/remat.POLICIES``) the loss function must
+    be built with — chosen jointly with the micro-batch size when the
+    caller asks for ``"auto"`` (``auto_policy=True`` then records that the
+    planner, not the caller, picked it).
     """
     mini_batch_size: int
     micro_batch_size: int
@@ -100,6 +106,8 @@ class MBSPlan:
     unroll: int = 1
     auto_micro: bool = False  # micro size chosen by the memory model
     auto_normalization: bool = False  # "paper" upgraded to "exact" (ragged)
+    remat_policy: str = "period"  # none | dots | period | full
+    auto_policy: bool = False  # policy chosen by the planner ("auto")
 
     @property
     def has_ragged_tail(self) -> bool:
@@ -145,10 +153,11 @@ class MBSPlan:
     def describe(self) -> str:
         src = "memory model" if self.auto_micro else "pinned"
         norm = self.normalization + (" (auto)" if self.auto_normalization else "")
+        pol = self.remat_policy + (" (auto)" if self.auto_policy else "")
         return (f"MBSPlan: mini-batch {self.mini_batch_size} -> "
                 f"{self.num_micro_batches} x micro-batch {self.micro_batch_size}"
                 f" (pad {self.pad}, micro {src}, normalization {norm}, "
-                f"accum {jnp.dtype(self.accum_dtype).name})")
+                f"remat {pol}, accum {jnp.dtype(self.accum_dtype).name})")
 
 
 def plan_mbs(mini_batch_size: int, *,
@@ -161,6 +170,7 @@ def plan_mbs(mini_batch_size: int, *,
              remat_micro_step: bool = False, unroll: int = 1,
              tp: int = 1, fsdp: int = 1, opt_slots: Optional[int] = None,
              act_bytes: int = 2, remat: bool = True,
+             remat_policy: Optional[str] = None,
              optimizer: str = "sgd", fused_update: bool = False) -> MBSPlan:
     """Produce an :class:`MBSPlan` for one training setup.
 
@@ -178,10 +188,45 @@ def plan_mbs(mini_batch_size: int, *,
          micro-batch 1 when even that does not fit (more model parallelism
          is needed; MBS cannot shrink the model itself);
       4. no model config at all → one micro-batch (no MBS).
+
+    ``remat_policy`` grades activation checkpointing (engine Layer 5):
+      * an explicit policy ("none"|"dots"|"period"|"full") is used as-is —
+        for auto micro sizing the memory model's activation term is scaled
+        by it;
+      * ``"auto"`` chooses the policy jointly with the micro-batch size
+        (``memory_model.suggest_remat_policy_and_micro``): the cheapest-
+        recompute policy whose admitted N_μ meets the target (the whole
+        mini-batch), escalating to heavier remat only when the budget
+        forces it. With a *pinned* micro size, ``"auto"`` picks the
+        cheapest policy that admits the pinned size. Without a model
+        config there is nothing to search — the legacy ``remat`` bool
+        decides (True → "period", False → "none");
+      * ``None`` (default) preserves the legacy ``remat`` bool behavior.
+    The choice is recorded in ``MBSPlan.remat_policy`` and must be threaded
+    into the loss function (``steps.make_loss_fn(remat_policy=...)``).
     """
     if mini_batch_size < 1:
         raise ValueError(f"mini_batch_size must be >= 1, got {mini_batch_size}")
+    from ..core import memory_model  # deferred: core imports this module
+    from ..models import remat as remat_lib
+    auto_policy_requested = remat_policy == "auto"
+    policy = (None if auto_policy_requested
+              else remat_lib.resolve(remat, remat_policy))
+    can_search = model_cfg is not None and seq_len is not None
+    budget = budget_bytes or memory_model.V5E_HBM_BYTES
+    mm_kw = dict(tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
+                 optimizer=optimizer, fused_update=fused_update)
+
+    def cheapest_policy_admitting(micro: int) -> str:
+        for p in memory_model.POLICY_ORDER:
+            est = memory_model.estimate(model_cfg, seq_len, remat_policy=p,
+                                        **mm_kw)
+            if est.total(micro) <= budget:
+                return p
+        return memory_model.POLICY_ORDER[-1]
+
     auto = False
+    policy_searched = False
     if micro_batch_size is not None:
         micro = micro_batch_size
     elif num_microbatches is not None:
@@ -191,18 +236,29 @@ def plan_mbs(mini_batch_size: int, *,
     elif model_cfg is not None:
         if seq_len is None:
             raise ValueError("auto micro-batch sizing needs seq_len")
-        from ..core import memory_model  # deferred: core imports this module
-        micro = memory_model.suggest_micro_batch_size(
-            model_cfg, seq_len, mini_batch_size,
-            budget_bytes=budget_bytes or memory_model.V5E_HBM_BYTES,
-            tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
-            remat=remat, optimizer=optimizer,
-            fused_update=fused_update) or 1
+        if auto_policy_requested:
+            policy, micro = memory_model.suggest_remat_policy_and_micro(
+                model_cfg, seq_len, mini_batch_size, budget_bytes=budget,
+                **mm_kw)
+            micro = micro or 1
+            policy_searched = True
+        else:
+            micro = memory_model.suggest_micro_batch_size(
+                model_cfg, seq_len, mini_batch_size, budget_bytes=budget,
+                remat_policy=policy, **mm_kw) or 1
         auto = True
     else:
         micro = mini_batch_size
 
     micro = max(1, min(micro, mini_batch_size))  # Algorithm 1 lines 2–4
+    if policy is None:  # "auto" with a pinned micro size (or no model cfg)
+        if can_search:
+            policy = cheapest_policy_admitting(micro)
+            policy_searched = True
+        else:
+            # nothing to search against: the legacy bool decides, and the
+            # plan must NOT claim the planner validated the choice
+            policy = remat_lib.resolve(remat, None)
     n_s = num_micro_batches(mini_batch_size, micro)
     pad = n_s * micro - mini_batch_size
     auto_norm = False
@@ -212,4 +268,6 @@ def plan_mbs(mini_batch_size: int, *,
         normalization, auto_norm = "exact", True
     return MBSPlan(mini_batch_size, micro, n_s, pad, normalization,
                    accum_dtype, remat_micro_step, unroll,
-                   auto_micro=auto, auto_normalization=auto_norm)
+                   auto_micro=auto, auto_normalization=auto_norm,
+                   remat_policy=policy,
+                   auto_policy=auto_policy_requested and policy_searched)

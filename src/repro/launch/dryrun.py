@@ -142,7 +142,8 @@ def _probe_cfg(cfg, periods: int):
 
 
 def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
-                fsdp: bool = True, executor: str = "compiled"):
+                fsdp: bool = True, executor: str = "compiled",
+                remat_policy: str = None):
     """Trip-count-corrected flops/bytes/collective-bytes via two unrolled
     probe compiles (see module docstring)."""
     n = num_microbatches if shape.kind == "train" else 1
@@ -150,7 +151,8 @@ def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
     pshape = (dataclasses.replace(
         shape, global_batch=-(-shape.global_batch // num_microbatches))
         if shape.kind == "train" else shape)
-    step_kw = ({"remat": remat, "executor": executor}
+    step_kw = ({"remat": remat, "remat_policy": remat_policy,
+                "executor": executor}
                if shape.kind == "train" else {})
     probes = {}
     for P in (1, 2):
@@ -188,8 +190,8 @@ def cost_probes(cfg, shape, mesh, num_microbatches: int, remat: bool = True,
 def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                num_microbatches: int = 8, mesh=None, reduced: bool = False,
                probe: bool = True, verbose: bool = True, remat: bool = True,
-               cfg_overrides: dict = None, fsdp: bool = True,
-               executor: str = "compiled"):
+               remat_policy: str = None, cfg_overrides: dict = None,
+               fsdp: bool = True, executor: str = "compiled"):
     cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
@@ -198,19 +200,23 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "long_500k requires sub-quadratic attention "
                           "(DESIGN.md §long_500k applicability)"}
+    plan = None
     if shape.kind == "train":
         # resolve N_Smu through the same planner the step builder uses, so
         # probes/reporting match the compiled step even when the requested
         # count doesn't divide the global batch (<=0 = auto: micro-batch
-        # size from the analytic memory model)
+        # size from the analytic memory model; --remat-policy auto lets
+        # the planner pick the checkpoint grade jointly)
         pinned = (num_microbatches if num_microbatches is not None
                   and num_microbatches > 0 else None)
         plan = engine.plan_mbs(shape.global_batch, num_microbatches=pinned,
                                model_cfg=cfg, seq_len=shape.seq_len,
-                               remat=remat)
+                               remat=remat, remat_policy=remat_policy)
         num_microbatches = plan.num_micro_batches
+        remat_policy = plan.remat_policy  # the chosen grade, for the report
     mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
-    step_kw = {"remat": remat, "executor": executor} \
+    step_kw = {"remat": remat, "remat_policy": remat_policy,
+               "executor": executor} \
         if shape.kind == "train" else {}
     bundle = steps.build_step(cfg, shape, num_microbatches=num_microbatches,
                               **step_kw)
@@ -227,6 +233,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
         "kind": bundle.kind, "num_devices": int(mesh.devices.size),
         "num_microbatches": num_microbatches if bundle.kind == "train" else None,
+        "remat_policy": plan.remat_policy if plan is not None else None,
+        "remat_policy_auto": plan.auto_policy if plan is not None else None,
         "raw_cost_analysis": {k: float(v) for k, v in cost.items()
                               if k in ("flops", "bytes accessed",
                                        "transcendentals", "optimal_seconds")},
@@ -247,7 +255,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     if probe:
         result["corrected"] = cost_probes(cfg, shape, mesh, num_microbatches,
                                           remat=remat, fsdp=fsdp,
-                                          executor=executor)
+                                          executor=executor,
+                                          remat_policy=remat_policy)
     if verbose:
         print(json.dumps(result))
     return result
@@ -269,6 +278,12 @@ def main():
     ap.add_argument("--no-probe", action="store_true")
     ap.add_argument("--no-remat", action="store_true",
                     help="perf knob: disable per-period activation remat")
+    ap.add_argument("--remat-policy",
+                    choices=["auto", "none", "dots", "period", "full"],
+                    default=None,
+                    help="activation-checkpoint grade (overrides "
+                         "--no-remat); auto = planner chooses jointly "
+                         "with the micro-batch size")
     ap.add_argument("--no-fsdp", action="store_true",
                     help="perf knob: replicate params over the data axis "
                          "(kills per-micro-batch weight all-gathers; only "
@@ -284,7 +299,9 @@ def main():
     res = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
                      num_microbatches=args.microbatches, reduced=args.reduced,
                      probe=not args.no_probe, verbose=args.out is None,
-                     remat=not args.no_remat, cfg_overrides=overrides or None,
+                     remat=not args.no_remat,
+                     remat_policy=args.remat_policy,
+                     cfg_overrides=overrides or None,
                      fsdp=not args.no_fsdp, executor=args.executor)
     if args.out:
         os.makedirs(args.out, exist_ok=True)

@@ -21,6 +21,7 @@ from .. import engine
 from ..configs.shapes import InputShape
 from ..core import losses
 from ..models import encdec, transformer
+from ..models import remat as remat_lib
 from ..models.config import ModelConfig
 from .. import optim
 
@@ -60,19 +61,27 @@ def abstract_opt_state(optimizer, params_shapes):
 # ---------------------------------------------------------------------------
 
 def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
-                 scan_unroll: int = 1):
+                 scan_unroll: int = 1,
+                 remat_policy: Optional[str] = None):
+    """``remat_policy`` grades activation checkpointing (``models/remat``);
+    None keeps the legacy ``remat`` bool mapping (True → "period",
+    False → "none"). Pass the *plan's* chosen policy here so the compiled
+    loss matches what the planner admitted."""
+    policy = remat_lib.resolve(remat, remat_policy)
+
     def loss_fn(params, mb, exact_denom=None):
         sw = mb.get("sample_weight")
         if cfg.is_encdec:
             logits, aux = encdec.forward(params, cfg, mb["frames"],
                                          mb["tgt_tokens"], dtype=dtype,
-                                         remat=remat, scan_unroll=scan_unroll)
+                                         remat_policy=policy,
+                                         scan_unroll=scan_unroll)
         else:
             logits, aux = transformer.forward(
                 params, cfg, mb["tokens"],
                 vision_embeds=mb.get("vision_embeds"),
                 mrope_positions=mb.get("mrope_positions"),
-                dtype=dtype, remat=remat, scan_unroll=scan_unroll)
+                dtype=dtype, remat_policy=policy, scan_unroll=scan_unroll)
         loss = losses.cross_entropy(logits, mb["labels"], sample_weight=sw,
                                     exact_denom=exact_denom)
         if cfg.is_moe:
@@ -95,22 +104,27 @@ def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
 def build_train_step(cfg: ModelConfig, shape: InputShape, *,
                      num_microbatches: Optional[int] = None, optimizer=None,
                      dtype=jnp.bfloat16, remat: bool = True,
+                     remat_policy: Optional[str] = None,
                      normalization: str = "paper",
                      scan_unroll: int = 1,
                      executor: str = "compiled") -> StepBundle:
     """Compiled train step via the MBS engine. ``num_microbatches=None``
     auto-sizes the micro-batch from the analytic memory model (the paper's
     experimentally-determined size, computed — §4.3.2); ragged splits are
-    padded + masked rather than asserted away."""
+    padded + masked rather than asserted away. ``remat_policy`` (incl.
+    ``"auto"``) goes through the planner; the loss is built with the
+    plan's *chosen* policy."""
     optimizer = optimizer or make_optimizer(cfg)
     plan = engine.plan_mbs(shape.global_batch,
                            num_microbatches=num_microbatches,
                            model_cfg=cfg, seq_len=shape.seq_len,
                            normalization=normalization, unroll=scan_unroll,
                            act_bytes=jnp.dtype(dtype).itemsize, remat=remat,
+                           remat_policy=remat_policy,
                            **optim.memory_model_kw(optimizer,
                                                    fused=executor == "flat"))
-    loss_fn = make_loss_fn(cfg, dtype, remat, scan_unroll)
+    loss_fn = make_loss_fn(cfg, dtype, scan_unroll=scan_unroll,
+                           remat_policy=plan.remat_policy)
     step = engine.get_executor(executor)(
         loss_fn, optimizer, plan).make_train_step()
 
@@ -149,7 +163,12 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
 # ---------------------------------------------------------------------------
 
 def build_prefill_step(cfg: ModelConfig, shape: InputShape, *,
-                       dtype=jnp.bfloat16, scan_unroll: int = 1) -> StepBundle:
+                       dtype=jnp.bfloat16, scan_unroll: int = 1,
+                       remat_policy: str = "none") -> StepBundle:
+    """``remat_policy`` defaults to "none" (prefill is forward-only, so
+    checkpointing buys nothing when serving alone) but is routed through —
+    NOT hardcoded — so eval interleaved with training can compile under
+    the training policy when memory is tight."""
     s, b = shape.seq_len, shape.global_batch
     sds = jax.ShapeDtypeStruct
     i32 = jnp.int32
@@ -161,7 +180,8 @@ def build_prefill_step(cfg: ModelConfig, shape: InputShape, *,
             # returns last-position logits (cache built by init_decode_cache
             # in the serving loop).
             logits, _ = encdec.forward(params, cfg, frames, tokens,
-                                       dtype=dtype, remat=False,
+                                       dtype=dtype,
+                                       remat_policy=remat_policy,
                                        scan_unroll=scan_unroll)
             return logits[:, -1]
 
@@ -237,6 +257,10 @@ def build_step(cfg: ModelConfig, shape: InputShape, *, num_microbatches: int = 8
         return build_train_step(cfg, shape, num_microbatches=num_microbatches,
                                 dtype=dtype, scan_unroll=scan_unroll, **kw)
     if shape.kind == "prefill":
-        return build_prefill_step(cfg, shape, dtype=dtype,
-                                  scan_unroll=scan_unroll)
+        # eval/serving compiles under the caller's policy (not a hardcoded
+        # remat=False); "auto" has no planner here — use the lattice floor
+        policy = kw.get("remat_policy") or "none"
+        return build_prefill_step(
+            cfg, shape, dtype=dtype, scan_unroll=scan_unroll,
+            remat_policy="none" if policy == "auto" else policy)
     return build_decode_step(cfg, shape, dtype=dtype, scan_unroll=scan_unroll)

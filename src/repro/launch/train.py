@@ -45,11 +45,14 @@ def default_optimizer(args) -> optim.Optimizer:
 
 def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
     """The launcher's batch geometry: pinned N_Sμ when given, else the
-    memory model picks the micro-batch size (paper §4.3.2, computed).
-    ``optimizer`` (default: the launcher's SGD-momentum) feeds the model's
-    state-slot count and step-❺ transient: the flat executor updates in
-    place, so its plan admits larger auto micro-batches — but only when
-    the optimizer actually publishes a fused hook."""
+    memory model picks the micro-batch size (paper §4.3.2, computed) —
+    jointly with the remat policy when ``--remat-policy auto`` (the
+    default: cheapest recompute that meets the batch target, escalating
+    only when the budget forces it). ``optimizer`` (default: the
+    launcher's SGD-momentum) feeds the model's state-slot count and
+    step-❺ transient: the flat executor updates in place, so its plan
+    admits larger auto micro-batches — but only when the optimizer
+    actually publishes a fused hook."""
     budget = (int(args.hbm_budget_gb * 1024 ** 3)
               if args.hbm_budget_gb else None)
     dtype_bytes = 4 if args.dtype == "float32" else 2
@@ -59,14 +62,17 @@ def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
         model_cfg=cfg, seq_len=args.seq, budget_bytes=budget,
         normalization=args.normalization,
         act_bytes=dtype_bytes, remat=not args.reduced,
+        remat_policy=getattr(args, "remat_policy", None),
         **optim.memory_model_kw(optimizer, fused=args.executor == "flat"))
 
 
 def build_executor(cfg, plan, args, optimizer=None):
     """The step path used by main() — also exercised directly by the
-    end-to-end ragged-tail test."""
+    end-to-end ragged-tail test. The loss compiles under the plan's
+    chosen remat policy, so the step matches what the planner admitted."""
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
-    loss_fn = steps.make_loss_fn(cfg, dtype=dtype, remat=not args.reduced)
+    loss_fn = steps.make_loss_fn(cfg, dtype=dtype,
+                                 remat_policy=plan.remat_policy)
     opt = optimizer or default_optimizer(args)
     return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
 
@@ -104,6 +110,12 @@ def main():
                     default="compiled")
     ap.add_argument("--normalization", choices=["paper", "exact"],
                     default="paper")
+    ap.add_argument("--remat-policy",
+                    choices=["auto", "none", "dots", "period", "full"],
+                    default="auto",
+                    help="activation-checkpoint grade; auto = planner "
+                         "picks it jointly with the micro-batch size "
+                         "(cheapest recompute that meets the batch target)")
     ap.add_argument("--hbm-budget-gb", type=float, default=None,
                     help="per-device HBM budget for auto micro-batch sizing")
     ap.add_argument("--seq", type=int, default=64)

@@ -1,2 +1,2 @@
 from .config import ModelConfig  # noqa: F401
-from . import attention, cnn, encdec, moe, nn, recurrent, ssm, transformer  # noqa: F401
+from . import attention, cnn, encdec, moe, nn, recurrent, remat, ssm, transformer  # noqa: F401

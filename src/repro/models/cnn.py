@@ -13,6 +13,8 @@ from typing import Any, Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import remat as remat_lib
+
 
 # ---------------------------------------------------------------------------
 # primitives
@@ -107,8 +109,14 @@ def resnet_init(key, *, num_classes: int, stage_sizes: Sequence[int] = (3, 4, 6,
     return params, state
 
 
-def resnet_forward(params, state, x, *, stage_sizes=(3, 4, 6, 3), train=True):
-    """x: (B, H, W, C) -> logits (B, num_classes); returns (logits, new_state)."""
+def resnet_forward(params, state, x, *, stage_sizes=(3, 4, 6, 3), train=True,
+                   remat_policy: str = "none"):
+    """x: (B, H, W, C) -> logits (B, num_classes); returns (logits, new_state).
+
+    The remat unit is one bottleneck block: under MBS the CNNs have no
+    period scan, so ``remat_policy`` grades per-block checkpointing
+    ("dots" saves the convolutions, "period"/"full" save only block
+    boundaries)."""
     ns: Dict[str, Any] = {}
     h = conv(params["stem"], x, stride=2)
     h, ns["bn_stem"] = batchnorm(params["bn_stem"], state["bn_stem"], h, train)
@@ -118,8 +126,11 @@ def resnet_forward(params, state, x, *, stage_sizes=(3, 4, 6, 3), train=True):
     for si, n in enumerate(stage_sizes):
         for bi in range(n):
             stride = 2 if (bi == 0 and si > 0) else 1
-            h, ns[f"s{si}b{bi}"] = _bottleneck(
-                params[f"s{si}b{bi}"], state[f"s{si}b{bi}"], h, stride, train)
+            block = remat_lib.checkpoint_period(
+                lambda bp, bs, bh, stride=stride: _bottleneck(
+                    bp, bs, bh, stride, train), remat_policy)
+            h, ns[f"s{si}b{bi}"] = block(
+                params[f"s{si}b{bi}"], state[f"s{si}b{bi}"], h)
     h = jnp.mean(h, axis=(1, 2))
     logits = h.astype(jnp.float32) @ params["head"]["w"] + params["head"]["b"]
     return logits, ns
@@ -167,14 +178,18 @@ def unet_init(key, *, in_channels: int = 3, out_channels: int = 1,
     return params, state
 
 
-def unet_forward(params, state, x, *, depth: int = 4, train=True):
-    """x: (B, H, W, C) -> logits (B, H, W, out); returns (logits, new_state)."""
+def unet_forward(params, state, x, *, depth: int = 4, train=True,
+                 remat_policy: str = "none"):
+    """x: (B, H, W, C) -> logits (B, H, W, out); returns (logits, new_state).
+
+    The remat unit is one double-conv block (see ``resnet_forward``)."""
+    block = remat_lib.checkpoint_period(
+        lambda bp, bs, bh: _double_conv(bp, bs, bh, train), remat_policy)
     ns: Dict[str, Any] = {}
     skips: List[jnp.ndarray] = []
     h = x
     for d in range(depth + 1):
-        h, ns[f"down{d}"] = _double_conv(params[f"down{d}"],
-                                         state[f"down{d}"], h, train)
+        h, ns[f"down{d}"] = block(params[f"down{d}"], state[f"down{d}"], h)
         if d < depth:
             skips.append(h)
             h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
@@ -183,5 +198,5 @@ def unet_forward(params, state, x, *, depth: int = 4, train=True):
         B, H, W, C = h.shape
         h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
         h = jnp.concatenate([skips[d], h], axis=-1)
-        h, ns[f"up{d}"] = _double_conv(params[f"up{d}"], state[f"up{d}"], h, train)
+        h, ns[f"up{d}"] = block(params[f"up{d}"], state[f"up{d}"], h)
     return conv(params["head"], h).astype(jnp.float32), ns

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import attention, nn
+from . import remat as remat_lib
 from .config import ModelConfig
 
 
@@ -54,14 +55,15 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 
 
 def encode(params, cfg: ModelConfig, frames, *, dtype=jnp.bfloat16,
-           remat: bool = True, scan_unroll: int = 1):
+           remat: bool = True, remat_policy: Optional[str] = None,
+           scan_unroll: int = 1):
     """frames: (B, S_enc, d_model) stubbed frontend embeddings."""
+    policy = remat_lib.resolve(remat, remat_policy)
     B, S, _ = frames.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x = frames.astype(dtype)
 
-    def layer(x, p):
-        h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    def attn_part(p, h):
         B_, S_, _ = h.shape
         H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
         q = nn.dense(p["attn"]["wq"], h, dtype).reshape(B_, S_, H, hd)
@@ -72,41 +74,55 @@ def encode(params, cfg: ModelConfig, frames, *, dtype=jnp.bfloat16,
         o = attention.multihead_attention(q, k, v, q_pos=positions,
                                           k_pos=positions, causal=False,
                                           softcap=cfg.attn_softcap)
-        x = x + nn.dense(p["attn"]["wo"], o.reshape(B_, S_, H * hd), dtype)
+        return nn.dense(p["attn"]["wo"], o.reshape(B_, S_, H * hd), dtype)
+
+    def layer(x, p):
+        h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+        x = x + remat_lib.checkpoint_block(attn_part, policy)(p, h)
         h = nn.rmsnorm(p["pre_ffn_norm"], x, cfg.norm_eps)
-        x = x + nn.ffn(p["ffn"], h, cfg.ffn_kind, dtype)
+        x = x + remat_lib.checkpoint_block(
+            lambda fp, hh: nn.ffn(fp, hh, cfg.ffn_kind, dtype),
+            policy)(p["ffn"], h)
         return x, None
 
-    if remat:
-        layer = jax.checkpoint(layer)
+    layer = remat_lib.checkpoint_period(layer, policy)
     x, _ = jax.lax.scan(layer, x, params["enc_layers"], unroll=scan_unroll)
     return nn.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
 
 
 def forward(params, cfg: ModelConfig, frames, tgt_tokens, *,
-            dtype=jnp.bfloat16, remat: bool = True, scan_unroll: int = 1):
+            dtype=jnp.bfloat16, remat: bool = True,
+            remat_policy: Optional[str] = None, scan_unroll: int = 1):
     """Teacher-forced forward. Returns (logits (B, S_dec, V), aux=0)."""
-    enc_out = encode(params, cfg, frames, dtype=dtype, remat=remat,
+    policy = remat_lib.resolve(remat, remat_policy)
+    enc_out = encode(params, cfg, frames, dtype=dtype, remat_policy=policy,
                      scan_unroll=scan_unroll)
     B, S = tgt_tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x = nn.embed(params["embed"], tgt_tokens, dtype, scale=cfg.embed_scale)
 
-    def layer(x, p):
-        h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+    def self_part(p, h):
         h, _ = attention.attn_block(p["self_attn"], cfg, h, positions,
                                     compute_dtype=dtype)
-        x = x + h
-        h = nn.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        return h
+
+    def cross_part(p, h):
         h, _ = attention.cross_attn_block(p["cross_attn"], cfg, h,
                                           kv_src=enc_out, compute_dtype=dtype)
-        x = x + h
+        return h
+
+    def layer(x, p):
+        h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+        x = x + remat_lib.checkpoint_block(self_part, policy)(p, h)
+        h = nn.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        x = x + remat_lib.checkpoint_block(cross_part, policy)(p, h)
         h = nn.rmsnorm(p["pre_ffn_norm"], x, cfg.norm_eps)
-        x = x + nn.ffn(p["ffn"], h, cfg.ffn_kind, dtype)
+        x = x + remat_lib.checkpoint_block(
+            lambda fp, hh: nn.ffn(fp, hh, cfg.ffn_kind, dtype),
+            policy)(p["ffn"], h)
         return x, None
 
-    if remat:
-        layer = jax.checkpoint(layer)
+    layer = remat_lib.checkpoint_period(layer, policy)
     x, _ = jax.lax.scan(layer, x, params["dec_layers"], unroll=scan_unroll)
     x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = nn.unembed(params["embed"], x, jnp.float32)

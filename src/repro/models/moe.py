@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from . import nn
+from . import remat as remat_lib
 from .config import ModelConfig
 
 
@@ -72,8 +73,20 @@ def _expert_ffn(p, x, kind: str, num_experts: int):
     return nn.shard_hint(out, *out_spec)
 
 
-def moe_block(p, cfg: ModelConfig, x, compute_dtype=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, D). Returns (out (B,S,D), aux_loss scalar fp32)."""
+def moe_block(p, cfg: ModelConfig, x, compute_dtype=None,
+              remat_policy: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (out (B,S,D), aux_loss scalar fp32).
+
+    ``remat_policy="full"`` nests a ``jax.checkpoint`` around the block
+    (inside the per-period one) so the routing/dispatch/expert-FFN
+    intermediates are recomputed one block at a time in the backward."""
+    fn = remat_lib.checkpoint_block(
+        lambda bp, bx: _moe_block(bp, cfg, bx, compute_dtype), remat_policy)
+    return fn(p, x)
+
+
+def _moe_block(p, cfg: ModelConfig, x, compute_dtype=None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     x = nn.seq_gathered(x)  # full-S tokens for routing/dispatch
     B, S, D = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token

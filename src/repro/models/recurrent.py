@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import nn
+from . import remat as remat_lib
 from .config import ModelConfig
 
 _C = 8.0  # RG-LRU temperature constant
@@ -57,9 +58,23 @@ def _causal_conv(x, conv_w, conv_b):
 
 
 def recurrent_block(p, cfg: ModelConfig, x, compute_dtype=None,
-                    init_state=None, return_cache: bool = False
+                    init_state=None, return_cache: bool = False,
+                    remat_policy: str = "none"
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full-sequence RG-LRU block. x: (B, S, D) -> ((B, S, D), final_h)."""
+    """Full-sequence RG-LRU block. x: (B, S, D) -> ((B, S, D), final_h).
+
+    ``remat_policy="full"`` nests a ``jax.checkpoint`` around the block so
+    the associative-scan intermediates are recomputed per block."""
+    fn = remat_lib.checkpoint_block(
+        lambda bp, bx: _recurrent_block(bp, cfg, bx, compute_dtype,
+                                        init_state, return_cache),
+        remat_policy)
+    return fn(p, x)
+
+
+def _recurrent_block(p, cfg: ModelConfig, x, compute_dtype=None,
+                     init_state=None, return_cache: bool = False
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     B, S, D = x.shape
     gate = jax.nn.gelu(nn.dense(p["in_gate"], x, compute_dtype))
     xb = nn.dense(p["in_x"], x, compute_dtype)

@@ -1,0 +1,85 @@
+"""Graded rematerialization policies — the compute↔memory axis the planner
+trades against the micro-batch size (engine Layer 5, DESIGN.md §Remat
+planner).
+
+The paper fits the micro-batch into "the remaining memory after the model
+is uploaded" (§4.3.2); remat *creates* memory by trading compute for
+activations, so the two knobs must be chosen jointly. The lattice, in
+order of increasing memory savings / increasing recompute:
+
+  ``none``    no checkpointing: every intermediate of every period stays
+              live for the backward pass (fastest, heaviest).
+  ``dots``    ``jax.checkpoint`` per period with
+              ``checkpoint_policies.checkpoint_dots``: matmul outputs are
+              saved (the expensive-to-recompute part), elementwise ops are
+              recomputed.
+  ``period``  plain ``jax.checkpoint`` per period (the repo's historical
+              ``remat=True``): only the residual stream at each period
+              boundary survives the forward; one period is recomputed at a
+              time during the backward.
+  ``full``    ``period`` plus a nested ``jax.checkpoint`` around every
+              block *inside* the period, so the recompute working set is a
+              single block rather than a whole period.
+
+Model forwards take ``remat_policy`` (string) next to the legacy
+``remat: bool``; :func:`resolve` maps the bool onto the lattice
+(True → "period", False → "none") so existing callers are untouched.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+# Lattice order == escalation order: the planner prefers the leftmost
+# (cheapest-recompute) policy whose admitted micro-batch meets the target.
+POLICIES = ("none", "dots", "period", "full")
+
+
+def validate(policy: str) -> str:
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown remat policy {policy!r}; known: {list(POLICIES)} "
+            "(or 'auto' at the planner layer)")
+    return policy
+
+
+def policy_weight(policy: str) -> int:
+    """Position on the lattice (0 = no remat). Admission is monotone
+    non-decreasing in this weight — the property the planner's escalation
+    and the hypothesis tests rely on."""
+    return POLICIES.index(validate(policy))
+
+
+def resolve(remat: Optional[bool] = None,
+            remat_policy: Optional[str] = None) -> str:
+    """Collapse the (legacy bool, graded policy) pair to one policy.
+
+    An explicit ``remat_policy`` wins; otherwise the bool maps to its
+    historical meaning (per-period checkpointing or nothing)."""
+    if remat_policy is not None:
+        return validate(remat_policy)
+    if remat is None or remat:
+        return "period"
+    return "none"
+
+
+def checkpoint_period(fn: Callable, policy: str) -> Callable:
+    """Wrap a period/scan-body function per the policy (outer level)."""
+    validate(policy)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy in ("period", "full"):
+        return jax.checkpoint(fn)
+    return fn
+
+
+def checkpoint_block(fn: Callable, policy: str) -> Callable:
+    """Wrap a single block inside an already-checkpointed period: only the
+    ``full`` policy nests a second checkpoint here, shrinking the backward
+    recompute working set from one period to one block."""
+    validate(policy)
+    if policy == "full":
+        return jax.checkpoint(fn)
+    return fn

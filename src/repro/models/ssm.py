@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from . import nn
+from . import remat as remat_lib
 from .config import ModelConfig
 
 
@@ -115,9 +116,22 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
 
 
 def ssm_block(p, cfg: ModelConfig, x, compute_dtype=None,
-              init_state=None, return_cache: bool = False
+              init_state=None, return_cache: bool = False,
+              remat_policy: str = "none"
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D)."""
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D).
+
+    ``remat_policy="full"`` nests a ``jax.checkpoint`` around the block so
+    the chunked-scan intermediates are recomputed per block, not per period."""
+    fn = remat_lib.checkpoint_block(
+        lambda bp, bx: _ssm_block(bp, cfg, bx, compute_dtype, init_state,
+                                  return_cache), remat_policy)
+    return fn(p, x)
+
+
+def _ssm_block(p, cfg: ModelConfig, x, compute_dtype=None,
+               init_state=None, return_cache: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     B, S, D = x.shape
     di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
     zxbcdt = nn.dense(p["in_proj"], x, compute_dtype)

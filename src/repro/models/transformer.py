@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from . import attention, moe, nn, recurrent, ssm
+from . import remat as remat_lib
 from .config import ModelConfig
 
 VISION_EMBED_DIM = 1280  # stubbed ViT output width (qwen2-vl card)
@@ -92,24 +93,37 @@ def _theta_for(cfg: ModelConfig, kind: str):
 
 def _apply_slot(p, cfg: ModelConfig, kind: str, x, positions, *, dtype,
                 global_window=None, mrope_positions=None,
-                want_cache: bool = False, max_len: Optional[int] = None):
-    """Returns (x, aux_loss, cache_entry)."""
+                want_cache: bool = False, max_len: Optional[int] = None,
+                remat_policy: str = "none"):
+    """Returns (x, aux_loss, cache_entry). Under ``remat_policy="full"``
+    each block (attention / FFN / MoE / SSM / RG-LRU) nests its own
+    ``jax.checkpoint`` inside the per-period one, so the backward pass
+    recomputes one block at a time instead of a whole period."""
     aux = jnp.zeros((), jnp.float32)
     if kind in ("global", "local"):
         window = _window_for(cfg, kind, global_window)
-        h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
-        h, kv = attention.attn_block(
-            p["attn"], cfg, h, positions, window=window,
-            rope_theta=_theta_for(cfg, kind), compute_dtype=dtype,
-            mrope_positions=mrope_positions)
-        if cfg.use_post_norm:
-            h = nn.rmsnorm(p["post_norm"], h, cfg.norm_eps)
+
+        def attn_part(sp, x):
+            h = nn.rmsnorm(sp["pre_norm"], x, cfg.norm_eps)
+            h, kv = attention.attn_block(
+                sp["attn"], cfg, h, positions, window=window,
+                rope_theta=_theta_for(cfg, kind), compute_dtype=dtype,
+                mrope_positions=mrope_positions)
+            if cfg.use_post_norm:
+                h = nn.rmsnorm(sp["post_norm"], h, cfg.norm_eps)
+            return h, kv
+
+        h, kv = remat_lib.checkpoint_block(attn_part, remat_policy)(p, x)
         x = x + h
         h = nn.rmsnorm(p["pre_ffn_norm"], x, cfg.norm_eps)
         if cfg.is_moe:
-            h, aux = moe.moe_block(p["moe"], cfg, h, compute_dtype=dtype)
+            h, aux = moe.moe_block(p["moe"], cfg, h, compute_dtype=dtype,
+                                   remat_policy=remat_policy)
         else:
-            h = nn.ffn(p["ffn"], h, cfg.ffn_kind, compute_dtype=dtype)
+            h = remat_lib.checkpoint_block(
+                lambda fp, hh: nn.ffn(fp, hh, cfg.ffn_kind,
+                                      compute_dtype=dtype),
+                remat_policy)(p["ffn"], h)
         if cfg.use_post_norm:
             h = nn.rmsnorm(p["post_ffn_norm"], h, cfg.norm_eps)
         x = x + h
@@ -122,16 +136,20 @@ def _apply_slot(p, cfg: ModelConfig, kind: str, x, positions, *, dtype,
         h, final_h = recurrent.recurrent_block(p["rec"], cfg,
                                                nn.seq_gathered(h),
                                                compute_dtype=dtype,
-                                               return_cache=want_cache)
+                                               return_cache=want_cache,
+                                               remat_policy=remat_policy)
         x = x + nn.seq_sharded(h)
         h = nn.rmsnorm(p["pre_ffn_norm"], x, cfg.norm_eps)
-        x = x + nn.ffn(p["ffn"], h, cfg.ffn_kind, compute_dtype=dtype)
+        x = x + remat_lib.checkpoint_block(
+            lambda fp, hh: nn.ffn(fp, hh, cfg.ffn_kind, compute_dtype=dtype),
+            remat_policy)(p["ffn"], h)
         return x, aux, final_h
     if kind == "ssm":
         h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
         h, final = ssm.ssm_block(p["ssm"], cfg, nn.seq_gathered(h),
                                  compute_dtype=dtype,
-                                 return_cache=want_cache)
+                                 return_cache=want_cache,
+                                 remat_policy=remat_policy)
         return x + nn.seq_sharded(h), aux, final
     raise ValueError(kind)
 
@@ -150,11 +168,17 @@ def _embed_inputs(params, cfg: ModelConfig, tokens, vision_embeds, dtype):
 
 def forward(params, cfg: ModelConfig, tokens, *, positions=None,
             vision_embeds=None, mrope_positions=None, dtype=jnp.bfloat16,
-            global_window=None, remat: bool = True, return_hidden=False,
+            global_window=None, remat: bool = True,
+            remat_policy: Optional[str] = None, return_hidden=False,
             scan_unroll: int = 1):
     """Full-sequence forward (training / prefill). tokens: (B, S) int32.
 
+    ``remat_policy`` grades activation checkpointing (see ``models/remat``);
+    when None the legacy ``remat`` bool maps onto the lattice
+    (True → "period", False → "none").
+
     Returns (logits (B,S,V) fp32, aux_loss scalar)."""
+    policy = remat_lib.resolve(remat, remat_policy)
     B, S = tokens.shape[:2]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
@@ -171,12 +195,12 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None,
                 x, aux, _ = _apply_slot(p, cfg, kind, x, positions,
                                         dtype=dtype,
                                         global_window=global_window,
-                                        mrope_positions=mrope_positions)
+                                        mrope_positions=mrope_positions,
+                                        remat_policy=policy)
                 aux_total = aux_total + aux
             return x, aux_total
 
-        if remat:
-            period_fn = jax.checkpoint(period_fn)
+        period_fn = remat_lib.checkpoint_period(period_fn, policy)
 
         def scan_body(x, slot_params):
             return period_fn(x, slot_params)

@@ -7,3 +7,128 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import dataclasses  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import engine, optim  # noqa: E402
+from repro.core import losses  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Executor conformance harness — the shared scaffolding every executor-
+# equivalence test builds on (consolidated from test_engine / test_flat_update
+# / test_pipeline, which used to carry three divergent copies).
+# ---------------------------------------------------------------------------
+
+# The full executor grid. Parametrize with
+#   @pytest.mark.parametrize("executor", EXECUTOR_GRID)
+# and construct via make_executor() so CPU runs get the right interpret/
+# donate defaults in one place.
+EXECUTOR_GRID = sorted(engine.EXECUTORS)
+
+# per-executor construction kwargs for CPU test runs: the Pallas-backed
+# executors run their kernels in interpret mode off-TPU
+EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True},
+               "flat": {"interpret": True}}
+
+
+def make_executor(name: str, loss_fn, optimizer, plan, **overrides):
+    """Construct the named executor with the test-suite defaults
+    (interpret mode for Pallas executors) merged with ``overrides``.
+    ``donate=False`` is accepted (and dropped) for the streaming executor
+    so call sites can disable donation across the whole grid."""
+    kw = dict(EXECUTOR_KW[name])
+    kw.update(overrides)
+    if name == "streaming":
+        kw.pop("donate", None)
+        kw.pop("interpret", None)
+    return engine.get_executor(name)(loss_fn, optimizer, plan, **kw)
+
+
+# absolute tolerance per result dtype: fp32 paths agree to rounding noise,
+# reduced-precision accumulators only to their own epsilon
+DTYPE_ATOL = {
+    jnp.dtype(jnp.float32): 2e-6,
+    jnp.dtype(jnp.bfloat16): 2e-2,
+    jnp.dtype(jnp.float16): 2e-3,
+}
+
+
+def max_abs_err(a, b) -> float:
+    """Largest absolute elementwise difference across two pytrees (in fp32)."""
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def assert_trees_close(actual, expected, *, atol: Optional[float] = None,
+                       what: str = "trees"):
+    """Leafwise comparison with per-dtype tolerances (``DTYPE_ATOL``);
+    an explicit ``atol`` overrides for every leaf. Structure must match."""
+    la, le = jax.tree.leaves(actual), jax.tree.leaves(expected)
+    assert len(la) == len(le), (
+        f"{what}: {len(la)} leaves vs {len(le)} expected")
+    for i, (x, y) in enumerate(zip(la, le)):
+        tol = atol if atol is not None else DTYPE_ATOL.get(
+            jnp.dtype(getattr(x, "dtype", jnp.float32)), 2e-6)
+        err = float(jnp.max(jnp.abs(jnp.asarray(x).astype(jnp.float32)
+                                    - jnp.asarray(y).astype(jnp.float32))))
+        assert err <= tol, (
+            f"{what}: leaf {i} ({getattr(x, 'dtype', '?')}) differs by "
+            f"{err:.3e} > atol {tol:.0e}")
+
+
+def assert_scalar_close(actual, expected, atol: float = 2e-6,
+                        what: str = "scalar"):
+    err = abs(float(actual) - float(expected))
+    assert err <= atol, f"{what}: |{float(actual)} - {float(expected)}| = " \
+                        f"{err:.3e} > {atol:.0e}"
+
+
+# ---------------------------------------------------------------------------
+# tiny-model factory: the 2-layer tanh MLP + CE loss every equivalence test
+# uses (small enough that all four executors run in milliseconds on CPU)
+# ---------------------------------------------------------------------------
+
+def tiny_loss_fn(p, batch, exact_denom=None):
+    h = jnp.tanh(batch["x"] @ p["w1"])
+    logits = h @ p["w2"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def tiny_params(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
+
+
+def tiny_batch(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed + 100)
+    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
+            "y": rng.integers(0, 4, n).astype(np.int32)}
+
+
+@dataclasses.dataclass
+class ToyDataset:
+    """Deterministic-in-(seed, step) dataset with the synthetic datasets'
+    ``batch(batch_size, seed)`` interface, over the tiny model's features."""
+    n_features: int = 8
+    n_classes: int = 4
+    seed: int = 0
+
+    def batch(self, batch_size, seed):
+        rng = np.random.default_rng((self.seed, seed))
+        return {"x": rng.normal(size=(batch_size, self.n_features)
+                                ).astype(np.float32),
+                "y": rng.integers(0, self.n_classes, batch_size
+                                  ).astype(np.int32)}
+
+
+def tiny_optimizer(lr: float = 0.1, momentum: float = 0.9,
+                   weight_decay: float = 1e-4) -> optim.Optimizer:
+    return optim.sgd(lr, momentum=momentum, weight_decay=weight_decay)

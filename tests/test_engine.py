@@ -1,6 +1,8 @@
-"""Unified MBS engine: planner geometry + the three executors (compiled
-scan / streaming / Pallas-fused, interpret mode on CPU) produce numerically
-equal gradients and parameter updates — eq. (15)–(17) behind one interface."""
+"""Unified MBS engine: planner geometry + the four executors (compiled
+scan / streaming / Pallas-fused / flat, interpret mode on CPU) produce
+numerically equal gradients and parameter updates — eq. (15)–(17) behind
+one interface. Shared fixtures live in ``conftest.py`` (the executor
+conformance harness)."""
 import argparse
 
 import jax
@@ -8,39 +10,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import (EXECUTOR_GRID, assert_scalar_close, make_executor,
+                      max_abs_err as _max_err, tiny_batch as _batch,
+                      tiny_loss_fn as _loss_fn, tiny_params as _params)
 from repro import configs, engine, optim
 from repro.core import losses, memory_model
 from repro.data import LMDataset
 from repro.launch import steps, train as train_lib
-
-EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True},
-               "flat": {"interpret": True}}
-
-
-def _loss_fn(p, batch, exact_denom=None):
-    h = jnp.tanh(batch["x"] @ p["w1"])
-    logits = h @ p["w2"]
-    return losses.cross_entropy(
-        logits, batch["y"], sample_weight=batch.get("sample_weight"),
-        exact_denom=exact_denom), {}
-
-
-def _params(seed=0):
-    rng = np.random.default_rng(seed)
-    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
-            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
-
-
-def _batch(n, seed=0):
-    rng = np.random.default_rng(seed + 100)
-    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
-            "y": rng.integers(0, 4, n).astype(np.int32)}
-
-
-def _max_err(a, b):
-    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
-                                     - y.astype(jnp.float32))))
-               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +77,7 @@ def test_plan_from_legacy_config_roundtrip():
 # executor equivalence (acceptance: all three equal on a shared fixture)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
 @pytest.mark.parametrize("n_b,n_mu,normalization", [
     (12, 4, "paper"), (16, 8, "paper"),
     (12, 4, "exact"), (10, 4, "exact"), (13, 5, "exact"),
@@ -113,14 +89,13 @@ def test_executor_gradients_match_full_batch(executor, n_b, n_mu, normalization)
     plan = engine.plan_mbs(n_b, micro_batch_size=n_mu,
                            normalization=normalization)
     assert plan.normalization == "exact" or n_b % n_mu == 0
-    ex = engine.get_executor(executor)(
-        _loss_fn, optim.sgd(0.1), plan, **EXECUTOR_KW[executor])
+    ex = make_executor(executor, _loss_fn, optim.sgd(0.1), plan)
     g, loss = ex.gradients(params, plan.device_split(batch))
     assert _max_err(g, ref) < 2e-6
     assert abs(float(loss) - ref_loss) < 2e-6
 
 
-@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
 def test_executor_step_matches_baseline_update(executor):
     """One optimizer step via any engine executor == the no-MBS baseline."""
     params, batch = _params(2), _batch(16, seed=2)
@@ -129,8 +104,7 @@ def test_executor_step_matches_baseline_update(executor):
     p_ref, _, m_ref = jax.jit(base)(params, opt.init(params),
                                     {k: jnp.asarray(v) for k, v in batch.items()})
     plan = engine.plan_mbs(16, micro_batch_size=4)
-    ex = engine.get_executor(executor)(_loss_fn, opt, plan,
-                                       **EXECUTOR_KW[executor])
+    ex = make_executor(executor, _loss_fn, opt, plan)
     p, _, m = ex.step(params, opt.init(params), dict(batch))
     assert _max_err(p, p_ref) < 2e-6
     assert abs(float(m["loss"]) - float(m_ref["loss"])) < 2e-6
@@ -162,9 +136,8 @@ def test_additive_aux_loss_consistent_across_executors(n_b, n_mu):
     plan = engine.plan_mbs(n_b, micro_batch_size=n_mu, normalization="exact")
     split = plan.device_split(batch)
     grads, ls = {}, {}
-    for name in sorted(engine.EXECUTORS):
-        ex = engine.get_executor(name)(_aux_loss_fn, optim.sgd(0.1), plan,
-                                       **EXECUTOR_KW[name])
+    for name in EXECUTOR_GRID:
+        ex = make_executor(name, _aux_loss_fn, optim.sgd(0.1), plan)
         grads[name], ls[name] = ex.gradients(params, split)
     for name in ("streaming", "fused"):
         assert _max_err(grads[name], grads["compiled"]) < 2e-6
@@ -197,7 +170,7 @@ def _train_args(**over):
     return argparse.Namespace(**base)
 
 
-@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
 def test_ragged_train_path_matches_full_batch(executor):
     """mini_batch=10, micro=4 through the launcher's step construction
     produces the same update as the full-batch baseline (this path used to

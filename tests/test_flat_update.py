@@ -18,40 +18,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import (EXECUTOR_GRID, make_executor,
+                      max_abs_err as _max_err, tiny_batch as _batch,
+                      tiny_loss_fn as _loss_fn, tiny_params as _params)
 from repro import configs, engine, optim
-from repro.core import losses, memory_model
+from repro.core import memory_model
 from repro.engine import exec_core, flat
 from repro.kernels import fused_update, ref
 
 # ---------------------------------------------------------------------------
-# fixtures
+# fixtures (tiny model + executor grid come from conftest's harness)
 # ---------------------------------------------------------------------------
-
-
-def _loss_fn(p, batch, exact_denom=None):
-    h = jnp.tanh(batch["x"] @ p["w1"])
-    logits = h @ p["w2"]
-    return losses.cross_entropy(
-        logits, batch["y"], sample_weight=batch.get("sample_weight"),
-        exact_denom=exact_denom), {}
-
-
-def _params(seed=0):
-    rng = np.random.default_rng(seed)
-    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
-            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
-
-
-def _batch(n, seed=0):
-    rng = np.random.default_rng(seed + 100)
-    return {"x": rng.normal(size=(n, 8)).astype(np.float32),
-            "y": rng.integers(0, 4, n).astype(np.int32)}
-
-
-def _max_err(a, b):
-    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
-                                     - y.astype(jnp.float32))))
-               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
 def _mixed_tree(seed=0):
@@ -287,11 +264,8 @@ def test_flat_executor_matches_other_executors():
     opt = optim.sgd(0.1, momentum=0.9, weight_decay=1e-4)
     plan = engine.plan_mbs(12, micro_batch_size=4)
     results = {}
-    for name in sorted(engine.EXECUTORS):
-        kw = ({"interpret": True} if name in ("fused", "flat") else {})
-        if name != "streaming":
-            kw["donate"] = False
-        ex = engine.get_executor(name)(_loss_fn, opt, plan, **kw)
+    for name in EXECUTOR_GRID:
+        ex = make_executor(name, _loss_fn, opt, plan, donate=False)
         results[name] = ex.step(params, opt.init(params), dict(batch))
     for name in ("streaming", "fused", "flat"):
         assert _max_err(results[name][0], results["compiled"][0]) < 2e-6
@@ -321,8 +295,7 @@ def test_step_split_donation_safety(executor):
     buffer reuse anywhere in the step would have raised."""
     opt = optim.sgd(0.1, momentum=0.9)
     plan = engine.plan_mbs(8, micro_batch_size=4)
-    kw = {"interpret": True} if executor == "flat" else {}
-    ex = engine.get_executor(executor)(_loss_fn, opt, plan, **kw)
+    ex = make_executor(executor, _loss_fn, opt, plan)
     params = _params(6)
     opt_state = opt.init(params)
     for i in range(3):
@@ -424,8 +397,7 @@ def test_dryrun_memory_analysis_reflects_donated_update():
                       for l in jax.tree.leaves((params, opt_state))
                       if hasattr(l, "size"))
     for name in ("compiled", "flat"):
-        kw = {"interpret": True} if name == "flat" else {}
-        ex = engine.get_executor(name)(_loss_fn, opt, plan, **kw)
+        ex = make_executor(name, _loss_fn, opt, plan)
         compiled = jax.jit(ex.make_train_step(),
                            donate_argnums=(0, 1, 2)).lower(
             params, opt_state, split).compile()

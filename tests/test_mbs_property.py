@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) of the MBS invariants: for ANY batch
 size, micro-batch size, model shape and data, the loss-normalized
-accumulated gradient equals the mini-batch gradient (paper eq. 15–17)."""
+accumulated gradient equals the mini-batch gradient (paper eq. 15–17) —
+and the Layer-5 planner invariants: admission is monotone in the HBM
+budget and in the remat-policy weight, and the joint (policy, N_μ) choice
+always satisfies the analytic budget it was admitted under."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +14,9 @@ pytest.importorskip("hypothesis",
                            "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import losses, mbs as M
+from repro import configs, engine  # noqa: E402
+from repro.core import losses, mbs as M, memory_model  # noqa: E402
+from repro.models import remat  # noqa: E402
 
 
 def _loss_fn(p, batch, exact_denom=None):
@@ -63,6 +68,73 @@ def test_paper_mode_equivalence_when_uniform(n_b, n_mu, seed):
     split = {k: jnp.asarray(v) for k, v in M.split_minibatch(batch, n_mu).items()}
     g, _ = M.mbs_gradients(_loss_fn, params, split, M.MBSConfig(n_mu, "paper"))
     assert _max_err(g, ref) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# Layer-5 planner invariants (remat policy × micro-batch admission)
+# ---------------------------------------------------------------------------
+
+_ARCHS = ["qwen2-1.5b", "mixtral-8x22b", "mamba2-780m", "recurrentgemma-2b"]
+_CFGS = {a: configs.get_reduced(a) for a in _ARCHS}
+
+
+def _budget_around(cfg, seq, frac):
+    """A budget spanning 'nothing fits' .. 'everything fits': steady state
+    plus ``frac`` of the whole-mini-batch no-remat activation range."""
+    est = memory_model.estimate(cfg, seq, remat_policy="none")
+    return int(est.total(0) + frac * 64 * est.activation_bytes_per_sample)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64, 256]),
+       f1=st.floats(0.0, 1.0), f2=st.floats(0.0, 1.0),
+       policy=st.sampled_from(remat.POLICIES))
+def test_admission_monotone_in_budget(arch, seq, f1, f2, policy):
+    """More HBM never admits a smaller micro-batch (fixed policy)."""
+    cfg = _CFGS[arch]
+    lo, hi = sorted([_budget_around(cfg, seq, f1), _budget_around(cfg, seq, f2)])
+    m_lo = memory_model.suggest_micro_batch_size(
+        cfg, seq, 64, budget_bytes=lo, remat_policy=policy) or 0
+    m_hi = memory_model.suggest_micro_batch_size(
+        cfg, seq, 64, budget_bytes=hi, remat_policy=policy) or 0
+    assert m_lo <= m_hi
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64, 256]),
+       frac=st.floats(0.0, 1.0))
+def test_admission_monotone_in_policy_weight(arch, seq, frac):
+    """Heavier remat never admits a smaller micro-batch (fixed budget):
+    the activation term is monotone non-increasing along the lattice, so
+    admission is monotone non-decreasing in ``remat.policy_weight``."""
+    cfg = _CFGS[arch]
+    budget = _budget_around(cfg, seq, frac)
+    admitted = [memory_model.suggest_micro_batch_size(
+        cfg, seq, 64, budget_bytes=budget, remat_policy=p) or 0
+        for p in remat.POLICIES]
+    assert admitted == sorted(admitted), dict(zip(remat.POLICIES, admitted))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64, 256]),
+       frac=st.floats(0.0, 1.0), mini=st.integers(1, 64))
+def test_joint_choice_satisfies_analytic_budget(arch, seq, frac, mini):
+    """The (policy, N_μ) pair plan_mbs picks under "auto" always fits the
+    budget it was admitted under, and never understates what the cheapest
+    equally-admitting policy could do."""
+    cfg = _CFGS[arch]
+    budget = _budget_around(cfg, seq, frac)
+    plan = engine.plan_mbs(mini, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=budget, remat_policy="auto")
+    est = memory_model.estimate(cfg, seq, remat_policy=plan.remat_policy)
+    if est.total(1) <= budget:  # something fits: the choice must too
+        assert est.total(plan.micro_batch_size) <= budget
+    # no cheaper policy admits strictly more than the chosen one
+    w = remat.policy_weight(plan.remat_policy)
+    for p in remat.POLICIES[:w]:
+        cheaper = memory_model.suggest_micro_batch_size(
+            cfg, seq, mini, budget_bytes=budget, remat_policy=p) or 0
+        assert cheaper <= plan.micro_batch_size
 
 
 @settings(max_examples=30, deadline=None)

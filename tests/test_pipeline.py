@@ -10,55 +10,17 @@ Covers the regressions this layer exists to prevent:
   * save → resume through the Trainer reproduces an uninterrupted run
     bitwise (params AND optimizer state round-trip with placement).
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import (EXECUTOR_GRID, ToyDataset as _ToyDataset,
+                      make_executor, max_abs_err as _max_err,
+                      tiny_loss_fn as _loss_fn, tiny_params as _params)
 from repro import engine, optim
-from repro.core import losses
 from repro.core.streaming import prefetch_iterator
 from repro.data import MBSLoader
-
-EXECUTOR_KW = {"compiled": {}, "streaming": {}, "fused": {"interpret": True},
-               "flat": {"interpret": True}}
-
-
-def _loss_fn(p, batch, exact_denom=None):
-    h = jnp.tanh(batch["x"] @ p["w1"])
-    logits = h @ p["w2"]
-    return losses.cross_entropy(
-        logits, batch["y"], sample_weight=batch.get("sample_weight"),
-        exact_denom=exact_denom), {}
-
-
-def _params(seed=0):
-    rng = np.random.default_rng(seed)
-    return {"w1": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
-            "w2": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32)}
-
-
-@dataclasses.dataclass
-class _ToyDataset:
-    """Deterministic-in-(seed, step) dataset, like the synthetic ones."""
-    n_features: int = 8
-    n_classes: int = 4
-    seed: int = 0
-
-    def batch(self, batch_size, seed):
-        rng = np.random.default_rng((self.seed, seed))
-        return {"x": rng.normal(size=(batch_size, self.n_features)
-                                ).astype(np.float32),
-                "y": rng.integers(0, self.n_classes, batch_size
-                                  ).astype(np.int32)}
-
-
-def _max_err(a, b):
-    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
-                                     - y.astype(jnp.float32))))
-               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +67,7 @@ def test_pipeline_propagates_dataset_exception():
 # plan-aware splitting: ragged + weighted batches through the pipeline
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
 def test_pipeline_ragged_batch_matches_full_batch(executor):
     """mini=10, micro=4 through Pipeline: the planner auto-upgrades to
     exact normalization, so every executor reproduces the full-batch
@@ -118,8 +80,7 @@ def test_pipeline_ragged_batch_matches_full_batch(executor):
     assert split["x"].shape == (3, 4, 8)
 
     params = _params()
-    ex = engine.get_executor(executor)(_loss_fn, optim.sgd(0.1), plan,
-                                       **EXECUTOR_KW[executor])
+    ex = make_executor(executor, _loss_fn, optim.sgd(0.1), plan)
     g, loss = ex.gradients(params, split)
 
     full = ds.batch(10, 0)
@@ -141,7 +102,7 @@ def test_mbs_loader_goes_through_planner():
     assert batches[0]["sample_weight"].sum() == 10
 
 
-@pytest.mark.parametrize("executor", sorted(engine.EXECUTORS))
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
 def test_split_composes_dataset_sample_weight(executor):
     """Regression: split_minibatch used to clobber a dataset-provided
     sample_weight with the all-ones padding mask. Composed weights must
@@ -158,8 +119,7 @@ def test_split_composes_dataset_sample_weight(executor):
     np.testing.assert_array_equal(sw[10:], 0)  # padding masked
 
     params = _params()
-    ex = engine.get_executor(executor)(_loss_fn, optim.sgd(0.1), plan,
-                                       **EXECUTOR_KW[executor])
+    ex = make_executor(executor, _loss_fn, optim.sgd(0.1), plan)
     g, loss = ex.gradients(params, plan.device_split(batch))
     _, ref = jax.value_and_grad(lambda p: _loss_fn(p, batch)[0])(params)
     assert _max_err(g, ref) < 2e-6

@@ -1,0 +1,248 @@
+"""Remat-policy axis (engine Layer 5) — graded activation checkpointing
+chosen jointly with the micro-batch size:
+
+  * checkpointing is semantically invisible: every policy × executor
+    reproduces the ``remat_policy="none"`` gradients on a tiny transformer
+    config, ragged tails + exact normalization + global-norm clip included;
+  * the planner's policy-aware admission points the right way in reality:
+    XLA's own ``compiled.memory_analysis()`` of the train step is monotone
+    non-increasing along the lattice (reduced dry-run, one device);
+  * ``"auto"`` escalates only when the budget forces it, and buys a
+    strictly larger micro-batch than ``"none"`` at a tight budget
+    (the PR's acceptance criterion);
+  * golden-trajectory regression: a recorded 5-step loss trajectory on a
+    fixed seed must be reproduced by all four executors, so engine
+    refactors cannot silently drift the training numerics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (EXECUTOR_GRID, ToyDataset, assert_scalar_close,
+                      assert_trees_close, make_executor, max_abs_err,
+                      tiny_loss_fn, tiny_optimizer, tiny_params)
+from repro import configs, engine, optim
+from repro.configs.shapes import InputShape
+from repro.core import memory_model
+from repro.data import LMDataset
+from repro.launch import steps
+from repro.models import remat, transformer
+
+CFG = configs.get_reduced("qwen2-1.5b")
+SEQ = 16
+
+
+def _lm_split(plan, n_b, seed=0):
+    ds = LMDataset(vocab_size=CFG.vocab_size, seq_len=SEQ, seed=seed)
+    return plan.device_split(ds.batch(n_b, 0))
+
+
+def _loss(policy):
+    return steps.make_loss_fn(CFG, dtype=jnp.float32, remat_policy=policy)
+
+
+def _tparams(seed=0):
+    return transformer.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# gradient equivalence: every policy == "none", on every executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+@pytest.mark.parametrize("policy", [p for p in remat.POLICIES if p != "none"])
+def test_policy_gradients_match_none(executor, policy):
+    """Ragged mini-batch (5 % 2 != 0 → exact normalization): checkpointing
+    must only change the schedule, never the accumulated gradient."""
+    plan = engine.plan_mbs(5, micro_batch_size=2)
+    assert plan.normalization == "exact"  # ragged auto-upgrade
+    split = _lm_split(plan, 5)
+    params = _tparams()
+    g_ref, l_ref = make_executor(executor, _loss("none"), optim.sgd(0.1),
+                                 plan).gradients(params, split)
+    g, l = make_executor(executor, _loss(policy), optim.sgd(0.1),
+                         plan).gradients(params, split)
+    assert_trees_close(g, g_ref, atol=1e-5,
+                       what=f"{executor}/{policy} gradients")
+    assert_scalar_close(l, l_ref, atol=1e-5, what=f"{executor}/{policy} loss")
+
+
+@pytest.mark.parametrize("policy", [p for p in remat.POLICIES if p != "none"])
+def test_policy_step_matches_none_with_clip(policy):
+    """Global-norm clipping on top: one full optimizer step under a remat
+    policy equals the unchecked-pointed step (uniform split, paper mode)."""
+    opt = optim.clip_by_global_norm(optim.sgd(0.1, momentum=0.9), 0.05)
+    plan = engine.plan_mbs(4, micro_batch_size=2)
+    assert plan.normalization == "paper"
+    split = _lm_split(plan, 4)
+    params = _tparams(1)
+    p_ref, _, m_ref = make_executor(
+        "compiled", _loss("none"), opt, plan,
+        donate=False).step_split(params, opt.init(params), split)
+    p, _, m = make_executor(
+        "compiled", _loss(policy), opt, plan,
+        donate=False).step_split(params, opt.init(params), split)
+    assert_trees_close(p, p_ref, atol=1e-5, what=f"clip/{policy} params")
+    assert_scalar_close(m["loss"], m_ref["loss"], atol=1e-5)
+    assert_scalar_close(m["grad_norm"], m_ref["grad_norm"], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the analytic model vs XLA's own memory analysis (reduced dry-run)
+# ---------------------------------------------------------------------------
+
+def test_memory_analysis_monotone_along_lattice():
+    """Compile the real train step at every policy and read
+    ``compiled.memory_analysis()``: temp bytes must be monotone
+    non-increasing along the lattice — the direction the planner's
+    admission model assumes when it trades recompute for batch."""
+    shape = InputShape("train_tiny", "train", 256, 8)
+    temps = {}
+    for policy in remat.POLICIES:
+        bundle = steps.build_train_step(CFG, shape, num_microbatches=2,
+                                        dtype=jnp.float32,
+                                        remat_policy=policy)
+        compiled = jax.jit(bundle.fn, donate_argnums=bundle.donate_argnums
+                           ).lower(*bundle.arg_shapes).compile()
+        temps[policy] = compiled.memory_analysis().temp_size_in_bytes
+    for cheap, heavy in zip(remat.POLICIES, remat.POLICIES[1:]):
+        assert temps[heavy] <= temps[cheap], (
+            f"{heavy} uses MORE temp bytes than {cheap}: {temps}")
+    # the end-to-end direction is strict: full remat must beat no remat
+    assert temps["full"] < temps["none"], temps
+    # and the analytic activation term agrees on the ordering
+    acts = [memory_model.activation_bytes_per_sample(CFG, 256, act_bytes=4,
+                                                     remat_policy=p)
+            for p in remat.POLICIES]
+    assert acts == sorted(acts, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# joint planner: auto escalation buys batch (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _tight_budget():
+    """A budget that fits a few samples without remat but many with it."""
+    est = memory_model.estimate(CFG, SEQ, remat_policy="none")
+    return est.total(0) + 3 * est.activation_bytes_per_sample
+
+
+def test_auto_policy_admits_strictly_more_than_none_at_tight_budget():
+    cap = _tight_budget()
+    plan_none = engine.plan_mbs(64, model_cfg=CFG, seq_len=SEQ,
+                                budget_bytes=cap, remat_policy="none")
+    plan_auto = engine.plan_mbs(64, model_cfg=CFG, seq_len=SEQ,
+                                budget_bytes=cap, remat_policy="auto")
+    assert plan_auto.micro_batch_size > plan_none.micro_batch_size
+    assert plan_auto.auto_policy and plan_auto.auto_micro
+    assert remat.policy_weight(plan_auto.remat_policy) > 0  # escalated
+    # the choice satisfies the analytic budget it was admitted under
+    est = memory_model.estimate(CFG, SEQ,
+                                remat_policy=plan_auto.remat_policy)
+    assert est.total(plan_auto.micro_batch_size) <= cap
+
+
+def test_auto_policy_stays_cheap_when_budget_is_roomy():
+    """Escalation only when forced: with a whole HBM for a reduced config,
+    the planner keeps the recompute-free policy."""
+    plan = engine.plan_mbs(4, model_cfg=CFG, seq_len=SEQ,
+                           remat_policy="auto")
+    assert plan.remat_policy == "none"
+    assert plan.micro_batch_size == 4  # no accumulation needed either
+
+
+def test_auto_policy_with_pinned_micro_picks_cheapest_fitting():
+    cap = _tight_budget()
+    # micro-batch 2 fits without remat at this budget -> stay at "none"
+    plan = engine.plan_mbs(16, micro_batch_size=2, model_cfg=CFG,
+                           seq_len=SEQ, budget_bytes=cap,
+                           remat_policy="auto")
+    assert plan.remat_policy == "none"
+    # micro-batch 8 only fits under remat -> escalate, geometry unchanged
+    plan8 = engine.plan_mbs(16, micro_batch_size=8, model_cfg=CFG,
+                            seq_len=SEQ, budget_bytes=cap,
+                            remat_policy="auto")
+    assert plan8.micro_batch_size == 8
+    assert remat.policy_weight(plan8.remat_policy) > 0
+
+
+def test_explicit_policy_and_legacy_bool_resolution():
+    plan = engine.plan_mbs(8, micro_batch_size=4, remat_policy="dots")
+    assert plan.remat_policy == "dots" and not plan.auto_policy
+    assert engine.plan_mbs(8, micro_batch_size=4).remat_policy == "period"
+    assert engine.plan_mbs(8, micro_batch_size=4,
+                           remat=False).remat_policy == "none"
+    with pytest.raises(ValueError, match="remat policy"):
+        engine.plan_mbs(8, micro_batch_size=4, remat_policy="everything")
+
+
+def test_build_train_step_threads_plan_policy_into_loss(monkeypatch):
+    """--remat-policy auto end to end: build_train_step must hand the
+    *plan's chosen* policy to make_loss_fn — not the "auto" sentinel and
+    not the legacy remat bool. Spied rather than smoked, so a regression
+    back to the bool threading fails loudly."""
+    shape = InputShape("train_tiny", "train", SEQ, 8)
+    seen = {}
+    real = steps.make_loss_fn
+
+    def spy(cfg, *a, **kw):
+        seen["remat_policy"] = kw.get("remat_policy")
+        return real(cfg, *a, **kw)
+
+    monkeypatch.setattr(steps, "make_loss_fn", spy)
+    # roomy default budget on the reduced config: auto resolves to "none"
+    steps.build_train_step(CFG, shape, num_microbatches=2,
+                           dtype=jnp.float32, remat_policy="auto")
+    assert seen["remat_policy"] == "none"
+    # an explicit policy passes through the plan unchanged
+    steps.build_train_step(CFG, shape, num_microbatches=2,
+                           dtype=jnp.float32, remat_policy="full")
+    assert seen["remat_policy"] == "full"
+    # and the step built under the heaviest policy actually runs
+    bundle = steps.build_train_step(CFG, shape, num_microbatches=2,
+                                    dtype=jnp.float32, remat_policy="full")
+    params = _tparams(2)
+    opt = steps.make_optimizer(CFG)
+    split = _lm_split(engine.plan_mbs(8, num_microbatches=2), 8)
+    p, _, m = jax.jit(bundle.fn)(params, opt.init(params), split)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_auto_policy_flag_only_set_when_search_ran():
+    """Without a model config there is nothing to search: "auto" falls
+    back to the legacy bool and the plan must NOT claim the planner
+    validated the choice (describe()/dryrun would otherwise report a
+    search that never happened)."""
+    plan = engine.plan_mbs(8, micro_batch_size=4, remat_policy="auto")
+    assert plan.remat_policy == "period" and not plan.auto_policy
+    with_cfg = engine.plan_mbs(8, micro_batch_size=4, model_cfg=CFG,
+                               seq_len=SEQ, remat_policy="auto")
+    assert with_cfg.auto_policy  # a real admission search ran
+
+
+# ---------------------------------------------------------------------------
+# golden-trajectory regression (all four executors)
+# ---------------------------------------------------------------------------
+
+# Recorded once from CompiledScanExecutor on the tiny model (seed 0,
+# ragged mini-batch 10 -> 3 x 4, SGD-m 0.1/0.9/1e-4, exact normalization).
+# Executors agree with each other to ~1e-7; the tolerance only absorbs
+# BLAS/platform noise. If an engine change moves these numbers, that is a
+# *numerics* change — record new values only if the change is intentional
+# and explained.
+GOLDEN_LOSSES = [1.4693074, 1.6477259, 1.5571915, 1.3139976, 1.5032679]
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_five_step_loss_trajectory_matches_golden(executor):
+    plan = engine.plan_mbs(10, micro_batch_size=4)
+    ds = ToyDataset()
+    opt = tiny_optimizer()
+    ex = make_executor(executor, tiny_loss_fn, opt, plan, donate=False)
+    params, state = tiny_params(), opt.init(tiny_params())
+    losses = []
+    for step in range(5):
+        params, state, m = ex.step(params, state, ds.batch(10, step))
+        losses.append(float(m["loss"]))
+    np.testing.assert_allclose(losses, GOLDEN_LOSSES, atol=5e-4, rtol=0)
