@@ -24,8 +24,27 @@ writes ``BENCH_remat.json``: per policy on the lattice, the measured
 compiled-step time (the recompute cost of heavier checkpointing) and the
 micro-batch the memory model admits at several HBM budgets — plus the
 planner's joint "auto" choice at each budget, showing where escalation
-buys batch the cheaper policies cannot."""
+buys batch the cheaper policies cannot.
+
+``--mesh-bench`` benchmarks sharded execution (engine Layer 6) and writes
+``BENCH_mesh.json``: at data-parallel 2/4/8 (forced host devices), the
+deferred-sync ShardedExecutor step time vs the per-micro-sync baseline,
+the all-reduce counts each compiles to on an unrolled scan (1 vs
+N_Sμ + 1 — the baseline also pays a scalar loss/valid sync), and the
+global batch the mesh-aware planner admits at a fixed per-device budget
+as the data axis grows. N_Sμ is recorded per row: the planner's
+divisibility rounding can change the schedule as dp grows."""
 from __future__ import annotations
+
+import os
+import sys
+
+if "--mesh-bench" in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    # must land before jax initializes: the mesh bench needs >= 8 host devices
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import argparse
 import json
@@ -333,6 +352,87 @@ def remat_main(quick: bool = True, out_path: str = "BENCH_remat.json"):
     return results
 
 
+def _count_allreduce(jitted, *args) -> int:
+    import re
+    hlo = jitted.lower(*args).compile().as_text()
+    return len(re.findall(r"all-reduce(?:-start)?\(", hlo))
+
+
+def mesh_main(quick: bool = True, out_path: str = "BENCH_mesh.json"):
+    """Sharded-execution benchmark (``--mesh-bench``): deferred-sync vs
+    per-micro-sync step time + compiled all-reduce counts at data-parallel
+    2/4/8, and the mesh-aware planner's admission at a fixed per-device
+    budget (the Layer-6 acceptance numbers, recorded run over run)."""
+    from repro.launch import mesh as mesh_lib
+
+    cfg = configs.get_reduced("qwen2-1.5b")
+    seq = 32
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32, remat=False)
+    opt = optim.sgd(0.01, momentum=0.9)
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=seq, seed=0)
+    mini_batch, n_micro = 16, 4
+    iters = 3 if quick else 10
+    # a per-device budget that admits a handful of local samples: the
+    # admission axis shows dp * local_micro (the global batch) growing
+    est = memory_model.estimate(cfg, seq, act_bytes=4, remat_policy="none")
+    budget = est.total(0) + 4 * est.activation_bytes_per_sample
+
+    results = {"benchmark": "mesh_sharded", "arch": "qwen2-1.5b-reduced",
+               "seq": seq, "mini_batch": mini_batch,
+               "devices": jax.device_count(),
+               "data_parallel": {}}
+    mini = ds.batch(mini_batch, 0)
+    for dp in (2, 4, 8):
+        if jax.device_count() < dp:
+            results["data_parallel"][str(dp)] = {
+                "skipped": f"needs {dp} devices, have {jax.device_count()}"}
+            continue
+        mesh = mesh_lib.make_host_mesh(data=dp, model=1)
+        # unroll the scan so the per-micro baseline's collectives are
+        # visible in the HLO text (a rolled loop body appears once)
+        plan = engine.plan_mbs(mini_batch, num_microbatches=n_micro,
+                               mesh=mesh, unroll=n_micro)
+        split = plan.device_split(mini)
+        state = opt.init(params)
+        # the plan's ACTUAL schedule: dp-divisibility rounding can change
+        # the micro size (and so N_Sμ) as the data axis grows
+        row = {"local_micro": plan.local_micro,
+               "micro_batch_global": plan.micro_batch_size,
+               "num_microbatches": plan.num_micro_batches}
+        for tag, defer in (("deferred_sync", True), ("per_micro_sync", False)):
+            ex = engine.ShardedExecutor(loss_fn, opt, plan, mesh=mesh,
+                                        inner="compiled", defer_sync=defer,
+                                        donate=False)
+            step = jax.jit(ex.make_train_step())
+            row[tag] = {
+                "step_time_s": _time_step(step, params, state, split, iters),
+                "allreduce_ops": _count_allreduce(step, params, state, split),
+            }
+        row["speedup_deferred"] = (row["per_micro_sync"]["step_time_s"]
+                                   / row["deferred_sync"]["step_time_s"])
+        # admission at the fixed per-device budget (mesh-aware planner)
+        adm = engine.plan_mbs(256, model_cfg=cfg, seq_len=seq,
+                              budget_bytes=budget, act_bytes=4,
+                              remat_policy="none", mesh=mesh,
+                              fsdp_params=False)
+        row["admission"] = {"budget_bytes": int(budget),
+                            "global_micro_admitted": adm.micro_batch_size,
+                            "local_micro": adm.local_micro}
+        results["data_parallel"][str(dp)] = row
+        emit(f"mesh/dp{dp}/deferred",
+             row["deferred_sync"]["step_time_s"] * 1e6,
+             f"allreduce={row['deferred_sync']['allreduce_ops']} "
+             f"speedup={row['speedup_deferred']:.2f}x vs per-micro "
+             f"({row['per_micro_sync']['allreduce_ops']} allreduce)")
+        emit(f"mesh/dp{dp}/admission", float(adm.micro_batch_size),
+             f"local={adm.local_micro} at fixed per-device budget")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", action="store_true",
@@ -344,6 +444,10 @@ if __name__ == "__main__":
     ap.add_argument("--remat-bench", action="store_true",
                     help="run the remat-policy benchmark and write "
                          "BENCH_remat.json")
+    ap.add_argument("--mesh-bench", action="store_true",
+                    help="run the sharded-execution benchmark (deferred vs "
+                         "per-micro gradient sync at data=2/4/8) and write "
+                         "BENCH_mesh.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
@@ -353,5 +457,7 @@ if __name__ == "__main__":
         update_main(quick=a.quick, out_path=a.out or "BENCH_update.json")
     elif a.remat_bench:
         remat_main(quick=a.quick, out_path=a.out or "BENCH_remat.json")
+    elif a.mesh_bench:
+        mesh_main(quick=a.quick, out_path=a.out or "BENCH_mesh.json")
     else:
         main(quick=a.quick)

@@ -29,6 +29,7 @@ The model (per device, for the transformer families):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 from ..models import remat as remat_lib
@@ -149,18 +150,87 @@ def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
     return boundary + live + logits_live
 
 
+class _MeshDims:
+    """Axis-name → size view of a mesh — the only part of a mesh the
+    sharding policy reads, and a hashable cache key for the ratio below."""
+
+    def __init__(self, dims):
+        self.shape = dict(dims)
+        self.axis_names = tuple(self.shape)
+
+
+def param_shard_ratio(cfg: ModelConfig, mesh, *, fsdp: bool = True) -> float:
+    """Per-device fraction of the parameter bytes under the REAL sharding
+    policy (``launch/sharding.param_specs``), mesh axes and divisibility
+    included — leaves whose dims do not divide the mesh stay replicated
+    and cost full bytes, which a blanket ``/ (tp * fsdp)`` discount would
+    understate. Grads and optimizer state shard with the same specs, so
+    one ratio covers all three terms. ``fsdp=False`` models a
+    data-parallel-only executor that replicates params (the engine's
+    ``ShardedExecutor``): only the model axis discounts. Memoized: one
+    auto plan calls ``estimate`` once per lattice policy, and the ratio
+    only depends on (config, mesh axis sizes, fsdp)."""
+    return _param_shard_ratio(cfg, tuple(mesh.shape.items()), fsdp)
+
+
+@functools.lru_cache(maxsize=256)
+def _param_shard_ratio(cfg: ModelConfig, mesh_dims: tuple,
+                       fsdp: bool) -> float:
+    import jax  # deferred: keep module import light
+    from jax.sharding import PartitionSpec as P
+    from ..launch import sharding as sharding_lib  # deferred: no cycle
+    from ..models import encdec, transformer
+
+    mesh = _MeshDims(mesh_dims)
+    init = encdec.init_params if cfg.is_encdec else transformer.init_params
+    shapes = jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
+    specs = sharding_lib.param_specs(shapes, mesh, fsdp=fsdp)
+
+    def shard_factor(spec) -> int:
+        f = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                f *= mesh.shape[ax]
+        return f
+
+    total = sharded = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        total += leaf.size
+        sharded += -(-leaf.size // shard_factor(spec))
+    return sharded / total if total else 1.0
+
+
 def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
              opt_slots: Optional[int] = None, act_bytes: int = 2,
              remat: bool = True, remat_policy: Optional[str] = None,
              optimizer: str = "sgd",
-             fused_update: bool = False) -> MemoryEstimate:
+             fused_update: bool = False, mesh=None,
+             fsdp_params: bool = True) -> MemoryEstimate:
     """``optimizer`` names the update rule (state-slot count + step-❺
     transient); ``fused_update=True`` models the flat in-place path
     (``--executor flat``) whose update transient is eliminated. An explicit
     ``opt_slots`` overrides the per-optimizer slot count; ``remat_policy``
     overrides the legacy ``remat`` bool (see
-    :func:`activation_bytes_per_sample`)."""
-    p_bytes = cfg.param_count() * 4 // (tp * fsdp)
+    :func:`activation_bytes_per_sample`).
+
+    ``mesh`` switches to the PER-DEVICE estimate (engine Layer 6): the
+    params/grads/opt-state/update-transient terms are discounted by the
+    real sharding policy (:func:`param_shard_ratio` — honors divisibility
+    and ``fsdp_params``; the manual ``tp``/``fsdp`` divisors are ignored)
+    and the activation term is divided by the model axis only — the data
+    axis enters through the *local* micro-batch the caller budgets with,
+    not through this estimate."""
+    if mesh is not None:
+        from ..launch import mesh as mesh_lib  # deferred: no cycle
+        tp = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+        p_bytes = int(cfg.param_count() * 4
+                      * param_shard_ratio(cfg, mesh, fsdp=fsdp_params))
+    else:
+        p_bytes = cfg.param_count() * 4 // (tp * fsdp)
     slots = _resolve_slots(optimizer, opt_slots)
     return MemoryEstimate(
         params_bytes=p_bytes,
@@ -181,17 +251,22 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
                              remat: bool = True,
                              remat_policy: Optional[str] = None,
                              optimizer: str = "sgd",
-                             fused_update: bool = False) -> Optional[int]:
+                             fused_update: bool = False, mesh=None,
+                             fsdp_params: bool = True) -> Optional[int]:
     """Largest power-of-two micro-batch (≤ mini_batch) that fits the budget.
     Returns None if even micro-batch 1 exceeds the budget (the model itself
     does not fit — MBS cannot help; that needs more model parallelism).
     The step-❺ transient term (see :func:`update_transient_bytes`) stops
     this from admitting micro-batches that would OOM at the update; with
-    ``fused_update=True`` that headroom is reclaimed for activations."""
+    ``fused_update=True`` that headroom is reclaimed for activations.
+    With ``mesh`` the estimate is per device and the suggested size is the
+    per-device LOCAL micro-batch (``mini_batch`` should then be the local
+    share — the planner passes ``mini // data_parallel``)."""
     est = estimate(cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots,
                    act_bytes=act_bytes, remat=remat,
                    remat_policy=remat_policy, optimizer=optimizer,
-                   fused_update=fused_update)
+                   fused_update=fused_update, mesh=mesh,
+                   fsdp_params=fsdp_params)
     best = None
     m = 1
     while m <= mini_batch:
@@ -206,7 +281,8 @@ def suggest_remat_policy_and_micro(
         budget_bytes: int = V5E_HBM_BYTES, tp: int = 1, fsdp: int = 1,
         opt_slots: Optional[int] = None, act_bytes: int = 2,
         optimizer: str = "sgd", fused_update: bool = False,
-        target_micro: Optional[int] = None
+        target_micro: Optional[int] = None, mesh=None,
+        fsdp_params: bool = True
         ) -> Tuple[str, Optional[int]]:
     """Joint (remat policy, micro-batch) choice — engine Layer 5.
 
@@ -226,7 +302,7 @@ def suggest_remat_policy_and_micro(
             cfg, seq, mini_batch, budget_bytes=budget_bytes, tp=tp,
             fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
             remat_policy=policy, optimizer=optimizer,
-            fused_update=fused_update)
+            fused_update=fused_update, mesh=mesh, fsdp_params=fsdp_params)
         if micro is not None and micro >= target:
             return policy, micro
         if micro is not None and (best_micro is None or micro > best_micro):

@@ -29,6 +29,15 @@ activation-checkpointing lattice (none | dots | period | full) chosen
 jointly with the micro-batch size — ``plan_mbs(remat_policy="auto")``
 escalates to heavier recompute only when it buys batch the budget would
 otherwise refuse. See DESIGN.md §Remat planner.
+
+Layer 6 — mesh-aware execution (``sharded.py``): ``plan_mbs(mesh=...)``
+plans against the PER-DEVICE budget (params discounted by the real
+sharding policy, micro sizes divisible by the data axis, ``local_micro``
+per worker) and :class:`ShardedExecutor` wraps any executor's
+accumulation strategy in ``shard_map`` so the cross-device gradient
+all-reduce happens ONCE per mini-batch — one flat fp32 psum of
+gradients+loss+metrics — instead of once per micro-batch. See DESIGN.md
+§Sharded execution.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
@@ -37,5 +46,6 @@ from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
                         FlatFusedExecutor, FusedAccumExecutor,
                         StreamingExecutor, accumulate_gradients,
                         get_executor, make_baseline_train_step)
+from .sharded import ShardedExecutor, batch_partition_specs, psum_flat  # noqa: F401
 from .pipeline import Pipeline, PipelineStats  # noqa: F401
 from .trainer import Trainer  # noqa: F401

@@ -70,33 +70,47 @@ class Executor(Protocol):
 
 
 def _scan_accumulate(loss_fn, plan: MBSPlan, fused: bool, params,
-                     micro_batches, interpret=None, block=None):
+                     micro_batches, interpret=None, block=None,
+                     raw: bool = False):
     """Shared compiled core: scan over the micro-batch axis, accumulating
-    normalized gradients + loss + metrics. Returns (grads, loss, metric_sum)."""
+    normalized gradients + loss + metrics. Returns (grads, loss, metric_sum).
+
+    ``raw=True`` (the ShardedExecutor's per-device half of the mini-batch
+    step) defers ALL normalization: each micro loss is the raw SUM of valid
+    per-sample losses (``exact_denom=1``), gradients/losses/metrics are
+    accumulated as plain sums. The caller divides by the GLOBAL valid count
+    after the cross-device reduction — the one place the data-parallel
+    denominator is known."""
     n_s, total_valid = exec_core.denominators(micro_batches)
+    norm = "exact" if raw else plan.normalization
     accum0 = exec_core.init_accum(params, plan.accum_dtype)
-    scale = (exec_core.deferred_scale(plan.normalization, n_s, total_valid)
-             if fused else None)
+    if raw:
+        scale = 1.0 if fused else None  # plain unscaled sums
+    else:
+        scale = (exec_core.deferred_scale(plan.normalization, n_s, total_valid)
+                 if fused else None)
     mb0 = jax.tree.map(lambda x: x[0], micro_batches)
-    metrics0 = exec_core.metrics_zeros(loss_fn, plan.normalization, params, mb0)
+    metrics0 = exec_core.metrics_zeros(loss_fn, norm, params, mb0)
+    metric_div = 1 if raw else n_s
 
     def micro_step(carry, mb):
         acc, loss_sum, metric_sum = carry
-        lfn = exec_core.micro_loss_fn(loss_fn, plan.normalization, n_s,
-                                      total_valid, mb, defer_scale=fused)
+        lfn = exec_core.micro_loss_fn(loss_fn, norm, n_s, total_valid, mb,
+                                      defer_scale=fused or raw)
         grad_fn = jax.value_and_grad(lfn, has_aux=True)
         if plan.remat_micro_step:
             grad_fn = jax.checkpoint(grad_fn)
         (l, metrics), grads = grad_fn(params)
         acc = exec_core.accumulate(acc, grads, scale=scale, fused=fused,
                                    interpret=interpret, block=block)
-        metric_sum = jax.tree.map(lambda s, m: s + m / n_s, metric_sum, metrics)
+        metric_sum = jax.tree.map(lambda s, m: s + m / metric_div,
+                                  metric_sum, metrics)
         return (acc, loss_sum + l, metric_sum), None
 
     (grads, loss, metric_sum), _ = jax.lax.scan(
         micro_step, (accum0, jnp.zeros((), jnp.float32), metrics0),
         micro_batches, unroll=plan.unroll)
-    if fused:
+    if fused and not raw:
         loss = loss * scale  # normalization was deferred to the accumulate
     return grads, loss, metric_sum
 
@@ -127,6 +141,15 @@ class _CompiledExecutorBase:
     def _accumulated(self, params, micro_batches):
         return _scan_accumulate(self.loss_fn, self.plan, self.fused, params,
                                 micro_batches, self._interpret, self._block)
+
+    def raw_accumulate(self, params, micro_batches):
+        """Traceable UN-normalized accumulation over a (local) split batch:
+        (grad sums, loss sum, metric sums) with no 1/N anywhere — the
+        per-device half of the ShardedExecutor's deferred-sync step, run
+        with this executor's own strategy (scan / Pallas accumulate)."""
+        return _scan_accumulate(self.loss_fn, self.plan, self.fused, params,
+                                micro_batches, self._interpret, self._block,
+                                raw=True)
 
     def make_train_step(self) -> Callable:
         """(params, opt_state, split_batch) -> (params, opt_state, metrics);
@@ -193,19 +216,23 @@ class FlatFusedExecutor(_CompiledExecutorBase):
     name = "flat"
     fused = True  # raw micro losses; normalization fused into the accumulate
 
-    def _accumulated_flat(self, params, micro_batches):
-        """Like ``_scan_accumulate`` but the carry holds flat buckets."""
+    def _accumulated_flat(self, params, micro_batches, raw: bool = False):
+        """Like ``_scan_accumulate`` but the carry holds flat buckets.
+        ``raw=True`` defers all normalization to the caller (sharded
+        execution) — unscaled sums, same flat-bucket strategy."""
         plan = self.plan
+        norm = "exact" if raw else plan.normalization
         spec = flat.FlatSpec.for_tree(params)  # static at trace time
         n_s, total_valid = exec_core.denominators(micro_batches)
-        scale = exec_core.deferred_scale(plan.normalization, n_s, total_valid)
+        scale = (1.0 if raw else
+                 exec_core.deferred_scale(plan.normalization, n_s, total_valid))
         mb0 = jax.tree.map(lambda x: x[0], micro_batches)
-        metrics0 = exec_core.metrics_zeros(self.loss_fn, plan.normalization,
-                                           params, mb0)
+        metrics0 = exec_core.metrics_zeros(self.loss_fn, norm, params, mb0)
+        metric_div = 1 if raw else n_s
 
         def micro_step(carry, mb):
             acc, loss_sum, metric_sum = carry
-            lfn = exec_core.micro_loss_fn(self.loss_fn, plan.normalization,
+            lfn = exec_core.micro_loss_fn(self.loss_fn, norm,
                                           n_s, total_valid, mb,
                                           defer_scale=True)
             grad_fn = jax.value_and_grad(lfn, has_aux=True)
@@ -215,7 +242,7 @@ class FlatFusedExecutor(_CompiledExecutorBase):
             acc = exec_core.accumulate_flat(acc, spec, grads, scale=scale,
                                             interpret=self._interpret,
                                             block=self._block)
-            metric_sum = jax.tree.map(lambda s, m: s + m / n_s,
+            metric_sum = jax.tree.map(lambda s, m: s + m / metric_div,
                                       metric_sum, metrics)
             return (acc, loss_sum + l, metric_sum), None
 
@@ -224,7 +251,14 @@ class FlatFusedExecutor(_CompiledExecutorBase):
             (spec.zeros(plan.accum_dtype), jnp.zeros((), jnp.float32),
              metrics0),
             micro_batches, unroll=plan.unroll)
-        return spec, acc, loss * scale, metric_sum
+        return spec, acc, (loss if raw else loss * scale), metric_sum
+
+    def raw_accumulate(self, params, micro_batches):
+        """Un-normalized flat-bucket accumulation (see the base class doc);
+        returns the gradient sums as a TREE (unflattened, accum dtype)."""
+        spec, acc, loss, metric_sum = self._accumulated_flat(
+            params, micro_batches, raw=True)
+        return spec.unflatten(acc, cast=False), loss, metric_sum
 
     def make_train_step(self) -> Callable:
         def train_step(params, opt_state, micro_batches):

@@ -53,6 +53,12 @@ class Pipeline:
       * with ``stage=False`` no device placement happens at all and the
         pipeline yields host numpy batches (the ``MBSLoader`` facade).
 
+    ``mesh`` is a convenience for the common Layer-6 case: stage every
+    split batch with the mesh's batch shardings (``launch/sharding
+    .batch_specs`` — dim 0 is the scan axis, the sample dim shards over
+    the (pod, data) axes), so the sharded step never reshards its input.
+    Mutually exclusive with ``sharding``.
+
     Batch ``i`` of a pass started at ``start`` is always drawn with seed
     ``seed + start + i``, so a resumed run consumes exactly the stream an
     uninterrupted run would have seen.
@@ -60,13 +66,21 @@ class Pipeline:
 
     def __init__(self, dataset, plan: MBSPlan, *, prefetch: int = 2,
                  stage: bool = True, sharding: Any = None, seed: int = 0,
-                 batch_kw: Optional[Dict[str, Any]] = None):
+                 batch_kw: Optional[Dict[str, Any]] = None, mesh: Any = None):
         self.dataset = dataset
         self.plan = plan
         self.prefetch = prefetch
         self.stage = stage
         self.seed = seed
         self.batch_kw = dict(batch_kw or {})
+        if mesh is not None:
+            if sharding is not None:
+                raise ValueError("pass either mesh= or sharding=, not both")
+
+            def sharding(split, _mesh=mesh):
+                from ..launch import sharding as sharding_lib  # no cycle
+                return sharding_lib.named(
+                    sharding_lib.batch_specs(split, _mesh), _mesh)
         self._sharding = sharding
         self._resolved_sharding = None if callable(sharding) else sharding
         self.stats = PipelineStats()

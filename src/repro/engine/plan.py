@@ -108,6 +108,17 @@ class MBSPlan:
     auto_normalization: bool = False  # "paper" upgraded to "exact" (ragged)
     remat_policy: str = "period"  # none | dots | period | full
     auto_policy: bool = False  # policy chosen by the planner ("auto")
+    # -- mesh geometry (engine Layer 6) -----------------------------------
+    # data_parallel workers each process local_micro samples of every
+    # micro-batch (micro_batch_size = local_micro * data_parallel); the
+    # cross-device gradient sync happens once per MINI-batch (deferred).
+    data_parallel: int = 1
+    local_micro: Optional[int] = None  # = micro_batch_size when dp == 1
+
+    def __post_init__(self):
+        if self.local_micro is None:
+            object.__setattr__(self, "local_micro",
+                               self.micro_batch_size // self.data_parallel)
 
     @property
     def has_ragged_tail(self) -> bool:
@@ -154,10 +165,12 @@ class MBSPlan:
         src = "memory model" if self.auto_micro else "pinned"
         norm = self.normalization + (" (auto)" if self.auto_normalization else "")
         pol = self.remat_policy + (" (auto)" if self.auto_policy else "")
+        mesh = (f", data-parallel {self.data_parallel} x local {self.local_micro}"
+                if self.data_parallel > 1 else "")
         return (f"MBSPlan: mini-batch {self.mini_batch_size} -> "
                 f"{self.num_micro_batches} x micro-batch {self.micro_batch_size}"
                 f" (pad {self.pad}, micro {src}, normalization {norm}, "
-                f"remat {pol}, accum {jnp.dtype(self.accum_dtype).name})")
+                f"remat {pol}, accum {jnp.dtype(self.accum_dtype).name}{mesh})")
 
 
 def plan_mbs(mini_batch_size: int, *,
@@ -171,7 +184,8 @@ def plan_mbs(mini_batch_size: int, *,
              tp: int = 1, fsdp: int = 1, opt_slots: Optional[int] = None,
              act_bytes: int = 2, remat: bool = True,
              remat_policy: Optional[str] = None,
-             optimizer: str = "sgd", fused_update: bool = False) -> MBSPlan:
+             optimizer: str = "sgd", fused_update: bool = False,
+             mesh=None, fsdp_params: bool = True) -> MBSPlan:
     """Produce an :class:`MBSPlan` for one training setup.
 
     Micro-batch size resolution, in priority order:
@@ -204,24 +218,45 @@ def plan_mbs(mini_batch_size: int, *,
       * ``None`` (default) preserves the legacy ``remat`` bool behavior.
     The choice is recorded in ``MBSPlan.remat_policy`` and must be threaded
     into the loss function (``steps.make_loss_fn(remat_policy=...)``).
+
+    ``mesh`` makes the plan mesh-aware (engine Layer 6): the budget is read
+    as PER-DEVICE bytes (params/opt-state discounted by the real sharding
+    policy via ``memory_model.param_shard_ratio``; ``fsdp_params=False``
+    models a replicating data-parallel executor), the memory model sizes
+    the per-device *local* micro-batch, and the global micro-batch size is
+    kept divisible by the data-axis size (pinned sizes are rounded UP to
+    the next multiple) so every worker gets an equal
+    ``local_micro = micro / data_parallel`` slice of each micro-batch.
     """
     if mini_batch_size < 1:
         raise ValueError(f"mini_batch_size must be >= 1, got {mini_batch_size}")
     from ..core import memory_model  # deferred: core imports this module
     from ..models import remat as remat_lib
+    dp = 1
+    if mesh is not None:
+        from ..launch import mesh as mesh_lib  # deferred: no cycle
+        dp = mesh_lib.data_parallel_size(mesh)
+    if mini_batch_size < dp:
+        raise ValueError(
+            f"mini-batch {mini_batch_size} is smaller than the mesh's "
+            f"data-parallel size {dp}; every worker needs at least one "
+            "sample per micro-batch — shrink the data axis or grow the batch")
     auto_policy_requested = remat_policy == "auto"
     policy = (None if auto_policy_requested
               else remat_lib.resolve(remat, remat_policy))
     can_search = model_cfg is not None and seq_len is not None
     budget = budget_bytes or memory_model.V5E_HBM_BYTES
     mm_kw = dict(tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
-                 optimizer=optimizer, fused_update=fused_update)
+                 optimizer=optimizer, fused_update=fused_update,
+                 mesh=mesh, fsdp_params=fsdp_params)
+    # the memory model budgets what ONE device holds: local samples
+    local_mini = mini_batch_size // dp
 
-    def cheapest_policy_admitting(micro: int) -> str:
+    def cheapest_policy_admitting(local: int) -> str:
         for p in memory_model.POLICY_ORDER:
             est = memory_model.estimate(model_cfg, seq_len, remat_policy=p,
                                         **mm_kw)
-            if est.total(micro) <= budget:
+            if est.total(local) <= budget:
                 return p
         return memory_model.POLICY_ORDER[-1]
 
@@ -237,23 +272,28 @@ def plan_mbs(mini_batch_size: int, *,
         if seq_len is None:
             raise ValueError("auto micro-batch sizing needs seq_len")
         if auto_policy_requested:
-            policy, micro = memory_model.suggest_remat_policy_and_micro(
-                model_cfg, seq_len, mini_batch_size, budget_bytes=budget,
+            policy, local = memory_model.suggest_remat_policy_and_micro(
+                model_cfg, seq_len, local_mini, budget_bytes=budget,
                 **mm_kw)
-            micro = micro or 1
+            micro = (local or 1) * dp
             policy_searched = True
         else:
-            micro = memory_model.suggest_micro_batch_size(
-                model_cfg, seq_len, mini_batch_size, budget_bytes=budget,
-                remat_policy=policy, **mm_kw) or 1
+            micro = (memory_model.suggest_micro_batch_size(
+                model_cfg, seq_len, local_mini, budget_bytes=budget,
+                remat_policy=policy, **mm_kw) or 1) * dp
         auto = True
     else:
         micro = mini_batch_size
 
     micro = max(1, min(micro, mini_batch_size))  # Algorithm 1 lines 2–4
+    if dp > 1:
+        # divisibility against the data axis: round UP to the next multiple
+        # (per-device load ceil(micro/dp) never exceeds the pinned intent),
+        # capped at the largest dp-divisible size <= the mini-batch
+        micro = min(dp * -(-micro // dp), dp * local_mini)
     if policy is None:  # "auto" with a pinned micro size (or no model cfg)
         if can_search:
-            policy = cheapest_policy_admitting(micro)
+            policy = cheapest_policy_admitting(micro // dp)
             policy_searched = True
         else:
             # nothing to search against: the legacy bool decides, and the
@@ -270,4 +310,5 @@ def plan_mbs(mini_batch_size: int, *,
                    accum_dtype, remat_micro_step, unroll,
                    auto_micro=auto, auto_normalization=auto_norm,
                    remat_policy=policy,
-                   auto_policy=auto_policy_requested and policy_searched)
+                   auto_policy=auto_policy_requested and policy_searched,
+                   data_parallel=dp, local_micro=micro // dp)

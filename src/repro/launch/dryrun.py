@@ -228,6 +228,43 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     mem = compiled.memory_analysis()
     colls_raw = collective_bytes(compiled.as_text())
 
+    per_device = None
+    grad_sync = None
+    if shape.kind == "train":
+        # engine Layer 6 report: what the mesh-aware planner would run on
+        # this mesh (per-device budget, local micro, divisible global
+        # micro) and how many all-reduce ops the compiled step actually
+        # schedules (a scanned body appears ONCE in the HLO text — the
+        # deferred-sync ShardedExecutor keeps the gradient all-reduce
+        # outside the scan, so its count is 1 regardless of N_Sμ).
+        from ..core import memory_model
+        try:
+            mesh_plan = engine.plan_mbs(
+                shape.global_batch, num_microbatches=pinned,
+                model_cfg=cfg, seq_len=shape.seq_len, remat=remat,
+                remat_policy=remat_policy, mesh=mesh)
+            est = memory_model.estimate(cfg, shape.seq_len, mesh=mesh,
+                                        remat_policy=mesh_plan.remat_policy)
+            per_device = {
+                "data_parallel": mesh_plan.data_parallel,
+                "local_micro": mesh_plan.local_micro,
+                "micro_batch_global": mesh_plan.micro_batch_size,
+                "budget_bytes": memory_model.V5E_HBM_BYTES,
+                "analytic_bytes_at_local_micro":
+                    est.total(mesh_plan.local_micro),
+                "params_bytes": est.params_bytes,
+                "activation_bytes_per_local_sample":
+                    est.activation_bytes_per_sample,
+            }
+        except Exception as e:  # report must never sink the compile proof
+            per_device = {"error": repr(e)}
+        ar = colls_raw.get("all-reduce", {})
+        grad_sync = {
+            "allreduce_ops_in_hlo": ar.get("count", 0),
+            "allreduce_bytes_in_hlo": ar.get("bytes", 0),
+            "num_microbatches": num_microbatches,
+        }
+
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
@@ -235,6 +272,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "num_microbatches": num_microbatches if bundle.kind == "train" else None,
         "remat_policy": plan.remat_policy if plan is not None else None,
         "remat_policy_auto": plan.auto_policy if plan is not None else None,
+        "per_device": per_device,
+        "gradient_sync": grad_sync,
         "raw_cost_analysis": {k: float(v) for k, v in cost.items()
                               if k in ("flops", "bytes accessed",
                                        "transcendentals", "optimal_seconds")},

@@ -37,3 +37,14 @@ def batch_axes(mesh) -> tuple:
 
 def axis_size(mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def data_parallel_size(mesh) -> int:
+    """Number of data-parallel workers: the product of the batch axes
+    ((pod, data) when the pod axis exists, else data). This is the factor
+    the planner divides the global micro-batch by to get the per-device
+    ``local_micro`` (engine Layer 6)."""
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= axis_size(mesh, a)
+    return dp

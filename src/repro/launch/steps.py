@@ -107,20 +107,23 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
                      remat_policy: Optional[str] = None,
                      normalization: str = "paper",
                      scan_unroll: int = 1,
-                     executor: str = "compiled") -> StepBundle:
+                     executor: str = "compiled",
+                     mesh=None) -> StepBundle:
     """Compiled train step via the MBS engine. ``num_microbatches=None``
     auto-sizes the micro-batch from the analytic memory model (the paper's
     experimentally-determined size, computed — §4.3.2); ragged splits are
     padded + masked rather than asserted away. ``remat_policy`` (incl.
     ``"auto"``) goes through the planner; the loss is built with the
-    plan's *chosen* policy."""
+    plan's *chosen* policy. ``mesh`` makes the plan mesh-aware (engine
+    Layer 6): per-device budget, micro sizes divisible by the data axis —
+    pass the mesh the step will be compiled against."""
     optimizer = optimizer or make_optimizer(cfg)
     plan = engine.plan_mbs(shape.global_batch,
                            num_microbatches=num_microbatches,
                            model_cfg=cfg, seq_len=shape.seq_len,
                            normalization=normalization, unroll=scan_unroll,
                            act_bytes=jnp.dtype(dtype).itemsize, remat=remat,
-                           remat_policy=remat_policy,
+                           remat_policy=remat_policy, mesh=mesh,
                            **optim.memory_model_kw(optimizer,
                                                    fused=executor == "flat"))
     loss_fn = make_loss_fn(cfg, dtype, scan_unroll=scan_unroll,

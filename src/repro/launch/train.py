@@ -43,7 +43,7 @@ def default_optimizer(args) -> optim.Optimizer:
     return optim.sgd(args.lr, momentum=0.9, weight_decay=5e-4)
 
 
-def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
+def build_plan(cfg, args, optimizer=None, mesh=None) -> engine.MBSPlan:
     """The launcher's batch geometry: pinned N_Sμ when given, else the
     memory model picks the micro-batch size (paper §4.3.2, computed) —
     jointly with the remat policy when ``--remat-policy auto`` (the
@@ -52,7 +52,13 @@ def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
     launcher's SGD-momentum) feeds the model's state-slot count and
     step-❺ transient: the flat executor updates in place, so its plan
     admits larger auto micro-batches — but only when the optimizer
-    actually publishes a fused hook."""
+    actually publishes a fused hook.
+
+    With a ``mesh`` the plan is per-device (engine Layer 6): the budget is
+    one worker's HBM, the micro-batch stays divisible by the data axis,
+    and the params discount follows the real executor — the host-mesh
+    ``ShardedExecutor`` replicates params (``fsdp_params=False``), the
+    production GSPMD path FSDP-shards them."""
     budget = (int(args.hbm_budget_gb * 1024 ** 3)
               if args.hbm_budget_gb else None)
     dtype_bytes = 4 if args.dtype == "float32" else 2
@@ -63,17 +69,25 @@ def build_plan(cfg, args, optimizer=None) -> engine.MBSPlan:
         normalization=args.normalization,
         act_bytes=dtype_bytes, remat=not args.reduced,
         remat_policy=getattr(args, "remat_policy", None),
+        mesh=mesh, fsdp_params=getattr(args, "mesh", "host") == "production",
         **optim.memory_model_kw(optimizer, fused=args.executor == "flat"))
 
 
-def build_executor(cfg, plan, args, optimizer=None):
+def build_executor(cfg, plan, args, optimizer=None, mesh=None):
     """The step path used by main() — also exercised directly by the
     end-to-end ragged-tail test. The loss compiles under the plan's
-    chosen remat policy, so the step matches what the planner admitted."""
+    chosen remat policy, so the step matches what the planner admitted.
+    With a data-parallel ``mesh`` (>1 worker on the batch axes) every
+    ``--executor`` routes through the :class:`engine.ShardedExecutor`
+    wrapper: per-device accumulation, ONE gradient all-reduce per
+    mini-batch."""
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     loss_fn = steps.make_loss_fn(cfg, dtype=dtype,
                                  remat_policy=plan.remat_policy)
     opt = optimizer or default_optimizer(args)
+    if mesh is not None and mesh_lib.data_parallel_size(mesh) > 1:
+        return engine.ShardedExecutor(loss_fn, opt, plan, mesh=mesh,
+                                      inner=args.executor), opt
     return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
 
 
@@ -136,20 +150,42 @@ def main():
                     default="float32")
     args = ap.parse_args()
     if args.executor == "streaming" and (args.mesh != "host" or args.multi_pod):
-        ap.error("--executor streaming is the single-device eager pipeline "
-                 "(paper Fig. 1); it ignores sharding — use --mesh host, or "
-                 "a compiled executor for production meshes")
+        # fail fast with the actual contract (not a silent warn-and-ignore):
+        # streaming composes with data-parallel HOST meshes through the
+        # ShardedExecutor; TP/FSDP production meshes need a compiled
+        # executor under GSPMD
+        ap.error("--executor streaming supports single-device and "
+                 "data-parallel host meshes (via the ShardedExecutor); "
+                 "production/multi-pod meshes need a compiled executor")
     if args.resume and not args.ckpt_dir:
         ap.error("--resume needs --ckpt-dir")
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = build_mesh(args)
-    plan = build_plan(cfg, args)
+    dp = mesh_lib.data_parallel_size(mesh)
+    host_dp = args.mesh == "host" and dp > 1
+    plan = build_plan(cfg, args, mesh=mesh)
     print(plan.describe(), flush=True)
-    executor, opt = build_executor(cfg, plan, args)
+    executor, opt = build_executor(cfg, plan, args,
+                                   mesh=mesh if host_dp else None)
 
     init = encdec.init_params if cfg.is_encdec else transformer.init_params
     ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+
+    if host_dp:
+        # data-parallel host mesh (engine Layer 6): every executor runs
+        # through the ShardedExecutor — per-device accumulation of
+        # local_micro samples, ONE deferred gradient all-reduce per
+        # mini-batch; the Pipeline stages with the mesh batch shardings
+        params = init(cfg, jax.random.PRNGKey(0))
+        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                   sharding=executor.batch_shardings)
+        trainer = engine.Trainer(executor.step_split, pipeline,
+                                 ckpt_dir=args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every,
+                                 log_every=args.log_every)
+        run_trainer(trainer, params, opt.init(params), args)
+        return
 
     if args.executor == "streaming":
         # eager paper pipeline: single-device double-buffered streaming;
@@ -179,10 +215,8 @@ def main():
         # the spent split batch (freed for step-❺ temporaries); the Trainer
         # threads state and never touches a donated buffer again
         step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1, 2))
-        pipeline = engine.Pipeline(
-            ds, plan, prefetch=args.prefetch,
-            sharding=lambda split: sharding.named(
-                sharding.batch_specs(split, mesh), mesh))
+        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                   mesh=mesh)
         trainer = engine.Trainer(
             step, pipeline, ckpt_dir=args.ckpt_dir,
             ckpt_every=args.ckpt_every, log_every=args.log_every,

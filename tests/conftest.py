@@ -1,8 +1,19 @@
 import os
 
-# smoke tests and benches must see ONE device — the 512-device XLA flag is
-# set only inside the dry-run subprocesses (see launch/dryrun.py).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Engine Layer 6 (mesh-aware execution) is tested on a FORCED multi-device
+# host platform: 8 CPU "devices" carved out of the host before jax
+# initializes. Single-device tests are unaffected (default placement stays
+# device 0; the 512-device production flag still lives only inside the
+# dry-run subprocesses, which overwrite XLA_FLAGS themselves). Gated so a
+# caller-provided XLA_FLAGS or REPRO_TEST_DEVICE_COUNT=1 opts out.
+_DEV = os.environ.get("REPRO_TEST_DEVICE_COUNT", "8")
+if _DEV not in ("", "0", "1") and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_DEV}").strip()
 
 import jax  # noqa: E402
 
@@ -46,6 +57,42 @@ def make_executor(name: str, loss_fn, optimizer, plan, **overrides):
         kw.pop("donate", None)
         kw.pop("interpret", None)
     return engine.get_executor(name)(loss_fn, optimizer, plan, **kw)
+
+
+# ---------------------------------------------------------------------------
+# mesh dimension of the conformance grid (engine Layer 6)
+# ---------------------------------------------------------------------------
+
+def host_mesh(data: int):
+    """A (data, model=1) mesh over the forced host devices; skips when the
+    platform has fewer (e.g. REPRO_TEST_DEVICE_COUNT=1 opt-out runs)."""
+    import pytest
+    from repro.launch import mesh as mesh_lib
+    if jax.device_count() < data:
+        pytest.skip(f"needs {data} devices, have {jax.device_count()} "
+                    "(conftest forces 8 unless REPRO_TEST_DEVICE_COUNT=1)")
+    return mesh_lib.make_host_mesh(data=data, model=1)
+
+
+def make_sharded_executor(inner: str, loss_fn, optimizer, plan, mesh,
+                          **overrides):
+    """ShardedExecutor over the named inner strategy, with the same
+    CPU-interpret defaults as :func:`make_executor`."""
+    kw = dict(EXECUTOR_KW[inner])
+    kw.pop("donate", None)
+    kw.update(overrides)
+    return engine.ShardedExecutor(loss_fn, optimizer, plan, mesh=mesh,
+                                  inner=inner, **kw)
+
+
+# Golden 5-step loss trajectory, recorded once from CompiledScanExecutor on
+# the tiny model (seed 0, ragged mini-batch 10 -> 3 x 4, SGD-m
+# 0.1/0.9/1e-4, exact normalization). Every executor — and every mesh
+# shape (Layer 6) — must reproduce it: the tolerance only absorbs
+# BLAS/platform noise. If an engine change moves these numbers, that is a
+# *numerics* change — record new values only if the change is intentional
+# and explained.
+GOLDEN_LOSSES = [1.4693074, 1.6477259, 1.5571915, 1.3139976, 1.5032679]
 
 
 # absolute tolerance per result dtype: fp32 paths agree to rounding noise,

@@ -137,6 +137,79 @@ def test_joint_choice_satisfies_analytic_budget(arch, seq, frac, mini):
         assert cheaper <= plan.micro_batch_size
 
 
+# ---------------------------------------------------------------------------
+# Layer-6 planner invariants (mesh-aware admission)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    """Planner-level mesh stand-in: plan_mbs/param_specs only read
+    ``shape``/``axis_names``, so properties can sweep device counts far
+    beyond what the forced host platform provides."""
+
+    def __init__(self, data, model=1):
+        self.shape = {"data": data, "model": model}
+        self.axis_names = ("data", "model")
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64]),
+       frac=st.floats(0.0, 1.0), dpe=st.integers(1, 6),
+       mini=st.integers(64, 512))
+def test_mesh_plan_covers_global_batch(arch, seq, frac, dpe, mini):
+    """local_micro × data_parallel × N_Sμ >= the global mini-batch (every
+    sample is processed), and the global micro-batch stays divisible by
+    the data axis (every worker gets an equal slice)."""
+    cfg = _CFGS[arch]
+    mesh = _FakeMesh(2 ** dpe)
+    plan = engine.plan_mbs(mini, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=_budget_around(cfg, seq, frac),
+                           mesh=mesh, fsdp_params=False)
+    assert plan.data_parallel == 2 ** dpe
+    assert plan.micro_batch_size == plan.local_micro * plan.data_parallel
+    assert (plan.local_micro * plan.data_parallel * plan.num_micro_batches
+            >= mini)
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64]),
+       frac=st.floats(0.0, 1.0), d1=st.integers(0, 6), d2=st.integers(0, 6))
+def test_mesh_admission_monotone_in_device_count(arch, seq, frac, d1, d2):
+    """More data-parallel workers never admit a smaller GLOBAL batch at a
+    fixed per-device budget (a power-of-two mini-batch keeps the
+    mini//dp cap from truncating unevenly)."""
+    cfg = _CFGS[arch]
+    budget = _budget_around(cfg, seq, frac)
+    lo, hi = sorted([2 ** d1, 2 ** d2])
+    mini = 512
+
+    def admitted(dp):
+        return engine.plan_mbs(mini, model_cfg=cfg, seq_len=seq,
+                               budget_bytes=budget, mesh=_FakeMesh(dp),
+                               fsdp_params=False).micro_batch_size
+
+    assert admitted(lo) <= admitted(hi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(_ARCHS), seq=st.sampled_from([16, 64]),
+       frac=st.floats(0.0, 1.0), dpe=st.integers(1, 5),
+       fsdp=st.booleans())
+def test_mesh_plan_never_exceeds_per_device_budget(arch, seq, frac, dpe,
+                                                   fsdp):
+    """The plan's own per-device estimate at its chosen local_micro fits
+    the budget it was admitted under (whenever anything fits at all)."""
+    cfg = _CFGS[arch]
+    mesh = _FakeMesh(2 ** dpe)
+    budget = _budget_around(cfg, seq, frac)
+    plan = engine.plan_mbs(256, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=budget, mesh=mesh, fsdp_params=fsdp)
+    est = memory_model.estimate(cfg, seq, remat_policy=plan.remat_policy,
+                                mesh=mesh, fsdp_params=fsdp)
+    if est.total(1) <= budget:  # something fits: the choice must too
+        assert est.total(plan.local_micro) <= budget
+
+
 @settings(max_examples=30, deadline=None)
 @given(n_b=st.integers(1, 40), n_mu=st.integers(1, 40))
 def test_split_partition_invariants(n_b, n_mu):

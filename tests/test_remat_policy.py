@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import (EXECUTOR_GRID, ToyDataset, assert_scalar_close,
-                      assert_trees_close, make_executor, max_abs_err,
-                      tiny_loss_fn, tiny_optimizer, tiny_params)
+from conftest import (EXECUTOR_GRID, GOLDEN_LOSSES, ToyDataset,
+                      assert_scalar_close, assert_trees_close, make_executor,
+                      max_abs_err, tiny_loss_fn, tiny_optimizer, tiny_params)
 from repro import configs, engine, optim
 from repro.configs.shapes import InputShape
 from repro.core import memory_model
@@ -225,14 +225,8 @@ def test_auto_policy_flag_only_set_when_search_ran():
 # golden-trajectory regression (all four executors)
 # ---------------------------------------------------------------------------
 
-# Recorded once from CompiledScanExecutor on the tiny model (seed 0,
-# ragged mini-batch 10 -> 3 x 4, SGD-m 0.1/0.9/1e-4, exact normalization).
-# Executors agree with each other to ~1e-7; the tolerance only absorbs
-# BLAS/platform noise. If an engine change moves these numbers, that is a
-# *numerics* change — record new values only if the change is intentional
-# and explained.
-GOLDEN_LOSSES = [1.4693074, 1.6477259, 1.5571915, 1.3139976, 1.5032679]
-
+# GOLDEN_LOSSES lives in conftest since the mesh conformance grid
+# (test_mesh_engine.py) pins the SAME trajectory on a (data=4) mesh.
 
 @pytest.mark.parametrize("executor", EXECUTOR_GRID)
 def test_five_step_loss_trajectory_matches_golden(executor):

@@ -73,3 +73,82 @@ def test_cache_specs_prefers_largest_dim():
     specs = sharding.cache_specs(cache, mesh, stacked=True)
     # window dim (32768) sharded on model, batch (128) on data
     assert specs["k"] == P(None, "data", "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# edge cases (previously only exercised indirectly via the smoke paths)
+# ---------------------------------------------------------------------------
+
+def test_param_specs_partially_divisible_leaf():
+    """Only the divisible dim shards; the model axis claims the LAST
+    divisible dim (searching from the right), the rest replicate."""
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"w": jax.ShapeDtypeStruct((3584, 7), jnp.float32)}
+    # dim 1 (7) not divisible -> model falls back to dim 0; nothing left
+    # for FSDP
+    assert sharding.param_specs(params, mesh)["w"] == P("model", None)
+
+
+def test_param_specs_1d_leaves_replicated_even_when_divisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"bias": jax.ShapeDtypeStruct((4096,), jnp.float32),
+              "scalar": jax.ShapeDtypeStruct((), jnp.float32)}
+    specs = sharding.param_specs(params, mesh)
+    assert specs["bias"] == P(None)
+    assert specs["scalar"] == P()
+
+
+def test_param_specs_stacked_2d_leaf_fully_replicated():
+    """Under a stacked root the leading (scan) dim never shards, and a
+    2-D leaf then has only ONE remaining dim — a per-layer vector, which
+    stays replicated like any 1-D leaf."""
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"blocks": ({"scale": jax.ShapeDtypeStruct((24, 4096),
+                                                        jnp.float32)},)}
+    assert sharding.param_specs(params, mesh)["blocks"][0]["scale"] == \
+        P(None, None)
+
+
+def test_param_specs_stacked_skip_applies_to_every_stacked_root():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    for root in ("blocks", "enc_layers", "dec_layers"):
+        params = {root: ({"w": jax.ShapeDtypeStruct((16, 256, 512),
+                                                    jnp.float32)},)}
+        spec = sharding.param_specs(params, mesh)[root][0]["w"]
+        assert spec == P(None, "data", "model"), (root, spec)
+
+
+def test_embed_table_nondivisible_fsdp_dim():
+    """Divisible vocab shards Megatron-style on model; a d_model that the
+    data axis does not divide leaves the FSDP dim replicated (instead of
+    corrupting the layout)."""
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"embed": {"table": jax.ShapeDtypeStruct((256000, 1000),
+                                                      jnp.float32)}}
+    assert sharding.param_specs(params, mesh)["embed"]["table"] == \
+        P("model", None)
+
+
+def test_batch_specs_with_pod_axis_and_nondivisible():
+    mesh = FakeMesh({"pod": 2, "data": 8, "model": 1})
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 16, 128), jnp.int32),
+             "ragged": jax.ShapeDtypeStruct((4, 10, 128), jnp.int32)}
+    specs = sharding.batch_specs(batch, mesh, batch_dim=1)
+    # 16 % (2*8) == 0 -> sharded over the (pod, data) product
+    assert specs["tokens"] == P(None, ("pod", "data"), None)
+    # 10 % 16 != 0 -> replicated, GSPMD handles the layout
+    assert specs["ragged"] == P(None, None, None)
+
+
+def test_cache_specs_nondivisible_fully_replicated():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cache = {"state": jax.ShapeDtypeStruct((21, 10, 7, 3), jnp.float32)}
+    assert sharding.cache_specs(cache, mesh, stacked=True)["state"] == \
+        P(None, None, None, None)
+
+
+def test_fsdp_disabled_leaves_data_axis_unused():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    params = {"w": jax.ShapeDtypeStruct((3584, 14336), jnp.float32)}
+    assert sharding.param_specs(params, mesh, fsdp=False)["w"] == \
+        P(None, "model")
