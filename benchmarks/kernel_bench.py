@@ -70,6 +70,25 @@ def main(quick: bool = True):
     rows.append(emit("kernel/grad_accum_bucketed", t_bucket,
                      f"launches={spec.num_buckets}"))
 
+    # block-size regression row: the REAL Pallas bucketed accumulate across
+    # launch blocks. The fixed BUCKET_BLOCK=65536 measured 8.1x slower than
+    # per-leaf here (interpret mode pays O(N) per grid step for the aliased
+    # buffer); the size-aware default (block=None) must not regress again.
+    from repro.kernels import grad_accum as ga
+    gbuf = spec.flatten(grads)[0]
+    abuf = spec.zeros(jnp.float32)[0]
+    n = int(abuf.shape[0])
+    for blk in (4096, 16384, 65536, 262144, None):
+        if blk is not None and blk >= 2 * n:
+            continue
+        f = jax.jit(lambda a_, g_, b=blk: ga.grad_accum(
+            a_, g_, 0.125, block=b, interpret=True))
+        t = time_fn(f, abuf, gbuf)
+        tag = "default" if blk is None else str(blk)
+        rows.append(emit(f"kernel/grad_accum_block/{tag}", t,
+                         f"bucket_elems={n} "
+                         f"grid={-(-n // (blk or ga.default_block(n, interpret=True)))}"))
+
     # fused flat optimizer update vs the unfused tree reference (oracle of
     # the one-pass kernel arithmetic, kernels/fused_update.py), both fed
     # the SAME gradient values: the fused path writes params+state in

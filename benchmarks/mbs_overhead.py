@@ -33,7 +33,14 @@ the all-reduce counts each compiles to on an unrolled scan (1 vs
 N_Sμ + 1 — the baseline also pays a scalar loss/valid sync), and the
 global batch the mesh-aware planner admits at a fixed per-device budget
 as the data axis grows. N_Sμ is recorded per row: the planner's
-divisibility rounding can change the schedule as dp grows."""
+divisibility rounding can change the schedule as dp grows.
+
+``--tuning-bench`` benchmarks the closed-loop autotuner (engine Layer 7)
+and writes ``BENCH_tuning.json``: bucketed grad-accum per-leaf vs legacy
+fixed block vs heuristic default vs tuned winner on the 96-leaf config,
+plus the admission uplift oracle calibration buys ``plan_mbs`` on reduced
+qwen2 at a tight budget (with the XLA-measured peak proving the
+calibrated micro still fits)."""
 from __future__ import annotations
 
 import os
@@ -352,6 +359,119 @@ def remat_main(quick: bool = True, out_path: str = "BENCH_remat.json"):
     return results
 
 
+def tuning_main(quick: bool = True, out_path: str = "BENCH_tuning.json",
+                cache_path: str = None):
+    """Closed-loop autotuner benchmark (``--tuning-bench``), the engine
+    Layer 7 acceptance numbers, recorded run over run in
+    ``BENCH_tuning.json``:
+
+      * **blocks** — bucketed grad-accum on the synthetic-manyleaf 96-leaf
+        tree: per-leaf vs the legacy fixed BUCKET_BLOCK=65536 (the 8.1x
+        regression) vs the size-aware heuristic default vs the tuner's
+        measured winner; the headline ratio is bucketed-default / per-leaf
+        (must stay within 1.5x).
+      * **calibration** — reduced qwen2 at a tight budget: the analytic
+        plan's admitted micro vs the oracle-calibrated plan's, and XLA
+        ``memory_analysis()`` of the step at the calibrated micro proving
+        it stays under the budget.
+    """
+    import tempfile
+
+    from repro.engine import autotune
+    from repro.kernels.grad_accum import BUCKET_BLOCK
+
+    cache_path = cache_path or os.path.join(tempfile.mkdtemp(), "tuning.json")
+    iters = 3 if quick else 10
+    results = {"benchmark": "tuning", "blocks": {}, "calibration": {}}
+
+    # -- half 2: kernel block tuning (96-leaf always: the acceptance config)
+    params = many_leaf_params(96)
+    spec = engine.FlatSpec.for_tree(params)
+    grads = jax.tree.map(lambda p: p * 0.5 + 0.1, params)
+    acc_tree = jax.tree.map(jnp.zeros_like, params)
+    gbufs = spec.flatten(grads, dtype=jnp.float32)
+
+    t_leaf = time_fn(
+        jax.jit(lambda a, g: ga.grad_accum_tree(a, g, 0.125, interpret=True)),
+        acc_tree, grads, iters=iters)
+    t_legacy = time_fn(
+        jax.jit(lambda a, g: ga.grad_accum_buckets(
+            a, g, 0.125, block=BUCKET_BLOCK, interpret=True)),
+        spec.zeros(jnp.float32), gbufs, iters=iters)
+    t_default = time_fn(
+        jax.jit(lambda a, g: ga.grad_accum_buckets(a, g, 0.125,
+                                                   interpret=True)),
+        spec.zeros(jnp.float32), gbufs, iters=iters)
+
+    sweep = autotune.tune_for_params(params, iters=iters,
+                                     cache_path=cache_path)
+    engine.set_cache_path(cache_path)  # block=None now resolves the winners
+    try:
+        t_tuned = time_fn(
+            jax.jit(lambda a, g: ga.grad_accum_buckets(a, g, 0.125,
+                                                       interpret=True)),
+            spec.zeros(jnp.float32), gbufs, iters=iters)
+    finally:
+        engine.set_cache_path(None)
+
+    results["blocks"] = {
+        "config": "synthetic-manyleaf", "num_leaves": spec.num_leaves,
+        "bucket_elems": [int(n) for n in spec.bucket_sizes],
+        "per_leaf_s": t_leaf / 1e6,
+        "bucketed_legacy_65536_s": t_legacy / 1e6,
+        "bucketed_default_s": t_default / 1e6,
+        "bucketed_tuned_s": t_tuned / 1e6,
+        "default_blocks": [int(b) for b in spec.bucket_blocks(
+            "grad_accum", dtype=jnp.float32, interpret=True)],
+        "ratio_default_vs_per_leaf": t_default / t_leaf,
+        "ratio_legacy_vs_per_leaf": t_legacy / t_leaf,
+        "sweep": {k: {kk: vv for kk, vv in r.items() if kk != "key"}
+                  for k, r in sweep.items()},
+    }
+    emit("tuning/blocks/per_leaf", t_leaf, f"launches={spec.num_leaves}")
+    emit("tuning/blocks/bucketed_legacy", t_legacy,
+         f"block={BUCKET_BLOCK} "
+         f"ratio={results['blocks']['ratio_legacy_vs_per_leaf']:.2f}x")
+    emit("tuning/blocks/bucketed_default", t_default,
+         f"ratio={results['blocks']['ratio_default_vs_per_leaf']:.2f}x "
+         "vs per-leaf (acceptance: <= 1.5x)")
+    emit("tuning/blocks/bucketed_tuned", t_tuned,
+         f"winners={[r['block'] for r in sweep.values()]}")
+
+    # -- half 1: oracle-calibrated admission on reduced qwen2 --------------
+    cfg = configs.get_reduced("qwen2-1.5b")
+    seq, mini = 128, 64
+    budget = 64 * 1024 ** 2  # tight: analytically even micro 1 overflows
+    plan_kw = dict(model_cfg=cfg, seq_len=seq, budget_bytes=budget,
+                   remat_policy="period", act_bytes=4)
+    analytic = engine.plan_mbs(mini, **plan_kw)
+    calibrated = engine.plan_mbs(mini, calibrate="force",
+                                 tuning_cache=cache_path, **plan_kw)
+    measured = autotune.measured_step_bytes(
+        cfg, seq, calibrated.micro_batch_size, remat_policy="period")
+    results["calibration"] = {
+        "arch": "qwen2-1.5b-reduced", "seq": seq, "mini_batch": mini,
+        "budget_bytes": budget,
+        "analytic_micro": analytic.micro_batch_size,
+        "calibrated_micro": calibrated.micro_batch_size,
+        "admission_uplift": (calibrated.micro_batch_size
+                             / analytic.micro_batch_size),
+        "correction": list(calibrated.correction),
+        "measured_bytes_at_calibrated_micro": int(measured),
+        "under_budget": bool(measured <= budget),
+    }
+    emit("tuning/calibration/analytic_micro",
+         float(analytic.micro_batch_size), f"budget={budget}")
+    emit("tuning/calibration/calibrated_micro",
+         float(calibrated.micro_batch_size),
+         f"measured={measured} under_budget={measured <= budget} "
+         f"uplift={results['calibration']['admission_uplift']:.1f}x")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 def _count_allreduce(jitted, *args) -> int:
     import re
     hlo = jitted.lower(*args).compile().as_text()
@@ -448,6 +568,13 @@ if __name__ == "__main__":
                     help="run the sharded-execution benchmark (deferred vs "
                          "per-micro gradient sync at data=2/4/8) and write "
                          "BENCH_mesh.json")
+    ap.add_argument("--tuning-bench", action="store_true",
+                    help="run the closed-loop autotuner benchmark (tuned "
+                         "vs default block times + oracle-calibrated "
+                         "admission uplift) and write BENCH_tuning.json")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache path for --tuning-bench (default: "
+                         "a throwaway temp file)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
@@ -459,5 +586,8 @@ if __name__ == "__main__":
         remat_main(quick=a.quick, out_path=a.out or "BENCH_remat.json")
     elif a.mesh_bench:
         mesh_main(quick=a.quick, out_path=a.out or "BENCH_mesh.json")
+    elif a.tuning_bench:
+        tuning_main(quick=a.quick, out_path=a.out or "BENCH_tuning.json",
+                    cache_path=a.tuning_cache)
     else:
         main(quick=a.quick)

@@ -102,6 +102,17 @@ class MemoryEstimate:
                 + self.fixed_bytes + self.update_transient_bytes
                 + self.activation_bytes_per_sample * micro_batch)
 
+    def affine_coeffs(self) -> tuple:
+        """(fixed, per_sample) such that total(m) == fixed + per_sample*m.
+
+        The estimate is exactly affine in the micro-batch size — this is
+        the property the engine Layer 7 autotuner relies on: a measured
+        XLA peak that is also (approximately) affine in m can be mapped
+        onto this model by a single per-key affine correction
+        (measured ≈ a*total(m) + b), fit from two or three probe
+        compiles (`engine.autotune.calibrate_memory`)."""
+        return self.total(0), self.activation_bytes_per_sample
+
 
 def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
                                 act_bytes: int = 2,

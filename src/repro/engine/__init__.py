@@ -38,9 +38,22 @@ accumulation strategy in ``shard_map`` so the cross-device gradient
 all-reduce happens ONCE per mini-batch — one flat fp32 psum of
 gradients+loss+metrics — instead of once per micro-batch. See DESIGN.md
 §Sharded execution.
+
+Layer 7 — closed-loop autotuner (``autotune.py``): one persistent on-disk
+tuning cache feeds measurement back into the two places the stack above
+guesses. The memory oracle compiles the REAL train step at probe micro
+sizes, reads XLA ``memory_analysis()`` and fits a per-key affine
+correction so ``plan_mbs(calibrate="auto"|"force")`` admits against
+corrected bytes (``MBSPlan.calibrated``); the kernel block tuner sweeps
+launch block sizes for the accumulate/fused-update kernels and installs a
+resolver so ``block=None`` call sites pick the measured winner. Tuning
+changes speed and admission, never numerics. See DESIGN.md §Autotuning.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
+from .autotune import (TuningCache, calibrate_memory,  # noqa: F401
+                       get_cache, set_cache_path, tune_block_sizes,
+                       tune_for_params)
 from .flat import FlatSpec, LeafSlot  # noqa: F401
 from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
                         FlatFusedExecutor, FusedAccumExecutor,

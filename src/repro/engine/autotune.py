@@ -1,0 +1,508 @@
+"""Closed-loop autotuner (engine Layer 7): measured feedback for the
+planner and the Pallas kernels behind one persistent on-disk cache.
+
+Two coupled halves, both keyed into the same JSON cache
+(``~/.cache/repro-tuning/tuning.json``, overridable via
+``REPRO_TUNING_CACHE`` / ``set_cache_path`` / ``--tuning-cache``):
+
+**Half 1 — memory oracle.** ``core/memory_model`` is open-loop analytic:
+it has never been corrected against what XLA really allocates, so
+``plan_mbs`` stays conservative and leaves admitted batch on the table
+(the fixed 64 MB ``fixed_bytes`` pad, the summed step-❺ transient that
+never actually coexists with the activation peak).
+:func:`calibrate_memory` closes the loop: compile the REAL train step at
+2–3 probe micro-batch sizes, read ``compiled.memory_analysis()`` (the
+same machinery the remat lattice was validated against), fit a per-key
+affine correction ``measured ≈ a·modeled + b`` and persist it. A
+calibrated ``plan_mbs(calibrate="auto"|"force")`` then binary-searches
+admission (all integers, not just powers of two) against *corrected*
+bytes, recording ``MBSPlan.calibrated``/``correction``; with no cache
+entry it falls back to the analytic model cleanly.
+
+The correction is affine *per key* because both sides are affine in the
+micro-batch size: the analytic total is ``fixed + act_per_sample·m`` and
+XLA's peak for the scanned step is steady-state + one micro-batch of
+live activations — two lines, so two probes pin the map exactly and a
+third (least-squares) absorbs allocator noise. One global correction
+would conflate per-(arch, seq, policy, mesh, optimizer, executor)
+slopes; the key keeps each line its own.
+
+**Half 2 — kernel block tuner.** ``BENCH_update.json`` proved the fixed
+``BUCKET_BLOCK = 65536`` was a guess, not a measurement: 8.1× SLOWER
+than per-leaf on the 96-leaf bucket. :func:`tune_block_sizes` /
+:func:`tune_for_params` run a timed sweep over candidate blocks for the
+``grad_accum`` and ``fused_update`` kernels and persist the winner per
+(kernel, dtype, buffer-size-bucket, backend); kernels called with
+``block=None`` look the winner up through the resolver this module
+installs into ``kernels/grad_accum.py`` at import, falling back to the
+size-aware ``default_block`` heuristic.
+
+Invariant (tested): tuning may change *speed and admission*, never
+numerics — every tuned block is bit-identical to the default, and a
+calibrated plan runs the exact same step arithmetic as an analytic plan
+of the same geometry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import warnings
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import fused_update as fused_update_mod
+from ..kernels import grad_accum as grad_accum_mod
+from .flat import FlatSpec
+
+CACHE_VERSION = 1
+
+# candidate 1-D launch blocks for the timed sweep; 0 = the whole buffer
+# (grid 1 — the interpret-mode winner, see grad_accum.default_block)
+CANDIDATE_BLOCKS = (4096, 16384, 65536, 262144, 0)
+
+
+# ---------------------------------------------------------------------------
+# cache keys
+# ---------------------------------------------------------------------------
+
+def mesh_tag(mesh) -> str:
+    """Stable axis-name/size fingerprint of a mesh ("none" single-device).
+    Part of every memory key so a mesh-calibrated correction can never
+    leak into single-device plans (and vice versa)."""
+    if mesh is None:
+        return "none"
+    return "x".join(f"{ax}{n}" for ax, n in mesh.shape.items())
+
+
+def arch_tag(cfg) -> str:
+    """Config fingerprint: the name alone collides between full and
+    --reduced variants, so the dimensions that move the memory model are
+    baked in."""
+    dims = [f"L{getattr(cfg, 'num_layers', 0)}"]
+    for short, attr in (("d", "d_model"), ("ff", "d_ff"), ("v", "vocab_size")):
+        val = getattr(cfg, attr, None)
+        if val:
+            dims.append(f"{short}{val}")
+    return "-".join([cfg.name] + dims)
+
+
+def memory_key(cfg, seq: int, remat_policy: str, mesh, optimizer: str,
+               executor: str, backend: Optional[str] = None) -> str:
+    backend = backend or jax.default_backend()
+    return "|".join([arch_tag(cfg), f"s{seq}", str(remat_policy),
+                     f"mesh:{mesh_tag(mesh)}", str(optimizer),
+                     str(executor), backend])
+
+
+def size_bucket(n: int) -> str:
+    """Power-of-two ceiling bucket: one tuned entry covers every buffer
+    within a factor of two of the measured size."""
+    n = max(int(n), 1)
+    return f"p{(n - 1).bit_length()}"
+
+
+def block_key(kind: str, dtype, n: int, *, interpret: Optional[bool] = None,
+              backend: Optional[str] = None) -> str:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    backend = backend or jax.default_backend()
+    mode = f"{backend}+interp" if interpret else backend
+    return "|".join([kind, str(jnp.dtype(dtype)), size_bucket(n), mode])
+
+
+# ---------------------------------------------------------------------------
+# the persistent cache
+# ---------------------------------------------------------------------------
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return os.path.expanduser(env)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-tuning",
+                        "tuning.json")
+
+
+def _empty() -> Dict[str, Any]:
+    return {"version": CACHE_VERSION, "memory": {}, "blocks": {}}
+
+
+class TuningCache:
+    """Tolerant JSON store for both tuner halves.
+
+    Corrupted files, wrong versions, and malformed entries are treated as
+    *absent* — the planner falls back to the analytic model and the
+    kernels to the heuristic block; nothing ever raises out of a lookup.
+    Writes are atomic (tmp + rename) and best-effort: an unwritable cache
+    degrades to in-memory-only with a warning.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else default_cache_path()
+        self._data: Optional[Dict[str, Any]] = None
+
+    # -- load / save --------------------------------------------------------
+
+    @property
+    def data(self) -> Dict[str, Any]:
+        if self._data is None:
+            self._data = self._load()
+        return self._data
+
+    def _load(self) -> Dict[str, Any]:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            return _empty()
+        if not isinstance(raw, dict) or raw.get("version") != CACHE_VERSION:
+            return _empty()  # stale schema: recalibrate rather than misread
+        out = _empty()
+        mem = raw.get("memory")
+        if isinstance(mem, dict):
+            out["memory"] = mem
+        blocks = raw.get("blocks")
+        if isinstance(blocks, dict):
+            out["blocks"] = blocks
+        return out
+
+    def save(self) -> None:
+        try:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self.data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError as e:
+            warnings.warn(f"tuning cache not persisted to {self.path}: {e}")
+
+    # -- memory-oracle entries ----------------------------------------------
+
+    def memory_correction(self, key: str) -> Optional[Tuple[float, float]]:
+        entry = self.data["memory"].get(key)
+        if not isinstance(entry, dict):
+            return None
+        try:
+            a, b = float(entry["a"]), float(entry["b"])
+        except (KeyError, TypeError, ValueError):
+            return None  # malformed/stale entry == no entry
+        if not (a > 0.0 and jnp.isfinite(a) and jnp.isfinite(b)):
+            return None
+        return a, b
+
+    def put_memory(self, key: str, a: float, b: float,
+                   probes: Sequence[Sequence[float]] = ()) -> None:
+        self.data["memory"][key] = {
+            "a": float(a), "b": float(b),
+            "probes": [[int(m), int(mod), int(meas)]
+                       for m, mod, meas in probes],
+        }
+        self.save()
+
+    # -- tuned-block entries ------------------------------------------------
+
+    def tuned_block(self, key: str) -> Optional[int]:
+        entry = self.data["blocks"].get(key)
+        if not isinstance(entry, dict):
+            return None
+        try:
+            block = int(entry["block"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        return block if block >= 0 else None  # 0 = whole buffer
+
+    def put_block(self, key: str, block: int,
+                  timings_us: Optional[Dict[str, float]] = None) -> None:
+        self.data["blocks"][key] = {"block": int(block),
+                                    "timings_us": timings_us or {}}
+        self.save()
+
+
+_active_path: Optional[str] = None
+_caches: Dict[str, TuningCache] = {}
+
+
+def set_cache_path(path: Optional[str]) -> None:
+    """Point the process-wide active cache (planner lookups with no
+    explicit path + the kernel block resolver) at ``path`` (None resets
+    to the ``REPRO_TUNING_CACHE`` / ``~/.cache/repro-tuning`` default)."""
+    global _active_path
+    _active_path = os.path.expanduser(path) if path else None
+
+
+def get_cache(path: Optional[str] = None) -> TuningCache:
+    p = os.path.expanduser(path) if path else (_active_path
+                                               or default_cache_path())
+    if p not in _caches:
+        _caches[p] = TuningCache(p)
+    return _caches[p]
+
+
+# ---------------------------------------------------------------------------
+# Half 1 — memory oracle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MemoryCorrection:
+    """``measured ≈ a · modeled + b`` for one cache key."""
+    a: float
+    b: float
+    probes: Tuple[Tuple[int, int, int], ...] = ()  # (micro, modeled, measured)
+
+    @property
+    def correction(self) -> Tuple[float, float]:
+        return (self.a, self.b)
+
+    def corrected(self, modeled_bytes: float) -> float:
+        return self.a * modeled_bytes + self.b
+
+
+def _probe_optimizer(name: str):
+    """A concrete optimizer whose state tree matches the named rule (the
+    hyperparameters are irrelevant to the memory profile; the slots are
+    not)."""
+    from .. import optim
+    if name == "sgd_plain":
+        return optim.sgd(0.01)
+    if name == "adam":
+        return optim.adam(0.01)
+    if name == "adamw":
+        return optim.adam(0.01, weight_decay=0.01, decoupled=True)
+    return optim.sgd(0.01, momentum=0.9)
+
+
+def measured_step_bytes(cfg, seq: int, micro: int, *,
+                        remat_policy: str = "period",
+                        optimizer: str = "sgd", executor: str = "compiled",
+                        act_bytes: int = 4,
+                        num_probe_microbatches: int = 2) -> int:
+    """Peak device bytes of the REAL compiled train step at one pinned
+    micro-batch size: lower + compile abstractly (no allocation, dry-run
+    style) and read XLA ``memory_analysis()``. The peak counts arguments
+    + outputs + temps − donation-aliased bytes — the quantity admission
+    must keep under the HBM budget."""
+    from ..configs.shapes import InputShape
+    from ..launch import steps
+
+    # streaming has no jittable whole-mini-batch step; its per-micro
+    # memory profile matches the compiled scan (one micro live), so probe
+    # that. The key still records the requested executor.
+    probe_exec = "compiled" if executor == "streaming" else executor
+    dtype = jnp.float32 if act_bytes >= 4 else jnp.bfloat16
+    shape = InputShape(f"calibrate_m{micro}", "train", seq,
+                       micro * num_probe_microbatches)
+    bundle = steps.build_train_step(
+        cfg, shape, num_microbatches=num_probe_microbatches,
+        optimizer=_probe_optimizer(optimizer), dtype=dtype,
+        remat_policy=remat_policy, executor=probe_exec)
+    compiled = jax.jit(bundle.fn, donate_argnums=bundle.donate_argnums
+                       ).lower(*bundle.arg_shapes).compile()
+    mem = compiled.memory_analysis()
+    return int(getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "output_size_in_bytes", 0)
+               + getattr(mem, "temp_size_in_bytes", 0)
+               - getattr(mem, "alias_size_in_bytes", 0))
+
+
+def _fit_affine(points: Sequence[Tuple[float, float]]) -> Tuple[float, float]:
+    """Least-squares ``y ≈ a·x + b`` with safe degeneracies: one probe (or
+    identical modeled values) pins only the offset; a non-positive or
+    non-finite slope falls back to offset-only (a=1)."""
+    xs = [float(x) for x, _ in points]
+    ys = [float(y) for _, y in points]
+    n = len(xs)
+    if n == 0:
+        return 1.0, 0.0
+    mx, my = sum(xs) / n, sum(ys) / n
+    var = sum((x - mx) ** 2 for x in xs)
+    if n < 2 or var == 0.0:
+        return 1.0, my - mx
+    a = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / var
+    if not (a > 0.0 and jnp.isfinite(a)):
+        return 1.0, my - mx
+    return a, my - a * mx
+
+
+def calibrate_memory(cfg, seq: int, *, remat_policy: str = "period",
+                     optimizer: str = "sgd", executor: str = "compiled",
+                     mesh=None, probe_micros: Sequence[int] = (1, 2, 4),
+                     act_bytes: int = 4, tp: int = 1, fsdp: int = 1,
+                     opt_slots: Optional[int] = None,
+                     fused_update: bool = False, fsdp_params: bool = True,
+                     cache: Optional[TuningCache] = None,
+                     cache_path: Optional[str] = None) -> MemoryCorrection:
+    """Run the calibration pass for one key and persist the correction.
+
+    Probes compile the single-worker step (for a mesh plan that is the
+    per-device view the planner budgets — exact for replicated-param
+    data parallelism, the host-mesh ``ShardedExecutor``); the entry is
+    still keyed by the mesh shape so it never serves a different
+    topology.
+    """
+    from ..core import memory_model
+    cache = cache or get_cache(cache_path)
+    est = memory_model.estimate(
+        cfg, seq, tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
+        remat_policy=remat_policy, optimizer=optimizer,
+        fused_update=fused_update, mesh=mesh, fsdp_params=fsdp_params)
+    probes = []
+    for m in dict.fromkeys(int(m) for m in probe_micros if m >= 1):
+        modeled = est.total(m)
+        measured = measured_step_bytes(
+            cfg, seq, m, remat_policy=remat_policy, optimizer=optimizer,
+            executor=executor, act_bytes=act_bytes)
+        probes.append((m, modeled, measured))
+    a, b = _fit_affine([(mod, meas) for _, mod, meas in probes])
+    key = memory_key(cfg, seq, remat_policy, mesh, optimizer, executor)
+    cache.put_memory(key, a, b, probes)
+    return MemoryCorrection(a, b, tuple(probes))
+
+
+def planner_correction(cfg, seq: int, *, remat_policy: str, mesh,
+                       optimizer: str, executor: str, mode: str,
+                       cache_path: Optional[str] = None,
+                       probe_micros: Sequence[int] = (1, 2, 4),
+                       **mm_kw) -> Optional[Tuple[float, float]]:
+    """The planner's entry: ``mode="auto"`` is a pure cache lookup (no
+    entry → None → analytic fallback); ``"force"`` runs the probe
+    compiles now and returns the fresh fit."""
+    if mode == "force":
+        return calibrate_memory(
+            cfg, seq, remat_policy=remat_policy, optimizer=optimizer,
+            executor=executor, mesh=mesh, probe_micros=probe_micros,
+            cache_path=cache_path, **mm_kw).correction
+    cache = get_cache(cache_path)
+    return cache.memory_correction(
+        memory_key(cfg, seq, remat_policy, mesh, optimizer, executor))
+
+
+def corrected_micro_search(cfg, seq: int, local_mini: int, budget: int,
+                           correction: Tuple[float, float], *,
+                           remat_policy: str, **mm_kw) -> Optional[int]:
+    """Largest micro-batch (ANY integer ≤ local_mini, not just powers of
+    two — corrected bytes are trusted, so the pow-of-two safety margin is
+    dropped) whose corrected bytes fit the budget; None when even 1 does
+    not fit."""
+    from ..core import memory_model
+    est = memory_model.estimate(cfg, seq, remat_policy=remat_policy, **mm_kw)
+    a, b = correction
+    fixed, per_sample = est.affine_coeffs()  # total(m) == fixed + per_sample*m
+
+    def fits(m: int) -> bool:
+        return a * (fixed + per_sample * m) + b <= budget
+
+    if not fits(1):
+        return None
+    lo, hi = 1, max(int(local_mini), 1)
+    while lo < hi:  # binary search the admission frontier (monotone in m)
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# Half 2 — kernel block tuner
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _sweep_fn(kind: str, n: int, dtype, block: int, interpret: bool):
+    """(compiled thunk, operands) timing one candidate block. block==0
+    sweeps the whole-buffer launch."""
+    blk = n if block == 0 else min(block, n)
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,), jnp.float32)
+    if kind == "grad_accum":
+        acc = jnp.zeros((n,), jnp.float32)
+        fn = jax.jit(lambda a_, g_: grad_accum_mod.grad_accum(
+            a_, g_, 0.125, block=blk, interpret=interpret))
+        return fn, (acc, g)
+    if kind == "fused_update":
+        p = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
+        m = jnp.zeros((n,), dtype)
+        fn = jax.jit(lambda p_, g_, m_: fused_update_mod.fused_sgd(
+            p_, g_, m_, 0.01, momentum=0.9, block=blk, interpret=interpret))
+        return fn, (p, g, m)
+    raise ValueError(f"unknown tunable kernel kind {kind!r}")
+
+
+def tune_block_sizes(n: int, dtype=jnp.float32, *, kind: str = "grad_accum",
+                     candidates: Sequence[int] = CANDIDATE_BLOCKS,
+                     iters: int = 3, interpret: Optional[bool] = None,
+                     cache: Optional[TuningCache] = None,
+                     cache_path: Optional[str] = None) -> Dict[str, Any]:
+    """Timed sweep over candidate launch blocks for one (kernel, dtype,
+    buffer size); persists the winner under the size bucket so every
+    buffer within 2× reuses it. Returns the sweep record."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cache = cache or get_cache(cache_path)
+    n = int(n)
+    timings: Dict[str, float] = {}
+    best_block, best_t = None, None
+    for cand in dict.fromkeys(candidates):
+        if cand != 0 and cand >= 2 * n:
+            continue  # indistinguishable from the whole-buffer candidate
+        fn, args = _sweep_fn(kind, n, dtype, cand, interpret)
+        t = _time_us(fn, *args, iters=iters)
+        timings[str(cand)] = t
+        if best_t is None or t < best_t:
+            best_block, best_t = cand, t
+    key = block_key(kind, dtype, n, interpret=interpret)
+    cache.put_block(key, best_block, timings)
+    return {"key": key, "n": n, "block": best_block,
+            "time_us": best_t, "timings_us": timings}
+
+
+def tune_for_params(params, *, kinds: Sequence[str] = ("grad_accum",
+                                                       "fused_update"),
+                    iters: int = 3, interpret: Optional[bool] = None,
+                    cache: Optional[TuningCache] = None,
+                    cache_path: Optional[str] = None) -> Dict[str, Any]:
+    """Tune every dtype bucket of a model's :class:`FlatSpec` — the
+    buffers the flat executor actually launches over."""
+    spec = FlatSpec.for_tree(params)
+    out = {}
+    for n, dt in zip(spec.bucket_sizes, spec.bucket_dtypes):
+        for kind in kinds:
+            rec = tune_block_sizes(n, dt, kind=kind, iters=iters,
+                                   interpret=interpret, cache=cache,
+                                   cache_path=cache_path)
+            out[rec["key"]] = rec
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kernel-side resolver: installed once at import so any kernel entry
+# called with block=None sees the active cache's winners
+# ---------------------------------------------------------------------------
+
+def _tuned_block_resolver(kind: str, dtype_str: str, n: int,
+                          interpret: bool) -> Optional[int]:
+    try:
+        tuned = get_cache().tuned_block(
+            block_key(kind, dtype_str, n, interpret=interpret))
+    except Exception:
+        return None  # a broken cache must never sink a kernel launch
+    if tuned is None:
+        return None
+    return n if tuned == 0 else tuned  # 0 = whole-buffer winner
+
+
+grad_accum_mod.set_block_resolver(_tuned_block_resolver)

@@ -24,6 +24,15 @@ Compiled executors donate params/opt-state/split-batch buffers at the
 ``step_split`` jit boundary (construct with ``donate=False`` for callers
 that must reuse inputs across calls — see DESIGN.md for the contract).
 
+Kernel block sizes are resolved at trace/build time, not hard-coded:
+every Pallas call the executors reach (grad-accum, fused update) takes
+``block=None`` and resolves it through the kernel-side hook
+(``kernels.grad_accum.resolve_block``), which consults the persistent
+tuning cache installed by ``engine/autotune.py`` before falling back to
+the size-aware heuristic — so a ``tune_for_params`` sweep changes the
+launch geometry of all executors without touching their code, and
+never their numerics (DESIGN.md §Autotuning).
+
 New strategies (async multi-device, serving) implement the same
 :class:`Executor` surface and register in :data:`EXECUTORS`.
 """

@@ -82,6 +82,20 @@ class FlatSpec:
         """Zero accumulator buffers: param bucket partitioning, one dtype."""
         return tuple(jnp.zeros((n,), dtype) for n in self.bucket_sizes)
 
+    def bucket_blocks(self, kind: str = "grad_accum", *,
+                      dtype: Optional[Any] = None,
+                      interpret: Optional[bool] = None) -> Tuple[int, ...]:
+        """Per-bucket 1-D launch blocks, resolved at build time through the
+        tuning cache (when ``engine.autotune`` has an entry for this
+        (kernel, dtype, size-bucket, backend)) or the size-aware heuristic.
+        ``dtype`` overrides the bucket dtype for the lookup (accumulator
+        buffers carry ``accum_dtype``, not the param dtype)."""
+        from ..kernels.grad_accum import resolve_block
+        return tuple(
+            resolve_block(kind, dtype if dtype is not None else dt, n,
+                          interpret)
+            for n, dt in zip(self.bucket_sizes, self.bucket_dtypes))
+
     def flatten(self, tree, dtype: Optional[Any] = None
                 ) -> Tuple[jnp.ndarray, ...]:
         """Tree → bucketed 1-D buffers. ``dtype`` casts every leaf (used to

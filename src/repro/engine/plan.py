@@ -114,6 +114,12 @@ class MBSPlan:
     # cross-device gradient sync happens once per MINI-batch (deferred).
     data_parallel: int = 1
     local_micro: Optional[int] = None  # = micro_batch_size when dp == 1
+    # -- measured-feedback admission (engine Layer 7) ----------------------
+    # True when the micro size was admitted against oracle-corrected bytes
+    # (engine/autotune memory calibration); ``correction`` records the
+    # (a, b) affine map ``measured ~= a*modeled + b`` that was applied.
+    calibrated: bool = False
+    correction: Optional[tuple] = None
 
     def __post_init__(self):
         if self.local_micro is None:
@@ -162,7 +168,8 @@ class MBSPlan:
                    cfg.accum_dtype, cfg.remat_micro_step, cfg.unroll)
 
     def describe(self) -> str:
-        src = "memory model" if self.auto_micro else "pinned"
+        src = ("calibrated memory model" if self.calibrated
+               else "memory model" if self.auto_micro else "pinned")
         norm = self.normalization + (" (auto)" if self.auto_normalization else "")
         pol = self.remat_policy + (" (auto)" if self.auto_policy else "")
         mesh = (f", data-parallel {self.data_parallel} x local {self.local_micro}"
@@ -185,7 +192,9 @@ def plan_mbs(mini_batch_size: int, *,
              act_bytes: int = 2, remat: bool = True,
              remat_policy: Optional[str] = None,
              optimizer: str = "sgd", fused_update: bool = False,
-             mesh=None, fsdp_params: bool = True) -> MBSPlan:
+             mesh=None, fsdp_params: bool = True,
+             calibrate: str = "off", tuning_cache: Optional[str] = None,
+             executor: str = "compiled") -> MBSPlan:
     """Produce an :class:`MBSPlan` for one training setup.
 
     Micro-batch size resolution, in priority order:
@@ -227,7 +236,25 @@ def plan_mbs(mini_batch_size: int, *,
     kept divisible by the data-axis size (pinned sizes are rounded UP to
     the next multiple) so every worker gets an equal
     ``local_micro = micro / data_parallel`` slice of each micro-batch.
+
+    ``calibrate`` closes the loop against XLA (engine Layer 7, only when
+    the planner itself sizes the micro-batch — resolution path 3):
+      * ``"off"`` (default): pure analytic admission, no cache I/O;
+      * ``"auto"``: if the tuning cache (``tuning_cache`` path or the
+        active/default cache) holds a calibration entry for this
+        (arch, seq, policy, mesh, optimizer, executor, backend) key, the
+        admission search runs against *corrected* bytes
+        (``a*modeled + b``, any integer micro — not just powers of two);
+        no entry → clean analytic fallback, nothing raises;
+      * ``"force"``: run the probe compiles NOW (2–3 real train-step
+        compilations + ``memory_analysis()``), persist the fit, then
+        admit against it.
+    A calibrated plan records ``calibrated=True`` and the correction used.
+    ``executor`` only keys the cache entry; it does not change geometry.
     """
+    if calibrate not in ("off", "auto", "force"):
+        raise ValueError(
+            f'calibrate must be "off", "auto" or "force", got {calibrate!r}')
     if mini_batch_size < 1:
         raise ValueError(f"mini_batch_size must be >= 1, got {mini_batch_size}")
     from ..core import memory_model  # deferred: core imports this module
@@ -262,6 +289,8 @@ def plan_mbs(mini_batch_size: int, *,
 
     auto = False
     policy_searched = False
+    calibrated = False
+    correction = None
     if micro_batch_size is not None:
         micro = micro_batch_size
     elif num_microbatches is not None:
@@ -272,15 +301,34 @@ def plan_mbs(mini_batch_size: int, *,
         if seq_len is None:
             raise ValueError("auto micro-batch sizing needs seq_len")
         if auto_policy_requested:
+            # analytic joint search picks the policy; calibration (below)
+            # then refines the micro size for THAT policy only, so "force"
+            # costs one probe set, not one per lattice point
             policy, local = memory_model.suggest_remat_policy_and_micro(
                 model_cfg, seq_len, local_mini, budget_bytes=budget,
                 **mm_kw)
-            micro = (local or 1) * dp
             policy_searched = True
         else:
-            micro = (memory_model.suggest_micro_batch_size(
+            local = memory_model.suggest_micro_batch_size(
                 model_cfg, seq_len, local_mini, budget_bytes=budget,
-                remat_policy=policy, **mm_kw) or 1) * dp
+                remat_policy=policy, **mm_kw)
+        if calibrate != "off":
+            from . import autotune
+            corr = autotune.planner_correction(
+                model_cfg, seq_len, remat_policy=policy, mesh=mesh,
+                optimizer=optimizer, executor=executor, mode=calibrate,
+                cache_path=tuning_cache,
+                **{k: v for k, v in mm_kw.items()
+                   if k not in ("optimizer", "mesh")})
+            if corr is not None:
+                cal_local = autotune.corrected_micro_search(
+                    model_cfg, seq_len, local_mini, budget, corr,
+                    remat_policy=policy, **mm_kw)
+                if cal_local is not None:
+                    local = cal_local
+                    calibrated = True
+                    correction = (float(corr[0]), float(corr[1]))
+        micro = (local or 1) * dp
         auto = True
     else:
         micro = mini_batch_size
@@ -311,4 +359,5 @@ def plan_mbs(mini_batch_size: int, *,
                    auto_micro=auto, auto_normalization=auto_norm,
                    remat_policy=policy,
                    auto_policy=auto_policy_requested and policy_searched,
-                   data_parallel=dp, local_micro=micro // dp)
+                   data_parallel=dp, local_micro=micro // dp,
+                   calibrated=calibrated, correction=correction)

@@ -58,14 +58,25 @@ def _ce_kernel(logits_ref, labels_ref, out_ref, m_ref, l_ref, g_ref, *,
 
 
 def cross_entropy(logits, labels, *, scale: float = 1.0,
-                  block_t: int = DEFAULT_BLOCK_T,
-                  block_v: int = DEFAULT_BLOCK_V,
+                  block_t: Optional[int] = None,
+                  block_v: Optional[int] = None,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """logits: (T, V); labels: (T,) int32 → per-token NLL (T,) fp32,
-    multiplied by ``scale`` (the 1/N_Sμ MBS normalization)."""
+    multiplied by ``scale`` (the 1/N_Sμ MBS normalization).
+    ``block_t``/``block_v`` default to the tuning cache's winner (when
+    ``engine.autotune`` installed a resolver and an entry exists) or the
+    fixed defaults; any tile shape is value-identical (padded columns are
+    masked)."""
+    from .grad_accum import lookup_tuned_block
     T, V = logits.shape
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if block_t is None:
+        block_t = (lookup_tuned_block("cross_entropy_t", logits.dtype, T,
+                                      interpret) or DEFAULT_BLOCK_T)
+    if block_v is None:
+        block_v = (lookup_tuned_block("cross_entropy_v", logits.dtype, V,
+                                      interpret) or DEFAULT_BLOCK_V)
     block_t = min(block_t, T)
     block_v = min(block_v, V)
     pad_t = (-T) % block_t

@@ -86,16 +86,26 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
-                    block_q: int = DEFAULT_BLOCK_Q,
-                    block_k: int = DEFAULT_BLOCK_K,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd). Returns (B, H, S, hd)."""
+    """q: (B, H, S, hd); k, v: (B, Hkv, S, hd). Returns (B, H, S, hd).
+    ``block_q``/``block_k`` default to the tuning cache's winner when one
+    exists (``engine.autotune``), else the fixed 128x128 tiles; tile shape
+    is value-identical (padded keys are masked)."""
+    from .grad_accum import lookup_tuned_block
     B, H, S, hd = q.shape
     Hkv = k.shape[1]
     assert H % Hkv == 0, (H, Hkv)
     G = H // Hkv
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if block_q is None:
+        block_q = (lookup_tuned_block("flash_q", q.dtype, S, interpret)
+                   or DEFAULT_BLOCK_Q)
+    if block_k is None:
+        block_k = (lookup_tuned_block("flash_k", q.dtype, S, interpret)
+                   or DEFAULT_BLOCK_K)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     pad = (-S) % block_q

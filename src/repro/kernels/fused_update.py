@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .grad_accum import BUCKET_BLOCK
+from .grad_accum import resolve_block
 
 
 def _interpret_default(interpret: Optional[bool]) -> bool:
@@ -76,7 +76,7 @@ def _sgd_kernel(weight_decay, s_ref, p_ref, g_ref, p_out):
 
 def fused_sgd(params, grads, mom, lr, clip_scale=1.0, *,
               momentum: float = 0.0, weight_decay: float = 0.0,
-              nesterov: bool = False, block: int = BUCKET_BLOCK,
+              nesterov: bool = False, block: Optional[int] = None,
               interpret: Optional[bool] = None):
     """One in-place SGD(-momentum) step over a flat bucket.
 
@@ -87,6 +87,8 @@ def fused_sgd(params, grads, mom, lr, clip_scale=1.0, *,
     in-place update."""
     N = params.shape[0]
     interpret = _interpret_default(interpret)
+    if block is None:
+        block = resolve_block("fused_update", params.dtype, N, interpret)
     block = min(block, N)
     grid = (pl.cdiv(N, block),)
     scal = _scalars(lr, clip_scale)
@@ -137,7 +139,7 @@ def _adam_kernel(b1, b2, eps, weight_decay, decoupled,
 def fused_adam(params, grads, m, v, lr, bias_corr1, bias_corr2,
                clip_scale=1.0, *, b1: float = 0.9, b2: float = 0.999,
                eps: float = 1e-8, weight_decay: float = 0.0,
-               decoupled: bool = False, block: int = BUCKET_BLOCK,
+               decoupled: bool = False, block: Optional[int] = None,
                interpret: Optional[bool] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One in-place Adam/AdamW step over a flat bucket.
@@ -148,6 +150,8 @@ def fused_adam(params, grads, m, v, lr, bias_corr1, bias_corr2,
     their input buffers."""
     N = params.shape[0]
     interpret = _interpret_default(interpret)
+    if block is None:
+        block = resolve_block("fused_update", params.dtype, N, interpret)
     block = min(block, N)
     return tuple(pl.pallas_call(
         functools.partial(_adam_kernel, b1, b2, eps, weight_decay, decoupled),

@@ -14,15 +14,97 @@ bucket instead of one per parameter leaf (see ``engine/flat.py``).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Legacy fixed defaults, kept importable for explicit-block callers. New
+# code should pass ``block=None`` and let :func:`default_block` (or the
+# tuning cache, via the installed resolver) size the launch — the fixed
+# 65536 bucket block measured 8x SLOWER than per-leaf on a 96-leaf /
+# 2M-element bucket in interpret mode (BENCH_update.json), because the
+# interpreter pays O(N) per grid step for the aliased buffer.
 DEFAULT_BLOCK = 4096
-# flat dtype buckets hold whole models; amortize the per-block dispatch
 BUCKET_BLOCK = 65536
+
+# size-aware heuristic knobs (see :func:`default_block`)
+MIN_BLOCK = 1 << 10  # grid-machinery floor: tiny blocks are pure overhead
+MAX_BLOCK = 1 << 18  # 256k elems = 1 MB fp32/operand — 3 operands fit VMEM
+NUM_PROGRAMS_MIN = 4  # enough grid steps for the Pallas pipeline to overlap
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(int(n), 1).bit_length() - 1)
+
+
+def default_block(n: int, *, interpret: Optional[bool] = None) -> int:
+    """Size-aware 1-D launch block for an ``n``-element buffer.
+
+    * **interpret mode** (any non-TPU backend): the interpreter pays O(N)
+      per grid step for an aliased full-buffer operand, so the cost of a
+      launch is ~``grid * N`` — one full-width program (``block = n``,
+      grid 1) is strictly fastest and is what made the fixed 65536 bucket
+      block 8x slower than per-leaf on the 96-leaf config.
+    * **TPU**: the largest power-of-two block that (a) fits comfortably in
+      VMEM (``MAX_BLOCK``) and (b) leaves the grid at least
+      ``NUM_PROGRAMS_MIN`` programs so the pipeline can overlap the HBM
+      copies of block i+1 with the compute of block i.
+
+    Elementwise kernels are value-identical for ANY block size — this
+    choice (and the tuner's) changes speed only.
+    """
+    n = max(int(n), 1)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if interpret:
+        return n
+    target = max(MIN_BLOCK, min(MAX_BLOCK, n // NUM_PROGRAMS_MIN))
+    return min(_pow2_floor(target), n)
+
+
+# Tuning-cache hook (installed by ``engine/autotune.py``; kernels stay
+# dependency-free). The resolver maps (kind, dtype_str, n, interpret) to a
+# measured-best block, or None to defer to :func:`default_block`.
+_BLOCK_RESOLVER: Optional[Callable[[str, str, int, bool], Optional[int]]] = None
+
+
+def set_block_resolver(fn: Optional[Callable]) -> None:
+    """Install (or clear, with None) the tuned-block lookup used whenever a
+    kernel entry point is called with ``block=None``."""
+    global _BLOCK_RESOLVER
+    _BLOCK_RESOLVER = fn
+
+
+def lookup_tuned_block(kind: str, dtype, n: int,
+                       interpret: Optional[bool] = None) -> Optional[int]:
+    """The tuning cache's measured-best block for this (kind, dtype, size)
+    — or None when no resolver is installed / no entry exists. Used by
+    kernels whose fallback default is NOT the 1-D heuristic (the 2-D
+    tiled cross-entropy and flash-attention kernels)."""
+    if _BLOCK_RESOLVER is None:
+        return None
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tuned = _BLOCK_RESOLVER(kind, str(jnp.dtype(dtype)), int(n),
+                            bool(interpret))
+    return max(1, min(int(tuned), int(n))) if tuned else None
+
+
+def resolve_block(kind: str, dtype, n: int,
+                  interpret: Optional[bool] = None) -> int:
+    """Launch block for an ``n``-element 1-D buffer: the tuning cache's
+    measured winner when an entry exists (resolver installed by
+    ``engine.autotune``), else the size-aware heuristic."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if _BLOCK_RESOLVER is not None:
+        tuned = _BLOCK_RESOLVER(kind, str(jnp.dtype(dtype)), int(n),
+                                bool(interpret))
+        if tuned:
+            return max(1, min(int(tuned), int(n)))
+    return default_block(n, interpret=interpret)
 
 
 def _accum_kernel(scale_ref, acc_ref, g_ref, out_ref):
@@ -30,15 +112,19 @@ def _accum_kernel(scale_ref, acc_ref, g_ref, out_ref):
                     + g_ref[...].astype(acc_ref.dtype) * scale_ref[0])
 
 
-def grad_accum(acc, grad, scale, *, block: int = DEFAULT_BLOCK,
+def grad_accum(acc, grad, scale, *, block: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """acc: (N,) fp32 (or any 1-D); grad: (N,); scale: scalar.
     Returns acc + scale*grad, aliasing the accumulator buffer in place.
     N need not divide the block: the final block is masked by the grid
-    machinery (no padded copies)."""
+    machinery (no padded copies). ``block=None`` (default) sizes the
+    launch via the tuning cache / size-aware heuristic
+    (:func:`resolve_block`); any block gives bit-identical values."""
     N = acc.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if block is None:
+        block = resolve_block("grad_accum", acc.dtype, N, interpret)
     block = min(block, N)
     scale_arr = jnp.asarray([scale], acc.dtype)
     return pl.pallas_call(
@@ -69,9 +155,11 @@ def grad_accum_tree(acc_tree, grad_tree, scale, **kw):
 
 def grad_accum_buckets(acc_buffers: Sequence[jnp.ndarray],
                        grad_buffers: Sequence[jnp.ndarray], scale, *,
-                       block: int = BUCKET_BLOCK,
+                       block: Optional[int] = None,
                        interpret: Optional[bool] = None) -> Tuple[jnp.ndarray, ...]:
     """Bucketed accumulate: one masked launch per dtype bucket. The buffers
-    come from ``engine.flat.FlatSpec.flatten`` (contiguous 1-D per dtype)."""
+    come from ``engine.flat.FlatSpec.flatten`` (contiguous 1-D per dtype).
+    ``block=None`` resolves per bucket (sizes differ across dtypes) through
+    the tuning cache / heuristic."""
     return tuple(grad_accum(a, g, scale, block=block, interpret=interpret)
                  for a, g in zip(acc_buffers, grad_buffers))

@@ -191,7 +191,9 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                num_microbatches: int = 8, mesh=None, reduced: bool = False,
                probe: bool = True, verbose: bool = True, remat: bool = True,
                remat_policy: str = None, cfg_overrides: dict = None,
-               fsdp: bool = True, executor: str = "compiled"):
+               fsdp: bool = True, executor: str = "compiled",
+               budget_bytes: int = None, calibrate: str = "off",
+               tuning_cache: str = None):
     cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
@@ -265,6 +267,66 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "num_microbatches": num_microbatches,
         }
 
+    measured_peak = (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+
+    oracle = None
+    if shape.kind == "train":
+        # modeled vs measured vs corrected, side-by-side (no more diffing
+        # two tools by hand): the analytic estimate of the per-device step
+        # at the compiled local micro size, XLA's measured peak, and — when
+        # a calibration entry exists (or --calibrate force just made one) —
+        # the oracle-corrected bytes plus the admission delta it buys.
+        from ..core import memory_model
+        try:
+            dp = mesh_lib.data_parallel_size(mesh)
+            micro = -(-shape.global_batch // num_microbatches)
+            local = max(1, micro // max(dp, 1))
+            est = memory_model.estimate(cfg, shape.seq_len, mesh=mesh,
+                                        remat_policy=remat_policy,
+                                        act_bytes=4)
+            modeled = est.total(local)
+            oracle = {
+                "local_micro": local,
+                "modeled_bytes": modeled,
+                "measured_bytes": measured_peak,
+                "model_error_pct": (
+                    round(100.0 * (modeled - measured_peak) / measured_peak, 2)
+                    if measured_peak > 0 else None),
+            }
+            if calibrate != "off":
+                from ..engine import autotune
+                corr = autotune.planner_correction(
+                    cfg, shape.seq_len, remat_policy=remat_policy,
+                    mesh=None, optimizer="sgd", executor=executor,
+                    mode=calibrate, cache_path=tuning_cache, act_bytes=4)
+                if corr is not None:
+                    budget = budget_bytes or memory_model.V5E_HBM_BYTES
+                    analytic_admit = memory_model.suggest_micro_batch_size(
+                        cfg, shape.seq_len, shape.global_batch,
+                        budget_bytes=budget, remat_policy=remat_policy,
+                        act_bytes=4) or 1
+                    corrected_admit = autotune.corrected_micro_search(
+                        cfg, shape.seq_len, shape.global_batch, budget, corr,
+                        remat_policy=remat_policy, act_bytes=4) or 1
+                    oracle.update({
+                        "correction": list(corr),
+                        "corrected_bytes": corr[0] * modeled + corr[1],
+                        "admission": {
+                            "budget_bytes": budget,
+                            "analytic_micro": analytic_admit,
+                            "calibrated_micro": corrected_admit,
+                            "delta": corrected_admit - analytic_admit,
+                        },
+                    })
+        except Exception as e:  # report must never sink the compile proof
+            oracle = {"error": repr(e)}
+
+    over_budget = (budget_bytes is not None
+                   and measured_peak > budget_bytes)
+
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
@@ -274,6 +336,11 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "remat_policy_auto": plan.auto_policy if plan is not None else None,
         "per_device": per_device,
         "gradient_sync": grad_sync,
+        "oracle": oracle,
+        "budget": ({"budget_bytes": budget_bytes,
+                    "measured_peak_bytes": measured_peak,
+                    "over_budget": over_budget}
+                   if budget_bytes is not None else None),
         "raw_cost_analysis": {k: float(v) for k, v in cost.items()
                               if k in ("flops", "bytes accessed",
                                        "transcendentals", "optimal_seconds")},
@@ -282,10 +349,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "output_bytes": getattr(mem, "output_size_in_bytes", -1),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
             "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
-            "peak_bytes_est": (getattr(mem, "argument_size_in_bytes", 0)
-                               + getattr(mem, "output_size_in_bytes", 0)
-                               + getattr(mem, "temp_size_in_bytes", 0)
-                               - getattr(mem, "alias_size_in_bytes", 0)),
+            "peak_bytes_est": measured_peak,
         },
         "collectives_raw_once": colls_raw,
         "lower_s": t_lower, "compile_s": t_compile,
@@ -329,19 +393,34 @@ def main():
                          "for models whose optimizer state fits)")
     ap.add_argument("--capacity-factor", type=float, default=None,
                     help="perf knob: MoE capacity factor override")
+    ap.add_argument("--budget", type=float, default=None, metavar="GB",
+                    help="per-device HBM budget in GB; exits non-zero when "
+                         "the MEASURED peak (memory_analysis) exceeds it")
+    ap.add_argument("--calibrate", choices=["off", "auto", "force"],
+                    default="off",
+                    help="oracle block in the report: auto = use a cached "
+                         "memory correction when one exists; force = run "
+                         "the probe compiles now and persist the fit")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="tuning-cache JSON path (default: "
+                         "$REPRO_TUNING_CACHE or ~/.cache/repro-tuning/)")
     ap.add_argument("--out", default=None, help="directory for JSON artifact")
     args = ap.parse_args()
 
     overrides = {}
     if args.capacity_factor is not None:
         overrides["capacity_factor"] = args.capacity_factor
+    budget_bytes = (int(args.budget * 1024 ** 3)
+                    if args.budget is not None else None)
     res = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
                      num_microbatches=args.microbatches, reduced=args.reduced,
                      probe=not args.no_probe, verbose=args.out is None,
                      remat=not args.no_remat,
                      remat_policy=args.remat_policy,
                      cfg_overrides=overrides or None,
-                     fsdp=not args.no_fsdp, executor=args.executor)
+                     fsdp=not args.no_fsdp, executor=args.executor,
+                     budget_bytes=budget_bytes, calibrate=args.calibrate,
+                     tuning_cache=args.tuning_cache)
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         tag = "multi" if args.multi_pod else "single"
@@ -349,6 +428,15 @@ def main():
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
         print(f"wrote {path}")
+    b = res.get("budget") if isinstance(res, dict) else None
+    if b and b["over_budget"]:
+        import sys
+        print(f"BUDGET EXCEEDED: measured peak "
+              f"{b['measured_peak_bytes'] / 1024 ** 3:.2f} GiB > budget "
+              f"{b['budget_bytes'] / 1024 ** 3:.2f} GiB "
+              f"({args.arch} / {args.shape}) — raise --budget, add model "
+              f"parallelism, or shrink the micro-batch", file=sys.stderr)
+        sys.exit(2)
 
 
 if __name__ == "__main__":

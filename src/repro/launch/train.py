@@ -70,6 +70,9 @@ def build_plan(cfg, args, optimizer=None, mesh=None) -> engine.MBSPlan:
         act_bytes=dtype_bytes, remat=not args.reduced,
         remat_policy=getattr(args, "remat_policy", None),
         mesh=mesh, fsdp_params=getattr(args, "mesh", "host") == "production",
+        calibrate=getattr(args, "calibrate", "off"),
+        tuning_cache=getattr(args, "tuning_cache", None),
+        executor=args.executor,
         **optim.memory_model_kw(optimizer, fused=args.executor == "flat"))
 
 
@@ -132,6 +135,17 @@ def main():
                          "(cheapest recompute that meets the batch target)")
     ap.add_argument("--hbm-budget-gb", type=float, default=None,
                     help="per-device HBM budget for auto micro-batch sizing")
+    ap.add_argument("--calibrate", choices=["off", "auto", "force"],
+                    default="auto",
+                    help="oracle-calibrated admission (engine.autotune): "
+                         "auto = use a cached memory correction when one "
+                         "exists (analytic fallback otherwise); force = "
+                         "run the probe compiles now and persist the fit; "
+                         "off = pure analytic")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="tuning-cache JSON path (default: "
+                         "$REPRO_TUNING_CACHE or ~/.cache/repro-tuning/); "
+                         "also feeds the kernels' tuned launch blocks")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--mesh", choices=["host", "production"], default="host")
@@ -159,6 +173,12 @@ def main():
                  "production/multi-pod meshes need a compiled executor")
     if args.resume and not args.ckpt_dir:
         ap.error("--resume needs --ckpt-dir")
+
+    if args.tuning_cache:
+        # one cache serves both halves: the planner's memory correction
+        # (threaded through build_plan) and the kernels' tuned launch
+        # blocks (resolved through the process-wide active cache)
+        engine.set_cache_path(args.tuning_cache)
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = build_mesh(args)

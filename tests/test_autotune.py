@@ -1,0 +1,305 @@
+"""Closed-loop autotuner (engine Layer 7): the tuning cache, the memory
+oracle's calibrated admission, and the invariant that tuning changes
+speed and admission but NEVER numerics (bit-equality under tuned blocks
+and calibrated plans, across the full executor grid)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import (EXECUTOR_GRID, assert_trees_close, make_executor,
+                      tiny_batch, tiny_loss_fn, tiny_optimizer, tiny_params)
+from repro import configs, engine
+from repro.core import memory_model
+from repro.engine import autotune
+from repro.kernels import fused_update as fu, grad_accum as ga
+
+SEQ = 64
+MINI = 32
+# tight: analytically even micro-batch 1 overflows the fixed-cost pad, so
+# the analytic planner falls back to micro 1 — calibration must beat it
+BUDGET = 64 * 1024 ** 2
+
+PLAN_KW = dict(seq_len=SEQ, budget_bytes=BUDGET, remat_policy="period",
+               act_bytes=4)
+
+
+@pytest.fixture(autouse=True)
+def _reset_active_cache():
+    yield
+    autotune.set_cache_path(None)
+
+
+@pytest.fixture(scope="module")
+def calibrated_cache(tmp_path_factory):
+    """One calibration pass (3 probe compiles), shared by every test that
+    needs a real oracle entry."""
+    path = str(tmp_path_factory.mktemp("tuning") / "tuning.json")
+    cfg = configs.get_reduced("qwen2-1.5b")
+    plan = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="force",
+                           tuning_cache=path, **PLAN_KW)
+    return path, cfg, plan
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip / fallback
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_same_plan(calibrated_cache):
+    path, cfg, forced = calibrated_cache
+    assert forced.calibrated and forced.correction is not None
+    # a FRESH cache instance (new load from disk) must reproduce the plan
+    # exactly — calibrate="auto" is a pure lookup, no compiles
+    reloaded = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="auto",
+                               tuning_cache=path + ".copy", **PLAN_KW)
+    assert not reloaded.calibrated  # different path: no entry, clean fallback
+    import shutil
+    shutil.copy(path, path + ".copy")
+    autotune._caches.pop(path + ".copy", None)  # force re-load from disk
+    again = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="auto",
+                            tuning_cache=path + ".copy", **PLAN_KW)
+    assert again == forced
+
+
+def test_cache_entry_roundtrip(tmp_path):
+    p = str(tmp_path / "t.json")
+    c = autotune.TuningCache(p)
+    c.put_memory("k", 1.25, -512.0, [(1, 100, 80)])
+    c.put_block("b", 4096, {"4096": 10.0})
+    c2 = autotune.TuningCache(p)
+    assert c2.memory_correction("k") == (1.25, -512.0)
+    assert c2.tuned_block("b") == 4096
+
+
+@pytest.mark.parametrize("garbage", [
+    "{not json at all",
+    json.dumps({"version": 999, "memory": {"k": {"a": 1, "b": 2}}}),
+    json.dumps({"version": 1, "memory": {"k": "not-a-dict"},
+                "blocks": {"b": {"block": "nan"}}}),
+    json.dumps({"version": 1, "memory": {"k": {"a": -3.0, "b": 0.0}},
+                "blocks": {"b": {"block": -5}}}),
+])
+def test_corrupted_cache_falls_back_without_raising(tmp_path, garbage):
+    p = str(tmp_path / "bad.json")
+    with open(p, "w") as f:
+        f.write(garbage)
+    c = autotune.TuningCache(p)
+    assert c.memory_correction("k") is None
+    assert c.tuned_block("b") is None
+    # the planner must fall back to the pure analytic plan, silently
+    cfg = configs.get_reduced("qwen2-1.5b")
+    analytic = engine.plan_mbs(MINI, model_cfg=cfg, **PLAN_KW)
+    degraded = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="auto",
+                               tuning_cache=p, **PLAN_KW)
+    assert degraded == analytic and not degraded.calibrated
+    # and a kernel launch through the resolver must still work
+    autotune.set_cache_path(p)
+    out = ga.grad_accum(jnp.zeros(100), jnp.ones(100), 0.5)
+    assert float(out[0]) == 0.5
+
+
+def test_calibrate_mode_validated():
+    with pytest.raises(ValueError, match="calibrate"):
+        engine.plan_mbs(8, calibrate="yes")
+
+
+# ---------------------------------------------------------------------------
+# oracle-calibrated admission (reduced qwen2)
+# ---------------------------------------------------------------------------
+
+def test_calibrated_admission_beats_analytic_within_budget(calibrated_cache):
+    path, cfg, calibrated = calibrated_cache
+    analytic = engine.plan_mbs(MINI, model_cfg=cfg, **PLAN_KW)
+    assert calibrated.micro_batch_size >= analytic.micro_batch_size
+    assert calibrated.micro_batch_size > 1  # the tight budget was beaten
+    # the admitted micro must hold up against the REAL compiled step
+    measured = autotune.measured_step_bytes(
+        cfg, SEQ, calibrated.micro_batch_size, remat_policy="period")
+    assert measured <= BUDGET, (
+        f"calibrated admission overflows: measured {measured} > {BUDGET}")
+
+
+def test_affine_fit_degeneracies():
+    # single probe pins only the offset
+    assert autotune._fit_affine([(100.0, 80.0)]) == (1.0, -20.0)
+    # two probes pin the line exactly
+    a, b = autotune._fit_affine([(100.0, 80.0), (200.0, 130.0)])
+    assert a == pytest.approx(0.5) and b == pytest.approx(30.0)
+    # pathological negative slope falls back to offset-only
+    a, b = autotune._fit_affine([(100.0, 200.0), (200.0, 100.0)])
+    assert a == 1.0
+
+
+def test_corrected_micro_search_matches_direct_scan():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    est = memory_model.estimate(cfg, SEQ, remat_policy="period", act_bytes=4)
+    corr = (0.5, -10 * 1024 ** 2)
+    got = autotune.corrected_micro_search(cfg, SEQ, 64, BUDGET, corr,
+                                          remat_policy="period", act_bytes=4)
+    want = max(m for m in range(1, 65)
+               if corr[0] * est.total(m) + corr[1] <= BUDGET)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# mesh-keyed entries must not leak into single-device plans
+# ---------------------------------------------------------------------------
+
+def test_mesh_keyed_entry_does_not_leak(tmp_path):
+    from repro.launch import mesh as mesh_lib
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 forced host devices")
+    mesh = mesh_lib.make_host_mesh(data=2, model=1)
+    cfg = configs.get_reduced("qwen2-1.5b")
+    p = str(tmp_path / "t.json")
+    cache = autotune.TuningCache(p)
+    # a correction that halves the modeled bytes, so it admits at the
+    # tight budget whenever the planner actually applies it
+    cache.put_memory(
+        autotune.memory_key(cfg, SEQ, "period", mesh, "sgd", "compiled"),
+        0.5, 0.0)
+    autotune._caches[p] = cache
+    # single-device plan: the mesh-keyed entry must NOT apply
+    single = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="auto",
+                             tuning_cache=p, **PLAN_KW)
+    assert not single.calibrated
+    # the mesh plan with the SAME cache does see it
+    meshed = engine.plan_mbs(MINI, model_cfg=cfg, calibrate="auto",
+                             tuning_cache=p, mesh=mesh, **PLAN_KW)
+    assert meshed.calibrated
+
+
+def test_key_layout_distinguishes_axes():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    keys = {
+        autotune.memory_key(cfg, 64, "period", None, "sgd", "compiled", "cpu"),
+        autotune.memory_key(cfg, 128, "period", None, "sgd", "compiled", "cpu"),
+        autotune.memory_key(cfg, 64, "full", None, "sgd", "compiled", "cpu"),
+        autotune.memory_key(cfg, 64, "period", None, "adam", "compiled", "cpu"),
+        autotune.memory_key(cfg, 64, "period", None, "sgd", "flat", "cpu"),
+        autotune.memory_key(cfg, 64, "period", None, "sgd", "compiled", "tpu"),
+    }
+    assert len(keys) == 6
+    full = dataclasses.replace(configs.get("qwen2-1.5b"), name=cfg.name)
+    assert (autotune.memory_key(full, 64, "period", None, "sgd", "compiled")
+            != autotune.memory_key(cfg, 64, "period", None, "sgd", "compiled"))
+
+
+# ---------------------------------------------------------------------------
+# tuned blocks are bit-identical to defaults
+# ---------------------------------------------------------------------------
+
+def _tuned_cache(tmp_path, block: int):
+    """A cache mapping EVERY fp32 size bucket of both tunable kernels to
+    ``block`` (0 = whole buffer)."""
+    p = str(tmp_path / "tuned.json")
+    cache = autotune.get_cache(p)
+    for kind in ("grad_accum", "fused_update"):
+        for exp in range(1, 26):
+            cache.data["blocks"]["|".join(
+                [kind, "float32", f"p{exp}", "cpu+interp"])] = {
+                "block": block, "timings_us": {}}
+    cache.save()
+    return p
+
+
+@pytest.mark.parametrize("block", [37, 4096, 0])
+def test_tuned_blocks_bit_identical(tmp_path, block):
+    key = jax.random.PRNGKey(0)
+    n = 2_006
+    g = jax.random.normal(key, (n,), jnp.float32)
+    acc = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+    p0 = jax.random.normal(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    m0 = jax.random.normal(jax.random.fold_in(key, 3), (n,), jnp.float32)
+
+    autotune.set_cache_path(None)
+    base_acc = ga.grad_accum(acc, g, 0.125, interpret=True)
+    base_sgd = fu.fused_sgd(p0, g, m0, 0.01, momentum=0.9,
+                            weight_decay=1e-4, interpret=True)
+
+    autotune.set_cache_path(_tuned_cache(tmp_path, block))
+    want = n if block == 0 else min(block, n)
+    assert ga.resolve_block("grad_accum", jnp.float32, n, True) == want
+    tuned_acc = ga.grad_accum(acc, g, 0.125, interpret=True)
+    tuned_sgd = fu.fused_sgd(p0, g, m0, 0.01, momentum=0.9,
+                             weight_decay=1e-4, interpret=True)
+    assert_trees_close(tuned_acc, base_acc, atol=0, what="grad_accum")
+    assert_trees_close(list(tuned_sgd), list(base_sgd), atol=0,
+                       what="fused_sgd")
+
+
+def test_default_block_heuristic():
+    # interpret mode: whole buffer (grid 1) — the 8x-regression fix
+    assert ga.default_block(2_006_560, interpret=True) == 2_006_560
+    # TPU: pow2, grid >= NUM_PROGRAMS_MIN, VMEM-capped
+    n = 2_006_560
+    blk = ga.default_block(n, interpret=False)
+    assert blk & (blk - 1) == 0
+    assert -(-n // blk) >= ga.NUM_PROGRAMS_MIN
+    assert blk <= ga.MAX_BLOCK
+    assert ga.default_block(100, interpret=False) == 100  # tiny: one program
+
+
+def test_bucket_blocks_helper(tmp_path):
+    spec = engine.FlatSpec.for_tree(tiny_params())
+    autotune.set_cache_path(None)
+    assert spec.bucket_blocks("grad_accum", interpret=True) == \
+        tuple(spec.bucket_sizes)  # heuristic: whole buffer in interpret
+    autotune.set_cache_path(_tuned_cache(tmp_path, 37))
+    assert spec.bucket_blocks("grad_accum", interpret=True) == \
+        tuple(min(37, n) for n in spec.bucket_sizes)
+
+
+# ---------------------------------------------------------------------------
+# executor conformance: tuned blocks + calibrated plan never change numerics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_executor_bit_equal_under_tuning(executor, tmp_path):
+    params = tiny_params()
+    opt = tiny_optimizer()
+    batch = tiny_batch(10)
+    plan = engine.plan_mbs(10, num_microbatches=3)
+
+    def run(p):
+        ex = make_executor(executor, tiny_loss_fn, opt, p, donate=False)
+        params2, state2, metrics = ex.step(
+            jax.tree.map(jnp.copy, params), opt.init(params), dict(batch))
+        return params2, state2, metrics
+
+    autotune.set_cache_path(None)
+    base_p, base_s, base_m = run(plan)
+
+    # tuned blocks active + a plan flagged as calibrated: the step must be
+    # bit-equal — tuning may only ever change speed and admission
+    autotune.set_cache_path(_tuned_cache(tmp_path, 37))
+    cal_plan = dataclasses.replace(plan, calibrated=True,
+                                   correction=(1.0, 0.0))
+    tuned_p, tuned_s, tuned_m = run(cal_plan)
+
+    assert_trees_close(tuned_p, base_p, atol=0, what=f"{executor} params")
+    assert_trees_close(tuned_s, base_s, atol=0, what=f"{executor} opt state")
+    assert float(tuned_m["loss"]) == float(base_m["loss"])
+
+
+# ---------------------------------------------------------------------------
+# block tuner sweep
+# ---------------------------------------------------------------------------
+
+def test_tune_block_sizes_persists_winner(tmp_path):
+    p = str(tmp_path / "t.json")
+    rec = autotune.tune_block_sizes(5_000, jnp.float32, kind="grad_accum",
+                                    candidates=(1024, 0), iters=1,
+                                    interpret=True, cache_path=p)
+    assert rec["block"] in (1024, 0)
+    assert set(rec["timings_us"]) == {"1024", "0"}
+    cache = autotune.TuningCache(p)
+    key = autotune.block_key("grad_accum", jnp.float32, 5_000, interpret=True)
+    assert cache.tuned_block(key) == rec["block"]
+    # the resolver now serves it to block=None call sites
+    autotune.set_cache_path(p)
+    want = 5_000 if rec["block"] == 0 else rec["block"]
+    assert ga.resolve_block("grad_accum", jnp.float32, 5_000, True) == want
