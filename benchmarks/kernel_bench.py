@@ -74,7 +74,7 @@ def main(quick: bool = True):
     # launch blocks. The fixed BUCKET_BLOCK=65536 measured 8.1x slower than
     # per-leaf here (interpret mode pays O(N) per grid step for the aliased
     # buffer); the size-aware default (block=None) must not regress again.
-    from repro.kernels import grad_accum as ga
+    from repro.kernels import grad_accum_kernels as ga
     gbuf = spec.flatten(grads)[0]
     abuf = spec.zeros(jnp.float32)[0]
     n = int(abuf.shape[0])

@@ -64,7 +64,7 @@ from repro import configs, engine, optim
 from repro.core import memory_model
 from repro.data import LMDataset
 from repro.engine import exec_core
-from repro.kernels import grad_accum as ga, ref as kref
+from repro.kernels import grad_accum_kernels as ga, ref as kref
 from repro.launch import steps
 from repro.models import transformer
 

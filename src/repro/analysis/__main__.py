@@ -1,0 +1,129 @@
+"""CLI gate: ``python -m repro.analysis``.
+
+Runs the contract-check suite over a (config × executor × mesh) matrix
+and exits with the repo-wide code contract: 0 clean, 1 tool error,
+3 contract findings. ``--json``/``--out`` emit the machine-readable
+report (the CI job uploads it as an artifact).
+
+Examples::
+
+    python -m repro.analysis --config qwen2_reduced --executor flat --mesh host
+    python -m repro.analysis --config qwen2_reduced --config resnet50 \
+        --executor flat --executor compiled --mesh host --json --out report.json
+    python -m repro.analysis --lint-only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checks over traced/compiled train "
+                    "steps + repo lint")
+    ap.add_argument("--config", action="append", default=None,
+                    help="target name (repeatable; default qwen2_reduced). "
+                         "Known: see repro.analysis.TARGETS")
+    ap.add_argument("--executor", action="append", default=None,
+                    help="executor name (repeatable; default flat)")
+    ap.add_argument("--mesh", default="single", choices=["single", "host"],
+                    help="'host' runs the sharded deferred-sync contract "
+                         "over all visible devices (falls back to single "
+                         "on 1 device)")
+    ap.add_argument("--remat-policy", default=None,
+                    help="override the remat lattice row (default: the "
+                         "target's shipped policy)")
+    ap.add_argument("--force-devices", type=int, default=0, metavar="N",
+                    help="force N XLA host-platform devices (set before "
+                         "the first backend call; lets --mesh host "
+                         "exercise the collective census on CPU)")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the compile-based HLO layer (trace + lint "
+                         "only)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="run only the AST lint over src/repro")
+    ap.add_argument("--memory-tolerance", type=float, default=None,
+                    help="HLO003 modeled-vs-measured factor (default 16)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the machine-readable report to stdout")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv if argv is not None else sys.argv[1:])
+    if args.force_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.force_devices}").strip()
+
+    # import AFTER the device-count env is pinned — jax reads XLA_FLAGS at
+    # first backend initialization
+    from . import findings as F
+    from . import lint as lint_mod
+    from . import suite as suite_mod
+
+    reports = []
+    tool_error = False
+    if args.lint_only:
+        try:
+            rep = F.Report(context={"mode": "lint-only"})
+            rep.extend(lint_mod.lint_repo(), "LINT")
+            reports.append(rep)
+        except Exception:
+            traceback.print_exc()
+            return F.EXIT_ERROR
+    else:
+        kw = {}
+        if args.memory_tolerance is not None:
+            kw["memory_tolerance"] = args.memory_tolerance
+        targets = args.config or ["qwen2_reduced"]
+        executors = args.executor or ["flat"]
+        lint_once = True
+        for t in targets:
+            for ex in executors:
+                # one combo crashing must not sink the rest of the
+                # matrix — record it and keep going (exit 1 at the end)
+                try:
+                    reports.append(suite_mod.run_suite(
+                        t, executor=ex, mesh=args.mesh,
+                        remat_policy=args.remat_policy,
+                        hlo=not args.no_hlo, lint=lint_once, **kw))
+                    lint_once = False  # repo lint is matrix-invariant
+                except Exception:
+                    traceback.print_exc()
+                    print(f"ERROR: suite crashed on {t}/{ex} (see above)",
+                          file=sys.stderr)
+                    tool_error = True
+
+    payload = {
+        "reports": [r.to_dict() for r in reports],
+        "total_findings": sum(len(r.findings) for r in reports),
+        "ok": not tool_error and all(r.ok for r in reports),
+    }
+    payload["exit_code"] = (
+        F.EXIT_ERROR if tool_error
+        else F.EXIT_OK if payload["ok"] else F.EXIT_CONTRACT)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+    if args.json:
+        print(json.dumps(payload, indent=2, default=str))
+    else:
+        for r in reports:
+            print(r.format())
+        print(f"\n{'OK' if payload['ok'] else 'CONTRACT VIOLATIONS'}: "
+              f"{payload['total_findings']} finding(s) across "
+              f"{len(reports)} run(s)")
+    return payload["exit_code"]
+
+
+if __name__ == "__main__":
+    sys.exit(main())

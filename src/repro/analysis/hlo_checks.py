@@ -1,0 +1,207 @@
+"""Compiled-HLO contract checks (rules HLO001–HLO004).
+
+Operates on ``jax.jit(step).lower(*abstract).compile()`` artifacts
+(``executor.lower_step`` exposes these) — ``memory_analysis()`` for the
+byte-level contracts, ``as_text()`` for the op census. This module is
+the single source of truth for HLO text queries: ``launch/dryrun.py``
+re-exports :func:`collective_bytes` from here, and the mesh/flat test
+suites assert their collective/aliasing contracts through this API
+instead of hand-parsing HLO strings.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from .findings import Finding, SEVERITY_ERROR, SEVERITY_WARNING
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+ = )?(?P<out>\(?[\w\[\],{}\s/#*]*?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast)(?:-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_text(obj) -> str:
+    """HLO text from a Compiled / Lowered / already-rendered string."""
+    if isinstance(obj, str):
+        return obj
+    if hasattr(obj, "as_text"):
+        return obj.as_text()
+    if hasattr(obj, "compile"):  # Lowered
+        return obj.compile().as_text()
+    raise TypeError(f"cannot extract HLO text from {type(obj)!r}")
+
+
+def collective_bytes(obj) -> Dict[str, Dict[str, int]]:
+    """Per-device output bytes + op count of every collective, by kind.
+
+    ``-start``/``-done`` async halves count once (the ``-done`` arm has no
+    shaped output payload in the regex's capture)."""
+    out: Dict[str, Dict[str, int]] = {}
+    for m in _COLL_RE.finditer(hlo_text(obj)):
+        op = m.group("op")
+        b = _shape_bytes(m.group("out"))
+        d = out.setdefault(op, {"bytes": 0, "count": 0})
+        d["bytes"] += b
+        d["count"] += 1
+    return out
+
+
+def allreduce_count(obj) -> int:
+    """Number of all-reduce launches in the compiled module (async
+    ``all-reduce-start`` counted once, ``-done`` ignored)."""
+    return len(re.findall(r"all-reduce(?:-start)?\(", hlo_text(obj)))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(l.size) * jax.numpy.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def measured_peak_bytes(compiled) -> int:
+    """Per-device peak of a compiled executable — the PR-6 estimator:
+    arguments + outputs + temps − aliased (donated buffers counted once)."""
+    mem = compiled.memory_analysis()
+    return int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes
+               - getattr(mem, "alias_size_in_bytes", 0))
+
+
+# ---------------------------------------------------------------------------
+# HLO001 — donation aliasing coverage
+# ---------------------------------------------------------------------------
+
+def check_aliasing(compiled, state_bytes: int, *,
+                   context: str = "") -> List[Finding]:
+    """The zero-copy update contract: with params/opt-state donated,
+    ``input_output_aliases`` must cover at least the full state footprint
+    (every donated state buffer reused in place). ``state_bytes`` is the
+    params+opt-state byte total (``tree_bytes``); a donated-but-unaliased
+    buffer means XLA is round-tripping the update through a copy."""
+    mem = compiled.memory_analysis()
+    aliased = int(getattr(mem, "alias_size_in_bytes", 0))
+    if aliased < state_bytes:
+        return [Finding(
+            "HLO001", SEVERITY_ERROR,
+            f"input_output_aliases covers {aliased} bytes < state "
+            f"footprint {state_bytes} bytes — a donated param/opt/"
+            "accumulator buffer is not updated in place",
+            location=context,
+            details={"alias_bytes": aliased, "state_bytes": state_bytes})]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# HLO002 — unexpected collectives at stage boundaries
+# ---------------------------------------------------------------------------
+
+def check_unexpected_ops(obj, *, expect_gather: bool = False,
+                         context: str = "") -> List[Finding]:
+    """A replicated-state (pure-DP) step has no business all-gathering:
+    params are already whole on every device, so any ``all-gather`` means
+    a sharding boundary is materializing state mid-step. (FSDP launch
+    paths DO gather — pass ``expect_gather=True`` there.)"""
+    if expect_gather:
+        return []
+    census = collective_bytes(obj)
+    out = []
+    for op in ("all-gather",):
+        if op in census:
+            out.append(Finding(
+                "HLO002", SEVERITY_ERROR,
+                f"{census[op]['count']} unexpected {op} op(s) "
+                f"({census[op]['bytes']} bytes) in a replicated-state "
+                "step", location=context,
+                details={"op": op, **census[op]}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO003 — memory model cross-check
+# ---------------------------------------------------------------------------
+
+def check_memory_model(compiled, modeled_bytes: Optional[int], *,
+                       tolerance: float = 16.0,
+                       slack_bytes: int = 1 << 30,
+                       context: str = "") -> List[Finding]:
+    """Tripwire for catastrophic model/compiler divergence: the analytic
+    ``core/memory_model`` estimate and the compiled peak must agree within
+    ``tolerance``× (plus ``slack_bytes`` absolute headroom for tiny
+    configs). The default is deliberately loose — the uncalibrated model
+    is conservative by design (PR-6 measured ~4–5× on reduced configs);
+    this rule exists to catch order-of-magnitude breaks (a dropped remat,
+    a duplicated accumulator), not to re-litigate calibration."""
+    if modeled_bytes is None:
+        return []
+    measured = measured_peak_bytes(compiled)
+    hi = modeled_bytes * tolerance + slack_bytes
+    lo = max(0.0, modeled_bytes / tolerance - slack_bytes)
+    if not (lo <= measured <= hi):
+        return [Finding(
+            "HLO003", SEVERITY_ERROR,
+            f"compiled peak {measured} bytes vs modeled {modeled_bytes} "
+            f"bytes — outside {tolerance}x tolerance "
+            f"(allowed [{int(lo)}, {int(hi)}])",
+            location=context,
+            details={"measured_bytes": measured,
+                     "modeled_bytes": modeled_bytes,
+                     "tolerance": tolerance, "slack_bytes": slack_bytes})]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# HLO004 — compiled gradient-sync schedule
+# ---------------------------------------------------------------------------
+
+def check_gradient_sync(obj, *, expect: str, n_micro: int,
+                        context: str = "") -> List[Finding]:
+    """The PR-5 contract at the HLO level: a deferred-sync sharded step
+    compiles to exactly ONE all-reduce per mini-batch; the per-micro
+    baseline to >= N_Sμ; a mesh-free step to zero. NOTE the compiled
+    module keeps rolled loops rolled — pass an UNROLLED plan (or trust
+    the jaxpr-level JX004, which multiplies scan trip counts) when the
+    micro loop is a scan."""
+    if expect not in ("none", "deferred", "per-micro"):
+        raise ValueError(f"bad expect {expect!r}")
+    count = allreduce_count(obj)
+    details = {"all_reduce_count": count, "n_micro": n_micro,
+               "expect": expect}
+    if expect == "none" and count != 0:
+        return [Finding("HLO004", SEVERITY_ERROR,
+                        f"{count} all-reduce op(s) in a mesh-free step",
+                        location=context, details=details)]
+    if expect == "deferred" and count != 1:
+        return [Finding(
+            "HLO004", SEVERITY_ERROR,
+            f"deferred-sync step compiled to {count} all-reduce ops, "
+            "contract is exactly 1 per mini-batch",
+            location=context, details=details)]
+    if expect == "per-micro" and count < n_micro:
+        return [Finding(
+            "HLO004", SEVERITY_ERROR,
+            f"per-micro baseline compiled to {count} all-reduce ops, "
+            f"expected >= {n_micro}",
+            location=context, details=details)]
+    return []

@@ -1,0 +1,329 @@
+"""Jaxpr-level contract checks (rules JX001–JX004).
+
+Operates on the *traced* train step — ``executor.trace_step(...)`` /
+``jax.make_jaxpr`` over ``ShapeDtypeStruct``s — so every check runs
+without allocating or executing anything (dryrun-style).
+
+Primitive names are the jax 0.4.x ones: ``jax.checkpoint`` traces to
+``remat2``, collectives to ``psum``, host callbacks to
+``debug_callback``/``io_callback``, and a ``shard_map``-wrapped body to a
+``shard_map`` equation whose body jaxpr hangs off ``eqn.params``. A
+``lax.scan`` equation carries ``length``/``num_carry``/``num_consts``, so
+the micro-batch loop is analyzable structurally — no unrolling needed:
+a collective *inside* a scan of length N executes N times.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .findings import Finding, Report, SEVERITY_ERROR, SEVERITY_WARNING
+
+REMAT_PRIMITIVES = frozenset({"remat", "remat2", "checkpoint"})
+CALLBACK_PRIMITIVES = frozenset({
+    "io_callback", "debug_callback", "pure_callback", "callback",
+    "infeed", "outfeed",
+})
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "psum2", "all_gather", "all_to_all", "ppermute",
+    "reduce_scatter", "pmax", "pmin",
+})
+#: primitives whose body executes once per enclosing-trip (not multiplied)
+_UNKNOWN_TRIP = frozenset({"while"})
+
+
+def as_jaxpr(obj):
+    """Accept a ClosedJaxpr, a Jaxpr, or anything with ``.jaxpr``."""
+    if hasattr(obj, "eqns"):
+        return obj
+    if hasattr(obj, "jaxpr"):
+        return as_jaxpr(obj.jaxpr)
+    raise TypeError(f"not a jaxpr: {type(obj)!r}")
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    for v in eqn.params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for x in items:
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                yield as_jaxpr(x)
+
+
+def iter_eqns(jaxpr, _path: Tuple[str, ...] = (),
+              _trip: Optional[int] = 1
+              ) -> Iterator[Tuple[Any, Tuple[str, ...], Optional[int]]]:
+    """Yield ``(eqn, path, trip)`` over every equation, recursively.
+
+    ``path`` is the chain of enclosing primitive names (for locations);
+    ``trip`` is how many times the equation executes per call of the
+    outermost jaxpr — the product of enclosing ``scan`` lengths, or
+    ``None`` once inside a ``while`` (statically unknown)."""
+    jaxpr = as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        yield eqn, _path, _trip
+        if name == "scan":
+            length = eqn.params.get("length")
+            inner = (None if (_trip is None or length is None)
+                     else _trip * int(length))
+            tag = f"scan[{length}]"
+        elif name in _UNKNOWN_TRIP:
+            inner, tag = None, name
+        else:
+            inner, tag = _trip, name
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, _path + (tag,), inner)
+
+
+def count_primitive(jaxpr, names) -> int:
+    """Number of equations (not executions) matching ``names``."""
+    if isinstance(names, str):
+        names = {names}
+    return sum(1 for eqn, _, _ in iter_eqns(jaxpr)
+               if eqn.primitive.name in names)
+
+
+def _loc(path: Tuple[str, ...], name: str) -> str:
+    return "/".join(path + (name,)) or name
+
+
+def _param_shape_index(params):
+    """(set of param shapes, set of plausible flat-bucket sizes, total
+    elements) — what a gradient accumulator can look like: a param-shaped
+    leaf (tree accumulators), the same with a leading device dim (the
+    sharded streaming carry), or a 1-D per-dtype flat bucket / the full
+    concatenation (FlatSpec buffers, psum_flat payloads)."""
+    leaves = jax.tree.leaves(params)
+    shapes = {tuple(l.shape) for l in leaves}
+    by_dtype = {}
+    for l in leaves:
+        by_dtype[jnp.dtype(l.dtype)] = (by_dtype.get(jnp.dtype(l.dtype), 0)
+                                        + int(l.size))
+    total = sum(int(l.size) for l in leaves)
+    bucket_sizes = set(by_dtype.values()) | {total}
+    return shapes, bucket_sizes, total
+
+
+def _looks_like_accumulator(aval, shapes, bucket_sizes) -> bool:
+    if not jnp.issubdtype(aval.dtype, jnp.floating) or aval.ndim < 1:
+        return False
+    shape = tuple(aval.shape)
+    if shape in shapes or (aval.ndim >= 2 and shape[1:] in shapes):
+        return True
+    return aval.ndim == 1 and int(aval.size) in bucket_sizes
+
+
+# ---------------------------------------------------------------------------
+# JX001 — accumulator dtype
+# ---------------------------------------------------------------------------
+
+def check_accum_dtype(jaxpr, plan, params) -> List[Finding]:
+    """Every micro-gradient accumulator in the traced step carries
+    ``plan.accum_dtype``. Accumulators are located structurally: carries
+    of the outermost scan(s) whose length is N_Sμ (the micro-batch loop),
+    falling back to accumulator-shaped outputs of per-micro ``pjit``
+    dispatches (the eager streaming pipeline)."""
+    expected = jnp.dtype(plan.accum_dtype)
+    n_s = int(plan.num_micro_batches)
+    shapes, bucket_sizes, _ = _param_shape_index(params)
+    findings: List[Finding] = []
+    candidates = []
+
+    for eqn, path, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name != "scan":
+            continue
+        if any(p.startswith("scan[") for p in path):
+            continue  # only the outermost (micro-batch) scans
+        if eqn.params.get("length") != n_s:
+            continue
+        nc, nk = eqn.params.get("num_consts", 0), eqn.params.get("num_carry", 0)
+        for v in eqn.invars[nc:nc + nk]:
+            aval = getattr(v, "aval", None)
+            if aval is not None and _looks_like_accumulator(
+                    aval, shapes, bucket_sizes):
+                candidates.append((aval, _loc(path, f"scan[{n_s}].carry")))
+
+    if not candidates:
+        # eager streaming: one jitted dispatch per micro-batch, the
+        # accumulator is threaded through pjit outputs instead of a scan
+        for eqn, path, _ in iter_eqns(jaxpr):
+            if eqn.primitive.name != "pjit":
+                continue
+            if any(p.startswith("scan[") or p == "pjit" for p in path):
+                continue  # top-level dispatches only
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and _looks_like_accumulator(
+                        aval, shapes, bucket_sizes):
+                    candidates.append((aval, _loc(path, "pjit.out")))
+
+    for aval, loc in candidates:
+        if jnp.dtype(aval.dtype) != expected:
+            findings.append(Finding(
+                "JX001", SEVERITY_ERROR,
+                f"gradient accumulator is {jnp.dtype(aval.dtype).name}, "
+                f"plan.accum_dtype is {expected.name} "
+                f"(shape {tuple(aval.shape)})",
+                location=loc,
+                details={"found_dtype": jnp.dtype(aval.dtype).name,
+                         "expected_dtype": expected.name,
+                         "shape": tuple(aval.shape)}))
+    if not candidates and n_s > 1:
+        findings.append(Finding(
+            "JX001", SEVERITY_WARNING,
+            f"no gradient accumulator located in the traced step "
+            f"(N_Smu={n_s}) — dtype contract unverifiable",
+            details={"num_micro_batches": n_s}))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# JX002 — remat policy applied
+# ---------------------------------------------------------------------------
+
+def check_remat_policy(jaxpr, policy: Optional[str], *,
+                       micro_remat: bool = False) -> List[Finding]:
+    """The planner's remat lattice row is reflected in the trace: policy
+    ``"none"`` (and no micro-step checkpoint) means ZERO remat sub-jaxprs;
+    any graded policy means the checkpointed forward actually traced to
+    >= 1 ``remat2`` equation (a policy that silently fails to apply is
+    exactly the OOM-at-scale failure the planner exists to prevent)."""
+    count = count_primitive(jaxpr, REMAT_PRIMITIVES)
+    expect_any = micro_remat or (policy is not None and policy != "none")
+    if expect_any and count == 0:
+        return [Finding(
+            "JX002", SEVERITY_ERROR,
+            f"plan chose remat_policy={policy!r}"
+            f"{' (+remat_micro_step)' if micro_remat else ''} but the "
+            "traced step contains no remat/checkpoint sub-jaxpr",
+            details={"policy": policy, "remat_eqns": count})]
+    if not expect_any and count > 0:
+        return [Finding(
+            "JX002", SEVERITY_ERROR,
+            f"plan chose remat_policy='none' but the traced step contains "
+            f"{count} remat sub-jaxpr(s) — paying recompute the planner "
+            "did not budget",
+            details={"policy": policy, "remat_eqns": count})]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# JX003 — no host callbacks / host syncs in the step
+# ---------------------------------------------------------------------------
+
+def check_host_callbacks(jaxpr) -> List[Finding]:
+    out = []
+    for eqn, path, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name in CALLBACK_PRIMITIVES:
+            out.append(Finding(
+                "JX003", SEVERITY_ERROR,
+                f"host callback primitive {eqn.primitive.name!r} inside "
+                "the jitted train step (forces a device->host sync per "
+                "dispatch)",
+                location=_loc(path, eqn.primitive.name),
+                details={"primitive": eqn.primitive.name}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX004 — collective census
+# ---------------------------------------------------------------------------
+
+def check_collectives(jaxpr, params, *, n_micro: int,
+                      expect: str) -> List[Finding]:
+    """Gradient-sync census over the traced step.
+
+    ``expect``:
+      * ``"none"``      — single-device step: zero collectives at all.
+      * ``"deferred"``  — ShardedExecutor contract: exactly ONE psum whose
+        payload covers the gradient buffer per mini-batch, outside the
+        micro-batch scan.
+      * ``"per-micro"`` — the defer_sync=False baseline: >= N_Sμ gradient
+        psums per mini-batch (one inside the scan).
+
+    A psum is counted as a *gradient* sync when its payload is at least
+    the total parameter element count (``psum_flat`` concatenates grads +
+    loss + metrics + valid-count into one fp32 buffer, so payload >=
+    total params); smaller collectives (scalar loss syncs) are censused
+    separately and allowed."""
+    if expect not in ("none", "deferred", "per-micro"):
+        raise ValueError(f"bad expect {expect!r}")
+    _, _, total = _param_shape_index(params)
+    grad_syncs: List[Tuple[Optional[int], str, int]] = []
+    small: List[str] = []
+    out: List[Finding] = []
+
+    for eqn, path, trip in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name not in COLLECTIVE_PRIMITIVES:
+            continue
+        payload = sum(int(v.aval.size) for v in eqn.invars
+                      if getattr(v, "aval", None) is not None)
+        loc = _loc(path, name)
+        if expect == "none":
+            out.append(Finding(
+                "JX004", SEVERITY_ERROR,
+                f"collective {name!r} (payload {payload} elems) in a "
+                "single-device step",
+                location=loc, details={"primitive": name,
+                                       "payload_elems": payload}))
+        elif name in ("psum", "psum2") and payload >= total:
+            grad_syncs.append((trip, loc, payload))
+        else:
+            small.append(loc)
+
+    if expect == "none":
+        return out
+
+    unknown = [loc for trip, loc, _ in grad_syncs if trip is None]
+    effective = sum(trip for trip, _, _ in grad_syncs if trip is not None)
+    details = {"gradient_syncs": [
+        {"trip": t, "location": l, "payload_elems": p}
+        for t, l, p in grad_syncs],
+        "effective_count": effective, "n_micro": n_micro,
+        "other_collectives": small}
+    if unknown:
+        out.append(Finding(
+            "JX004", SEVERITY_ERROR,
+            "gradient psum under a while-loop — per-mini-batch sync count "
+            "not statically provable", location=unknown[0], details=details))
+    elif expect == "deferred" and effective != 1:
+        out.append(Finding(
+            "JX004", SEVERITY_ERROR,
+            f"deferred-sync step must issue exactly ONE gradient psum per "
+            f"mini-batch, found {effective} "
+            f"(N_Smu={n_micro}) — the amortization the sharded engine "
+            "promises (DESIGN.md §Mesh execution) is broken",
+            details=details))
+    elif expect == "per-micro" and effective < n_micro:
+        out.append(Finding(
+            "JX004", SEVERITY_ERROR,
+            f"per-micro baseline expected >= {n_micro} gradient psums per "
+            f"mini-batch, found {effective}", details=details))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the bundled jaxpr pass
+# ---------------------------------------------------------------------------
+
+def check_train_step(jaxpr, plan, params, *, expect_sync: str = "none",
+                     policy: Optional[str] = "__from_plan__",
+                     micro_remat: Optional[bool] = None) -> Report:
+    """All four jaxpr contracts over one traced train step."""
+    if policy == "__from_plan__":
+        policy = plan.remat_policy
+    if micro_remat is None:
+        micro_remat = bool(getattr(plan, "remat_micro_step", False))
+    rep = Report(context={"layer": "jaxpr", "expect_sync": expect_sync,
+                          "policy": policy})
+    rep.extend(check_accum_dtype(jaxpr, plan, params), "JX001")
+    rep.extend(check_remat_policy(jaxpr, policy, micro_remat=micro_remat),
+               "JX002")
+    rep.extend(check_host_callbacks(jaxpr), "JX003")
+    rep.extend(check_collectives(jaxpr, params,
+                                 n_micro=int(plan.num_micro_batches),
+                                 expect=expect_sync), "JX004")
+    return rep

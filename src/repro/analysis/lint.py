@@ -1,0 +1,203 @@
+"""AST-based repo lint (rules LINT001–LINT005).
+
+Source-level rules over ``src/repro/`` that guard the engine's
+performance contracts where jaxpr/HLO inspection cannot see them:
+
+  * LINT001 — no ``float()`` / ``.item()`` / ``jax.device_get`` in the
+    engine hot-loop modules (``engine/{executors,exec_core,sharded,
+    flat}.py``): a host sync on a tracer-adjacent value serializes the
+    dispatch pipeline the streaming executor exists to overlap.
+  * LINT002 — no ``jnp.pad``/``np.pad`` inside ``kernels/``: the PR-3
+    no-copy rule (padding materializes a fresh buffer; kernels mask the
+    ragged tail in-register instead).
+  * LINT003 — every ``jax.jit(..., donate_argnums=...)`` site must
+    derive the argnums from a donation config (a ``donate`` flag /
+    attribute), so callers can opt out; a hard-coded literal strands
+    A/B benchmarks that must reuse inputs.
+  * LINT004 — every ``pallas_call`` must plumb ``interpret=`` (kernels
+    must stay runnable off-TPU; a call that omits it can never be
+    forced into interpret mode by the resolver).
+  * LINT005 — production code imports kernels through the
+    ``repro.kernels`` public surface; deep submodule imports
+    (``from ..kernels.grad_accum import ...``) are deprecated.
+
+Intentional violations are waived inline with ``# repro: noqa(RULE)``
+(or a bare ``# repro: noqa`` to waive every rule on that statement).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional, Sequence
+
+from .findings import Finding, SEVERITY_ERROR
+
+#: engine modules whose bodies are jitted/dispatched per micro-batch
+HOT_LOOP_MODULES = frozenset({"executors.py", "exec_core.py", "sharded.py",
+                              "flat.py"})
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\(([A-Za-z0-9_,\s]*)\))?")
+
+_DEEP_KERNEL_RE = re.compile(r"(^|\.)kernels\.\w+")
+
+
+def category_for(path: str) -> str:
+    parts = os.path.normpath(path).split(os.sep)
+    base = os.path.basename(path)
+    if "kernels" in parts:
+        return "kernels"
+    if "engine" in parts and base in HOT_LOOP_MODULES:
+        return "engine-hot"
+    return "general"
+
+
+def _noqa_rules(lines: Sequence[str], node: ast.AST) -> Optional[set]:
+    """Waived rules for ``node``: None if no marker, empty set == waive
+    all. Checks every source line the node spans (multi-line calls)."""
+    start = getattr(node, "lineno", None)
+    if start is None:
+        return None
+    end = getattr(node, "end_lineno", start) or start
+    for ln in range(start, min(end, len(lines)) + 1):
+        m = _NOQA_RE.search(lines[ln - 1])
+        if m:
+            rules = m.group(1)
+            if not rules:
+                return set()
+            return {r.strip().upper() for r in rules.split(",") if r.strip()}
+    return None
+
+
+def _mentions_donate(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        elif isinstance(sub, ast.keyword):
+            name = sub.arg
+        if name and "donate" in name.lower():
+            return True
+    return False
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id == "jit":
+        return True
+    return isinstance(f, ast.Attribute) and f.attr == "jit"
+
+
+def _is_pallas_call(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id == "pallas_call":
+        return True
+    return isinstance(f, ast.Attribute) and f.attr == "pallas_call"
+
+
+def lint_source(src: str, path: str = "<memory>", *,
+                category: Optional[str] = None) -> List[Finding]:
+    """Run every applicable AST rule over one source blob."""
+    if category is None:
+        category = category_for(path)
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:  # surfaced as a finding, not a crash
+        return [Finding("LINT005", SEVERITY_ERROR,
+                        f"unparseable source: {e.msg}",
+                        location=f"{path}:{e.lineno or 0}")]
+    lines = src.splitlines()
+    findings: List[Finding] = []
+
+    def emit(rule: str, node: ast.AST, message: str, **details):
+        waived = _noqa_rules(lines, node)
+        if waived is not None and (not waived or rule in waived):
+            return
+        findings.append(Finding(
+            rule, SEVERITY_ERROR, message,
+            location=f"{path}:{getattr(node, 'lineno', 0)}",
+            details=details or {}))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if category == "engine-hot":
+                if isinstance(f, ast.Name) and f.id == "float":
+                    emit("LINT001", node,
+                         "float(...) in an engine hot-loop module forces "
+                         "a host sync when applied to a device value")
+                elif isinstance(f, ast.Attribute) and f.attr == "item":
+                    emit("LINT001", node,
+                         ".item() in an engine hot-loop module is a "
+                         "blocking device->host transfer")
+                elif ((isinstance(f, ast.Attribute)
+                       and f.attr == "device_get")
+                      or (isinstance(f, ast.Name)
+                          and f.id == "device_get")):
+                    emit("LINT001", node,
+                         "jax.device_get in an engine hot-loop module is "
+                         "a blocking device->host transfer")
+            if (category == "kernels" and isinstance(f, ast.Attribute)
+                    and f.attr == "pad" and isinstance(f.value, ast.Name)
+                    and f.value.id in ("jnp", "np", "numpy")):
+                emit("LINT002", node,
+                     f"{f.value.id}.pad in kernels/ materializes a padded "
+                     "copy — mask the ragged tail in-kernel instead")
+            if _is_jit_call(node):
+                for kw in node.keywords:
+                    if kw.arg == "donate_argnums" and not _mentions_donate(
+                            kw.value):
+                        emit("LINT003", node,
+                             "donate_argnums hard-coded at a jax.jit site "
+                             "— derive it from a donate flag so callers "
+                             "can opt out (donate=False)")
+            if category == "kernels" and _is_pallas_call(node):
+                has_splat = any(kw.arg is None for kw in node.keywords)
+                if not has_splat and not any(kw.arg == "interpret"
+                                             for kw in node.keywords):
+                    emit("LINT004", node,
+                         "pallas_call without interpret= — kernels must "
+                         "plumb interpret mode for off-TPU execution")
+        elif isinstance(node, ast.ImportFrom) and category != "kernels":
+            mod = node.module or ""
+            if _DEEP_KERNEL_RE.search(mod) or (
+                    node.level > 0 and mod.startswith("kernels.")):
+                emit("LINT005", node,
+                     f"deep kernel import {mod!r} — import from the "
+                     "repro.kernels public surface instead",
+                     module=mod)
+        elif isinstance(node, ast.Import) and category != "kernels":
+            for alias in node.names:
+                if _DEEP_KERNEL_RE.search(alias.name):
+                    emit("LINT005", node,
+                         f"deep kernel import {alias.name!r} — import "
+                         "from the repro.kernels public surface instead",
+                         module=alias.name)
+    return findings
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for p in paths:
+        with open(p, "r", encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), p))
+    return out
+
+
+def repo_root() -> str:
+    """The ``src/repro`` package directory this module lives in."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_repo(root: Optional[str] = None) -> List[Finding]:
+    """Lint every production module under ``src/repro/``."""
+    root = root or repo_root()
+    targets = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                targets.append(os.path.join(dirpath, fn))
+    return lint_paths(targets)

@@ -54,8 +54,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import fused_update as fused_update_mod
-from ..kernels import grad_accum as grad_accum_mod
+from ..kernels import fused_sgd, grad_accum, set_block_resolver
 from .flat import FlatSpec
 
 CACHE_VERSION = 1
@@ -430,13 +429,13 @@ def _sweep_fn(kind: str, n: int, dtype, block: int, interpret: bool):
     g = jax.random.normal(key, (n,), jnp.float32)
     if kind == "grad_accum":
         acc = jnp.zeros((n,), jnp.float32)
-        fn = jax.jit(lambda a_, g_: grad_accum_mod.grad_accum(
+        fn = jax.jit(lambda a_, g_: grad_accum(
             a_, g_, 0.125, block=blk, interpret=interpret))
         return fn, (acc, g)
     if kind == "fused_update":
         p = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
         m = jnp.zeros((n,), dtype)
-        fn = jax.jit(lambda p_, g_, m_: fused_update_mod.fused_sgd(
+        fn = jax.jit(lambda p_, g_, m_: fused_sgd(
             p_, g_, m_, 0.01, momentum=0.9, block=blk, interpret=interpret))
         return fn, (p, g, m)
     raise ValueError(f"unknown tunable kernel kind {kind!r}")
@@ -505,4 +504,4 @@ def _tuned_block_resolver(kind: str, dtype_str: str, n: int,
     return n if tuned == 0 else tuned  # 0 = whole-buffer winner
 
 
-grad_accum_mod.set_block_resolver(_tuned_block_resolver)
+set_block_resolver(_tuned_block_resolver)

@@ -20,8 +20,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels import fused_update
-from ..kernels.grad_accum import grad_accum_buckets, grad_accum_tree
+from ..kernels import fused_update, grad_accum_buckets, grad_accum_tree
 from .flat import FlatSpec
 
 
@@ -35,7 +34,7 @@ def denominators(micro_batches) -> Tuple[int, jnp.ndarray]:
     n_s = leaves[0].shape[0]
     w = micro_batches.get("sample_weight") if hasattr(micro_batches, "get") else None
     total_valid = (jnp.sum(w) if w is not None
-                   else jnp.asarray(float(n_s) * leaves[0].shape[1]))
+                   else jnp.asarray(n_s * leaves[0].shape[1], jnp.float32))
     return n_s, total_valid
 
 

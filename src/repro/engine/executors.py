@@ -177,6 +177,26 @@ class _CompiledExecutorBase:
                 lambda p, mb: self._accumulated(p, mb)[:2])
         return self._grads_jit(params, micro_batches)
 
+    def trace_step(self, params, opt_state, micro_batches):
+        """ClosedJaxpr of the full mini-batch train step — traced, never
+        executed (inputs may be ``ShapeDtypeStruct``s). This is the
+        canonical artifact the ``repro.analysis`` jaxpr contract checks
+        consume, instead of every caller re-tracing ad hoc."""
+        return jax.make_jaxpr(self.make_train_step())(
+            params, opt_state, micro_batches)
+
+    def lower_step(self, params, opt_state, micro_batches, *,
+                   donate: Optional[bool] = None):
+        """``jax.stages.Lowered`` of the jitted step with this executor's
+        donation contract (override via ``donate=``); ``.compile()`` it for
+        the HLO-level checks (aliasing coverage, ``memory_analysis``)."""
+        if donate is None:
+            donate = self._donate
+        return jax.jit(
+            self.make_train_step(),
+            donate_argnums=(0, 1, 2) if donate else (),
+        ).lower(params, opt_state, micro_batches)
+
     def step_split(self, params, opt_state, micro_batches):
         """Jitted step over an already-split ``(N_Sμ, N_μ, ...)`` batch —
         the entry used by the ``Trainer``/``Pipeline`` pair (staging done
@@ -345,9 +365,23 @@ class StreamingExecutor:
             "StreamingExecutor is an eager host pipeline; use .step() "
             "(or a compiled executor for a jittable train step)")
 
+    def trace_step(self, params, opt_state, micro_batches):
+        """ClosedJaxpr of one whole mini-batch of the eager pipeline (the
+        per-micro jitted dispatches + the update), stitched into a single
+        traceable function. Production never compiles this — the pipeline
+        stays eager — but it gives ``repro.analysis`` the same step
+        semantics to inspect (each jitted dispatch shows up as a ``pjit``
+        equation)."""
+        def whole(p, o, split):
+            n_s = jax.tree.leaves(split)[0].shape[0]
+            micro_iter = (jax.tree.map(lambda x, i=i: x[i], split)
+                          for i in range(n_s))
+            return self._run(p, o, micro_iter, n_s, split)
+        return jax.make_jaxpr(whole)(params, opt_state, micro_batches)
+
     def _denoms(self, split) -> Tuple[jnp.ndarray, jnp.ndarray]:
         n_s, total_valid = exec_core.denominators(split)
-        return jnp.asarray(float(n_s), jnp.float32), total_valid
+        return jnp.asarray(n_s, jnp.float32), total_valid
 
     def gradients(self, params, micro_batches):
         """Eager accumulation over an already-split batch (device arrays) —

@@ -90,7 +90,7 @@ class FlatSpec:
         (kernel, dtype, size-bucket, backend)) or the size-aware heuristic.
         ``dtype`` overrides the bucket dtype for the lookup (accumulator
         buffers carry ``accum_dtype``, not the param dtype)."""
-        from ..kernels.grad_accum import resolve_block
+        from ..kernels import resolve_block
         return tuple(
             resolve_block(kind, dtype if dtype is not None else dt, n,
                           interpret)

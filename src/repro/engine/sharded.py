@@ -281,6 +281,45 @@ class ShardedExecutor:
 
         return train_step
 
+    def trace_step(self, params, opt_state, micro_batches):
+        """ClosedJaxpr of the full sharded mini-batch step (traced, never
+        run; inputs may be ``ShapeDtypeStruct``s) — the artifact the
+        ``repro.analysis`` jaxpr checks (collective census, accumulator
+        dtype) consume. For the eager streaming inner the per-micro jitted
+        dispatches and the sync+update dispatch are stitched into one
+        traceable function (each shows up as a ``pjit`` equation)."""
+        if self.inner_name != "streaming":
+            return jax.make_jaxpr(self.make_train_step())(
+                params, opt_state, micro_batches)
+        self._ensure_stream_fns()
+
+        def whole(p, o, split):
+            n_s = jax.tree.leaves(split)[0].shape[0]
+            mb0 = jax.tree.map(lambda x: x[0], split)
+            carry = self._carry_zeros(p, mb0)
+            for i in range(n_s):
+                mb = jax.tree.map(lambda x, i=i: x[i], split)
+                carry = self._stream_micro(p, carry, mb)
+            return self._stream_update(p, o, carry, n_s)
+
+        return jax.make_jaxpr(whole)(params, opt_state, micro_batches)
+
+    def lower_step(self, params, opt_state, micro_batches, *,
+                   donate: Optional[bool] = None):
+        """``jax.stages.Lowered`` of the jitted sharded step (donation as
+        configured unless overridden) for the HLO-level contract checks —
+        one all-reduce per mini-batch, aliasing, ``memory_analysis``."""
+        if self.inner_name == "streaming":
+            raise NotImplementedError(
+                "the streaming inner has no single jittable step to lower; "
+                "use trace_step for jaxpr-level analysis")
+        if donate is None:
+            donate = self._donate
+        return jax.jit(
+            self.make_train_step(),
+            donate_argnums=(0, 1, 2) if donate else (),
+        ).lower(params, opt_state, micro_batches)
+
     def step_split(self, params, opt_state, micro_batches
                    ) -> Tuple[Any, Any, Dict[str, Any]]:
         if self.inner_name == "streaming":
@@ -393,7 +432,8 @@ class ShardedExecutor:
                              in_specs=(carry_spec,), out_specs=(P(), P()),
                              check_rep=False)(carry)
 
-        self._stream_micro = jax.jit(wrap_micro, donate_argnums=(1,))
+        self._stream_micro = jax.jit(
+            wrap_micro, donate_argnums=(1,) if self._donate else ())
         self._stream_update = jax.jit(wrap_update, static_argnums=(3,))
         self._stream_grads = jax.jit(wrap_grads)
 

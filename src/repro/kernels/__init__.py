@@ -1,5 +1,56 @@
-"""Pallas kernels. Import the jit'd wrappers from ``repro.kernels.ops``
-(the submodules flash_attention/cross_entropy/grad_accum hold the raw
-pallas_call implementations; ref holds the pure-jnp oracles)."""
-from . import (cross_entropy, flash_attention, fused_update,  # noqa: F401
-               grad_accum, ops, ref)
+"""Pallas kernels — canonical public import surface.
+
+Import the kernel API from THIS package, not from the submodules::
+
+    from repro.kernels import grad_accum, flash_attention, cross_entropy
+    from repro.kernels import fused_update            # fused optimizer kernels
+    from repro.kernels import set_block_resolver      # autotuner hook
+
+The submodules (``grad_accum``/``cross_entropy``/``flash_attention`` hold
+the raw ``pallas_call`` implementations, ``ops`` the jit'd custom-VJP
+wrappers, ``ref`` the pure-jnp oracles) remain importable via the
+``import repro.kernels.<submodule>`` form for oracle/benchmark access,
+but deep imports from production code are deprecated and flagged by the
+static-analysis lint rule LINT005 (``python -m repro.analysis``) — the
+package surface below is the one stable contract.
+
+Exports:
+  * ``grad_accum`` / ``grad_accum_tree`` / ``grad_accum_buckets`` — the
+    fused scaled-accumulate (paper step ❹), in-place on the accumulator;
+    ``block=None``/``interpret=None`` resolve via the tuning cache.
+  * ``flash_attention`` — differentiable (custom-VJP) attention kernel.
+  * ``cross_entropy`` (= ``fused_cross_entropy``) — differentiable scaled
+    per-token NLL.
+  * ``fused_update`` (module) with ``fused_sgd`` / ``fused_adam`` — the
+    in-place fused optimizer kernels (paper step ❺, Layer 4).
+  * ``set_block_resolver`` / ``resolve_block`` / ``default_block`` /
+    ``lookup_tuned_block`` — launch-geometry hooks (DESIGN.md §Autotuning).
+"""
+# module bindings first (the function bindings below shadow the
+# ``grad_accum``/``cross_entropy``/``flash_attention`` submodule
+# attributes, and since py3.7 ``import repro.kernels.grad_accum as m``
+# resolves through the shadowed parent attribute too — so the raw kernel
+# modules are re-exported under explicit ``*_kernels`` aliases for
+# oracle/benchmark access)
+from . import ops, ref  # noqa: F401
+from . import fused_update  # noqa: F401  (module IS the public fused-opt API)
+from . import cross_entropy as cross_entropy_kernels  # noqa: F401
+from . import flash_attention as flash_attention_kernels  # noqa: F401
+from . import grad_accum as grad_accum_kernels  # noqa: F401
+from .fused_update import fused_adam, fused_sgd  # noqa: F401
+from .grad_accum import (default_block, grad_accum,  # noqa: F401
+                         grad_accum_buckets, grad_accum_tree,
+                         lookup_tuned_block, resolve_block,
+                         set_block_resolver)
+from .ops import flash_attention, fused_cross_entropy  # noqa: F401
+
+cross_entropy = fused_cross_entropy
+
+__all__ = [
+    "cross_entropy", "cross_entropy_kernels", "default_block",
+    "flash_attention", "flash_attention_kernels", "fused_adam",
+    "fused_cross_entropy", "fused_sgd", "fused_update", "grad_accum",
+    "grad_accum_buckets", "grad_accum_kernels", "grad_accum_tree",
+    "lookup_tuned_block", "ops", "ref", "resolve_block",
+    "set_block_resolver",
+]

@@ -148,7 +148,9 @@ def _padded_call(q, k, v, *, causal, window, softcap, block_q, block_k,
     bs = block_q * block_k // math.gcd(block_q, block_k)
     S_pad = -(-S // bs) * bs
     padw = ((0, 0), (0, 0), (0, S_pad - S), (0, 0))
-    qp, kp, vp = (jnp.pad(x, padw) for x in (q, k, v))
+    # explicit ragged fallback (block sizes otherwise divide S) — the
+    # padded copy is the documented cost of odd sequence lengths
+    qp, kp, vp = (jnp.pad(x, padw) for x in (q, k, v))  # repro: noqa(LINT002)
     # padded queries produce garbage rows we slice off; padded keys are
     # always masked for causal rows < S. For non-causal, widen the window
     # mask to exclude them explicitly via causal=True on padding? Keep

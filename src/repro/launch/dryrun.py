@@ -21,56 +21,31 @@ Proves the distribution config is coherent and extracts the roofline inputs:
 
 Usage:
   python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k \
-      [--multi-pod] [--microbatches 8] [--no-probe] [--out DIR]
+      [--multi-pod] [--microbatches 8] [--no-probe] [--check] [--json] \
+      [--out DIR]
+
+Exit codes (shared with ``python -m repro.analysis`` — see
+``repro.analysis.findings``): 0 ok, 1 tool error, 2 budget exceeded
+(``--budget``), 3 static-contract findings (``--check``). argparse usage
+errors also exit 2 (argparse's own convention; unambiguous in practice
+because ``--budget`` is opt-in).
 """
 import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
+import sys  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from .. import configs, engine  # noqa: E402
+# the HLO-text census helpers moved to the analysis subsystem (single
+# source of truth for dryrun, tests, and the CI contract gate)
+from ..analysis.findings import (EXIT_BUDGET, EXIT_CONTRACT,  # noqa: E402
+                                 EXIT_OK)
+from ..analysis.hlo_checks import collective_bytes  # noqa: E402,F401
 from . import mesh as mesh_lib, sharding, steps  # noqa: E402
-
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
-
-_COLL_RE = re.compile(
-    r"^\s*(?:%?[\w.\-]+ = )?(?P<out>\(?[\w\[\],{}\s/#*]*?\)?)\s*"
-    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute|collective-broadcast)(?:-start|-done)?\(",
-    re.M)
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str):
-    """Per-device output bytes of every collective op, by kind."""
-    out = {}
-    for m in _COLL_RE.finditer(hlo_text):
-        op = m.group("op")
-        b = _shape_bytes(m.group("out"))
-        d = out.setdefault(op, {"bytes": 0, "count": 0})
-        d["bytes"] += b
-        d["count"] += 1
-    return out
 
 
 def _in_specs(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
@@ -193,7 +168,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                remat_policy: str = None, cfg_overrides: dict = None,
                fsdp: bool = True, executor: str = "compiled",
                budget_bytes: int = None, calibrate: str = "off",
-               tuning_cache: str = None):
+               tuning_cache: str = None, check: bool = False):
     cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
@@ -327,6 +302,18 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     over_budget = (budget_bytes is not None
                    and measured_peak > budget_bytes)
 
+    contract = None
+    if check:
+        # static contract gate over THIS run's artifacts (no re-lowering):
+        # jaxpr contracts on the pre-GSPMD bundle fn, aliasing + memory
+        # cross-check on the compiled step we just built
+        from .. import analysis
+        modeled = (oracle.get("modeled_bytes")
+                   if isinstance(oracle, dict) else None)
+        contract = analysis.check_bundle(
+            bundle, compiled=compiled, modeled_bytes=modeled,
+            devices=int(mesh.devices.size)).to_dict()
+
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
@@ -341,6 +328,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                     "measured_peak_bytes": measured_peak,
                     "over_budget": over_budget}
                    if budget_bytes is not None else None),
+        "contract": contract,
         "raw_cost_analysis": {k: float(v) for k, v in cost.items()
                               if k in ("flops", "bytes accessed",
                                        "transcendentals", "optimal_seconds")},
@@ -404,6 +392,13 @@ def main():
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
                     help="tuning-cache JSON path (default: "
                          "$REPRO_TUNING_CACHE or ~/.cache/repro-tuning/)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the static contract checks "
+                         "(repro.analysis.check_bundle) over this run's "
+                         "traced/compiled step; findings exit 3")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full JSON report to stdout (also when "
+                         "--out is set)")
     ap.add_argument("--out", default=None, help="directory for JSON artifact")
     args = ap.parse_args()
 
@@ -414,13 +409,14 @@ def main():
                     if args.budget is not None else None)
     res = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
                      num_microbatches=args.microbatches, reduced=args.reduced,
-                     probe=not args.no_probe, verbose=args.out is None,
+                     probe=not args.no_probe,
+                     verbose=args.out is None or args.json,
                      remat=not args.no_remat,
                      remat_policy=args.remat_policy,
                      cfg_overrides=overrides or None,
                      fsdp=not args.no_fsdp, executor=args.executor,
                      budget_bytes=budget_bytes, calibrate=args.calibrate,
-                     tuning_cache=args.tuning_cache)
+                     tuning_cache=args.tuning_cache, check=args.check)
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         tag = "multi" if args.multi_pod else "single"
@@ -428,15 +424,26 @@ def main():
         with open(path, "w") as f:
             json.dump(res, f, indent=1)
         print(f"wrote {path}")
+
+    # repo-wide exit-code contract (shared with ``python -m repro.analysis``,
+    # see analysis/findings.py): 0 ok / 1 tool error / 2 budget / 3 contract
+    exit_code = EXIT_OK
     b = res.get("budget") if isinstance(res, dict) else None
     if b and b["over_budget"]:
-        import sys
         print(f"BUDGET EXCEEDED: measured peak "
               f"{b['measured_peak_bytes'] / 1024 ** 3:.2f} GiB > budget "
               f"{b['budget_bytes'] / 1024 ** 3:.2f} GiB "
               f"({args.arch} / {args.shape}) — raise --budget, add model "
               f"parallelism, or shrink the micro-batch", file=sys.stderr)
-        sys.exit(2)
+        exit_code = EXIT_BUDGET
+    contract = res.get("contract") if isinstance(res, dict) else None
+    if contract and contract.get("findings"):
+        for f in contract["findings"]:
+            print(f"CONTRACT: [{f.get('rule')}] {f.get('message')}",
+                  file=sys.stderr)
+        if exit_code == EXIT_OK:
+            exit_code = EXIT_CONTRACT
+    sys.exit(exit_code)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--no-donate", action="store_true",
+                    help="do not donate the KV cache at the decode jit "
+                         "boundary (keeps it readable across calls)")
     ap.add_argument("--dtype", choices=["float32", "bfloat16"],
                     default="float32")
     args = ap.parse_args()
@@ -39,8 +42,10 @@ def main():
         params = transformer.init_params(cfg, jax.random.PRNGKey(0))
         prefill = jax.jit(lambda p, t: transformer.prefill(
             p, cfg, t, max_len=max_len, dtype=dtype))
+        donate = not args.no_donate  # cache is reused in place per step
         decode = jax.jit(lambda p, tok, c, pos: transformer.decode_step(
-            p, cfg, tok, c, pos, dtype=dtype), donate_argnums=(2,))
+            p, cfg, tok, c, pos, dtype=dtype),
+            donate_argnums=(2,) if donate else ())
 
         prompts = jax.random.randint(jax.random.PRNGKey(1),
                                      (args.batch, args.prompt_len), 0,

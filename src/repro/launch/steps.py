@@ -35,6 +35,14 @@ class StepBundle:
     fn: Callable  # the step function to jit
     arg_shapes: Tuple[Any, ...]  # abstract args (ShapeDtypeStruct trees)
     donate_argnums: Tuple[int, ...] = ()
+    # traced-artifact context for ``repro.analysis`` (train steps only):
+    # the plan the step was built against, the loss/optimizer it closes
+    # over, and the executor name — so contract checks can verify the
+    # compiled step against what the planner admitted without rebuilding.
+    plan: Optional[Any] = None
+    optimizer: Optional[Any] = None
+    loss_fn: Optional[Callable] = None
+    executor: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +109,36 @@ def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
     return loss_fn
 
 
+def abstract_train_batch(cfg: ModelConfig, seq_len: int, plan, *,
+                         dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of a SPLIT ``(N_Sμ, N_μ, ...)`` train batch
+    for one (architecture × plan) — what the compiled train step consumes
+    beyond params/opt-state. Shared by :func:`build_train_step` and the
+    ``repro.analysis`` suite (which traces steps without building data)."""
+    s = seq_len
+    n, m = plan.num_micro_batches, plan.micro_batch_size
+    i32, f32 = jnp.int32, jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if cfg.is_encdec:
+        batch = {
+            "frames": sds((n, m, s, cfg.d_model), dtype),
+            "tgt_tokens": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
+            "labels": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
+        }
+    else:
+        batch = {
+            "tokens": sds((n, m, s), i32),
+            "labels": sds((n, m, s), i32),
+        }
+        if cfg.is_vlm:
+            batch["vision_embeds"] = sds(
+                (n, m, N_VISION_TOKENS, transformer.VISION_EMBED_DIM), dtype)
+            batch["mrope_positions"] = sds((n, 3, m, s), i32)
+    # the plan's pad-and-mask split always emits the sample-weight mask
+    batch["sample_weight"] = sds((n, m), f32)
+    return batch
+
+
 def build_train_step(cfg: ModelConfig, shape: InputShape, *,
                      num_microbatches: Optional[int] = None, optimizer=None,
                      dtype=jnp.bfloat16, remat: bool = True,
@@ -131,34 +169,15 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
     step = engine.get_executor(executor)(
         loss_fn, optimizer, plan).make_train_step()
 
-    s = shape.seq_len
-    n, m = plan.num_micro_batches, plan.micro_batch_size
-    i32, f32 = jnp.int32, jnp.float32
-    sds = jax.ShapeDtypeStruct
-    if cfg.is_encdec:
-        batch = {
-            "frames": sds((n, m, s, cfg.d_model), dtype),
-            "tgt_tokens": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
-            "labels": sds((n, m, s // AUDIO_TGT_FRACTION), i32),
-        }
-    else:
-        batch = {
-            "tokens": sds((n, m, s), i32),
-            "labels": sds((n, m, s), i32),
-        }
-        if cfg.is_vlm:
-            batch["vision_embeds"] = sds(
-                (n, m, N_VISION_TOKENS, transformer.VISION_EMBED_DIM), dtype)
-            batch["mrope_positions"] = sds((n, 3, m, s), i32)
-    # the plan's pad-and-mask split always emits the sample-weight mask
-    batch["sample_weight"] = sds((n, m), f32)
-
+    batch = abstract_train_batch(cfg, shape.seq_len, plan, dtype=dtype)
     params = abstract_params(cfg)
     opt_state = abstract_opt_state(optimizer, params)
     # donate state AND the split batch: the batch is spent after the scan,
     # freeing its buffers for the update step's temporaries
     return StepBundle("train", step, (params, opt_state, batch),
-                      donate_argnums=(0, 1, 2))
+                      donate_argnums=(0, 1, 2), plan=plan,
+                      optimizer=optimizer, loss_fn=loss_fn,
+                      executor=executor)
 
 
 # ---------------------------------------------------------------------------

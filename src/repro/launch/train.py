@@ -156,6 +156,9 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore params+opt state from the latest "
                          "checkpoint in --ckpt-dir and continue from its step")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="do not donate params/opt-state/batch at the "
+                         "step jit boundary (A/B runs that reuse state)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host batches buffered by the input pipeline "
                          "(0: synchronous)")
@@ -234,7 +237,9 @@ def main():
         # donate params/opt-state (reused in place for the new state) AND
         # the spent split batch (freed for step-❺ temporaries); the Trainer
         # threads state and never touches a donated buffer again
-        step = jax.jit(executor.make_train_step(), donate_argnums=(0, 1, 2))
+        donate = not args.no_donate
+        step = jax.jit(executor.make_train_step(),
+                       donate_argnums=(0, 1, 2) if donate else ())
         pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
                                    mesh=mesh)
         trainer = engine.Trainer(

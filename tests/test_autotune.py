@@ -15,7 +15,8 @@ from conftest import (EXECUTOR_GRID, assert_trees_close, make_executor,
 from repro import configs, engine
 from repro.core import memory_model
 from repro.engine import autotune
-from repro.kernels import fused_update as fu, grad_accum as ga
+from repro.kernels import fused_update as fu
+from repro.kernels import grad_accum_kernels as ga
 
 SEQ = 64
 MINI = 32

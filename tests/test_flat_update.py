@@ -387,22 +387,27 @@ def test_dryrun_memory_analysis_reflects_donated_update():
     """Dryrun-style corroboration: lower+compile the donating train step
     and read XLA's own memory analysis — the donated state buffers are
     aliased in place (alias bytes cover params + opt state), which is the
-    mechanism that removes the unfused path's update transients."""
+    mechanism that removes the unfused path's update transients. The
+    census goes through the shared analysis rule (HLO001); the executor's
+    own ``lower_step(donate=True)`` is the artifact under test."""
+    from repro import analysis
+
     opt = optim.sgd(0.1, momentum=0.9)
     plan = engine.plan_mbs(8, micro_batch_size=4)
     params = _params(7)
     opt_state = opt.init(params)
     split = plan.device_split(_batch(8, seed=7))
-    state_bytes = sum(l.size * jnp.dtype(l.dtype).itemsize
-                      for l in jax.tree.leaves((params, opt_state))
-                      if hasattr(l, "size"))
+    state_bytes = analysis.tree_bytes((params, opt_state))
     for name in ("compiled", "flat"):
         ex = make_executor(name, _loss_fn, opt, plan)
-        compiled = jax.jit(ex.make_train_step(),
-                           donate_argnums=(0, 1, 2)).lower(
-            params, opt_state, split).compile()
-        mem = compiled.memory_analysis()
-        alias = getattr(mem, "alias_size_in_bytes", 0)
-        assert alias >= state_bytes, (
-            f"{name}: donated state not aliased in place "
-            f"(alias={alias}, state={state_bytes})")
+        compiled = ex.lower_step(params, opt_state, split,
+                                 donate=True).compile()
+        findings = analysis.check_aliasing(compiled, state_bytes,
+                                           context=name)
+        assert not findings, [f.format() for f in findings]
+        # and the negative control: without donation there is nothing to
+        # alias, so the same rule must fire
+        undonated = ex.lower_step(params, opt_state, split,
+                                  donate=False).compile()
+        neg = analysis.check_aliasing(undonated, state_bytes, context=name)
+        assert neg and neg[0].rule == "HLO001"

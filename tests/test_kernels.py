@@ -4,9 +4,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import flash_attention as fa_mod
-from repro.kernels import cross_entropy as ce_mod
-from repro.kernels import grad_accum as ga_mod
+from repro.kernels import cross_entropy_kernels as ce_mod
+from repro.kernels import flash_attention_kernels as fa_mod
+from repro.kernels import grad_accum_kernels as ga_mod
 from repro.kernels import ops, ref
 
 

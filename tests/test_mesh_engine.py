@@ -19,8 +19,6 @@ every executor in the conformance grid × mesh shapes × split regimes:
     a growing global batch at a fixed per-device budget as the data axis
     grows 2 -> 4 -> 8.
 """
-import re
-
 import jax
 import numpy as np
 import pytest
@@ -29,7 +27,7 @@ from conftest import (EXECUTOR_GRID, GOLDEN_LOSSES, ToyDataset,
                       assert_scalar_close, assert_trees_close, host_mesh,
                       make_executor, make_sharded_executor, tiny_batch,
                       tiny_loss_fn, tiny_optimizer, tiny_params)
-from repro import configs, engine, optim
+from repro import analysis, configs, engine, optim
 from repro.core import memory_model
 
 pytestmark = pytest.mark.mesh
@@ -113,9 +111,8 @@ def test_sharded_step_via_host_minibatch():
 # deferred sync: HLO collective counts
 # ---------------------------------------------------------------------------
 
-def _allreduce_count(step_fn, *abstract_args) -> int:
-    hlo = jax.jit(step_fn).lower(*abstract_args).compile().as_text()
-    return len(re.findall(r"all-reduce(?:-start)?\(", hlo))
+def _compile_step(step_fn, *abstract_args):
+    return jax.jit(step_fn).lower(*abstract_args).compile()
 
 
 @pytest.mark.parametrize("n_micro", [2, 8])
@@ -124,7 +121,8 @@ def test_exactly_one_gradient_allreduce_per_minibatch(n_micro):
     loop body cannot hide per-iteration collectives) the deferred-sync
     step compiles to exactly one all-reduce regardless of N_Sμ, while the
     per-micro-sync baseline compiles to one per micro-batch plus the
-    scalar sync."""
+    scalar sync. Both censuses go through the shared analysis rule
+    (HLO004) — an empty findings list IS the pass."""
     mesh = host_mesh(4)
     opt = tiny_optimizer()
     plan = engine.plan_mbs(8 * n_micro, num_microbatches=n_micro, mesh=mesh,
@@ -136,15 +134,18 @@ def test_exactly_one_gradient_allreduce_per_minibatch(n_micro):
 
     deferred = make_sharded_executor("compiled", tiny_loss_fn, opt, plan,
                                      mesh, donate=False)
-    n_def = _allreduce_count(deferred.make_train_step(), params, state, split)
-    assert n_def == 1, f"deferred sync must be ONE all-reduce, got {n_def}"
+    compiled = _compile_step(deferred.make_train_step(), params, state, split)
+    findings = analysis.check_gradient_sync(
+        compiled, expect="deferred", n_micro=n_micro, context="deferred")
+    assert not findings, [f.format() for f in findings]
+    assert analysis.allreduce_count(compiled) == 1
 
     baseline = make_sharded_executor("compiled", tiny_loss_fn, opt, plan,
                                      mesh, donate=False, defer_sync=False)
-    n_base = _allreduce_count(baseline.make_train_step(), params, state, split)
-    assert n_base >= n_micro, (
-        f"per-micro baseline should sync every micro-batch: {n_base} "
-        f"all-reduces for {n_micro} micro-batches")
+    compiled = _compile_step(baseline.make_train_step(), params, state, split)
+    findings = analysis.check_gradient_sync(
+        compiled, expect="per-micro", n_micro=n_micro, context="baseline")
+    assert not findings, [f.format() for f in findings]
 
 
 @pytest.mark.parametrize("executor", [e for e in EXECUTOR_GRID
@@ -159,9 +160,11 @@ def test_one_allreduce_for_every_compiled_inner(executor):
     split = plan.device_split(tiny_batch(16))
     ex = make_sharded_executor(executor, tiny_loss_fn, opt, plan, mesh,
                                donate=False)
-    n = _allreduce_count(ex.make_train_step(), params, opt.init(params),
-                         split)
-    assert n == 1, f"{executor}: expected one all-reduce, got {n}"
+    compiled = _compile_step(ex.make_train_step(), params, opt.init(params),
+                             split)
+    findings = analysis.check_gradient_sync(
+        compiled, expect="deferred", n_micro=4, context=executor)
+    assert not findings, [f.format() for f in findings]
 
 
 # ---------------------------------------------------------------------------
