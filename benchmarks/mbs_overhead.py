@@ -40,7 +40,14 @@ and writes ``BENCH_tuning.json``: bucketed grad-accum per-leaf vs legacy
 fixed block vs heuristic default vs tuned winner on the 96-leaf config,
 plus the admission uplift oracle calibration buys ``plan_mbs`` on reduced
 qwen2 at a tight budget (with the XLA-measured peak proving the
-calibrated micro still fits)."""
+calibrated micro still fits).
+
+``--fault-bench`` benchmarks the fault-tolerant runtime (engine Layer 9)
+and writes ``BENCH_faults.json``: per injected fault class (OOM at both
+degradation rungs, non-finite gradient retry/skip, transient worker,
+checkpoint I/O, torn checkpoint write), the supervisor's recovery time,
+steps lost/replayed and the plan admission before/after degradation —
+plus the steady-state supervision overhead vs the plain Trainer loop."""
 from __future__ import annotations
 
 import os
@@ -472,6 +479,148 @@ def tuning_main(quick: bool = True, out_path: str = "BENCH_tuning.json",
     return results
 
 
+def faults_main(quick: bool = True, out_path: str = "BENCH_faults.json"):
+    """Fault-tolerance benchmark (``--fault-bench``), the engine Layer 9
+    acceptance numbers, recorded run over run in ``BENCH_faults.json``:
+    per fault class, the supervisor's recovery time, steps lost/replayed,
+    restart count and the plan admission before/after degradation — plus
+    the steady-state supervision overhead (the synchronous ``nonfinite``
+    readback) vs the plain async ``Trainer`` loop."""
+    import tempfile
+
+    from repro.checkpoint import checkpoint as ckpt_lib
+    from repro.engine import faults
+
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params0 = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = steps.make_loss_fn(cfg, dtype=jnp.float32, remat=False)
+    opt = optim.sgd(0.01, momentum=0.9)
+    ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+    mini_batch = 8
+    n_steps = 6 if quick else 12
+    plan = engine.plan_mbs(mini_batch, num_microbatches=2)
+
+    def fresh():
+        p = jax.tree.map(jnp.copy, params0)
+        return p, opt.init(p)
+
+    def make_build(guard=True):
+        def build(pl):
+            ex = engine.get_executor("compiled")(loss_fn, opt, pl,
+                                                 guard=guard)
+            return ex.step_split, engine.Pipeline(ds, pl, prefetch=0)
+        return build
+
+    def admission(pl):
+        return {"micro_batch_size": pl.micro_batch_size,
+                "num_micro_batches": pl.num_micro_batches,
+                "remat_policy": pl.remat_policy}
+
+    def run(specs, *, start_plan=None, sup_kw=None, ckpt: bool = True):
+        sup = engine.Supervisor(
+            make_build(), start_plan or plan,
+            config=engine.SupervisorConfig(**(sup_kw or {})),
+            ckpt_dir=tempfile.mkdtemp() if ckpt else None,
+            ckpt_every=2, ckpt_keep=3, log_fn=None)
+        p, s = fresh()
+        crash = None
+        t0 = time.perf_counter()
+        with faults.inject(faults.FaultPlan(*specs)):
+            try:
+                sup.fit(p, s, n_steps)
+            except faults.InjectedCrash as e:
+                crash = str(e)
+        return sup, time.perf_counter() - t0, crash
+
+    results = {"benchmark": "faults", "arch": "qwen2-1.5b-reduced",
+               "steps": n_steps, "plan": admission(plan), "faults": {}}
+
+    # -- steady-state supervision cost (no faults injected) ----------------
+    p, s = fresh()
+    trainer = engine.Trainer(*make_build(guard=False)(plan), log_fn=None)
+    t0 = time.perf_counter()
+    trainer.fit(p, s, n_steps)
+    t_plain = (time.perf_counter() - t0) / n_steps
+    sup, wall, _ = run((), ckpt=False)
+    t_sup = wall / n_steps
+    results["supervision_overhead"] = {
+        "trainer_step_s": t_plain, "supervised_step_s": t_sup,
+        "overhead_frac": t_sup / t_plain - 1}
+    emit("faults/overhead/supervised_step", t_sup * 1e6,
+         f"vs trainer {t_plain * 1e6:.0f}us "
+         f"(+{100 * (t_sup / t_plain - 1):.1f}%: sync nonfinite readback)")
+
+    # -- oom: remat escalation rung (geometry preserved) -------------------
+    sup, wall, _ = run([faults.oom_at(2)])
+    rec = sup.records[-1]
+    results["faults"]["oom_remat"] = {
+        "recovery_s": rec.recovery_s, "steps_lost": rec.steps_lost,
+        "restarts": sup.restarts, "action": rec.action,
+        "admission_before": admission(plan),
+        "admission_after": admission(sup.plan)}
+    emit("faults/oom_remat/recovery", rec.recovery_s * 1e6,
+         f"{rec.action}, {rec.steps_lost} steps replayed")
+
+    # -- oom with remat exhausted: micro-shrink rung -----------------------
+    import dataclasses as _dc
+    full = _dc.replace(plan, remat_policy="full", auto_policy=False)
+    sup, wall, _ = run([faults.oom_at(2)], start_plan=full)
+    rec = sup.records[-1]
+    results["faults"]["oom_shrink"] = {
+        "recovery_s": rec.recovery_s, "steps_lost": rec.steps_lost,
+        "restarts": sup.restarts, "action": rec.action,
+        "admission_before": admission(full),
+        "admission_after": admission(sup.plan)}
+    emit("faults/oom_shrink/recovery", rec.recovery_s * 1e6,
+         f"{rec.action}, {rec.steps_lost} steps replayed")
+
+    # -- non-finite gradient: bounded clean re-draw retry, then skip -------
+    sup, wall, _ = run([faults.nan_at(2)])
+    rec = sup.records[-1]
+    results["faults"]["nan_retry"] = {
+        "recovery_s": rec.recovery_s, "steps_lost": rec.steps_lost,
+        "action": rec.action}
+    emit("faults/nan_retry/recovery", rec.recovery_s * 1e6, rec.action)
+    sup, wall, _ = run([faults.nan_at(2)], sup_kw={"nan_retries": 0})
+    rec = sup.records[-1]
+    results["faults"]["nan_skip"] = {
+        "recovery_s": rec.recovery_s, "steps_lost": rec.steps_lost,
+        "action": rec.action}
+    emit("faults/nan_skip/recovery", rec.recovery_s * 1e6, rec.action)
+
+    # -- transient worker failure: absorbed by the pipeline's retries ------
+    sup, wall, _ = run([faults.worker_at(1)])
+    results["faults"]["worker_transient"] = {
+        "pipeline_retries": sup.pipeline.stats.retries,
+        "steps_lost": 0, "restarts": sup.restarts}
+    emit("faults/worker/retries", float(sup.pipeline.stats.retries),
+         "absorbed in the producer loop, 0 steps lost")
+
+    # -- checkpoint-I/O failure: bounded save retry ------------------------
+    sup, wall, _ = run([faults.ckpt_io_at(2)])
+    io_recs = [r for r in sup.records if r.kind == "transient"]
+    results["faults"]["ckpt_io"] = {
+        "save_retries": len(io_recs), "steps_lost": 0,
+        "committed": bool(ckpt_lib.committed_steps(sup.ckpt_dir))}
+    emit("faults/ckpt_io/save_retries", float(len(io_recs)),
+         "save retried then committed, 0 steps lost")
+
+    # -- torn checkpoint write: crash mid-commit, restore skips it ---------
+    sup, wall, crash = run([faults.torn_write_at(2)])
+    committed = ckpt_lib.committed_steps(sup.ckpt_dir)
+    results["faults"]["torn_write"] = {
+        "crashed": crash is not None,
+        "committed_steps_on_disk": committed,
+        "torn_step_invisible": 2 not in committed}
+    emit("faults/torn_write/committed", float(len(committed)),
+         f"crash at step-2 commit; committed={committed} (torn invisible)")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 def _count_allreduce(jitted, *args) -> int:
     import re
     hlo = jitted.lower(*args).compile().as_text()
@@ -575,6 +724,10 @@ if __name__ == "__main__":
     ap.add_argument("--tuning-cache", default=None,
                     help="tuning-cache path for --tuning-bench (default: "
                          "a throwaway temp file)")
+    ap.add_argument("--fault-bench", action="store_true",
+                    help="run the fault-tolerance benchmark (per-fault-class "
+                         "recovery time / steps lost / admission "
+                         "degradation) and write BENCH_faults.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
@@ -589,5 +742,7 @@ if __name__ == "__main__":
     elif a.tuning_bench:
         tuning_main(quick=a.quick, out_path=a.out or "BENCH_tuning.json",
                     cache_path=a.tuning_cache)
+    elif a.fault_bench:
+        faults_main(quick=a.quick, out_path=a.out or "BENCH_faults.json")
     else:
         main(quick=a.quick)

@@ -78,6 +78,11 @@ RULES: Dict[str, Dict[str, str]] = {
                 "contract": "production code imports kernels through the "
                             "repro.kernels public surface, not deep "
                             "submodule paths"},
+    "LINT006": {"layer": "ast",
+                "contract": "bare except Exception in src/repro/engine/ "
+                            "routes through the supervisor's fault "
+                            "taxonomy (faults.classify/is_oom/...) or "
+                            "carries # repro: noqa"},
 }
 
 

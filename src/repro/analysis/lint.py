@@ -20,6 +20,14 @@ performance contracts where jaxpr/HLO inspection cannot see them:
   * LINT005 — production code imports kernels through the
     ``repro.kernels`` public surface; deep submodule imports
     (``from ..kernels.grad_accum import ...``) are deprecated.
+  * LINT006 — a bare ``except Exception``/``BaseException`` inside
+    ``src/repro/engine/`` must route the exception through the
+    supervisor's fault taxonomy (reference ``faults`` /
+    ``classify`` / ``is_oom`` / ``is_transient`` / a ``*Error`` class
+    from ``engine.faults`` in the handler body) or carry
+    ``# repro: noqa(LINT006)``: a catch-all that silently swallows
+    ``RESOURCE_EXHAUSTED`` hides exactly the failures Layer 9 exists
+    to recover from.
 
 Intentional violations are waived inline with ``# repro: noqa(RULE)``
 (or a bare ``# repro: noqa`` to waive every rule on that statement).
@@ -41,14 +49,22 @@ _NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\(([A-Za-z0-9_,\s]*)\))?")
 
 _DEEP_KERNEL_RE = re.compile(r"(^|\.)kernels\.\w+")
 
+#: identifiers that count as "routing through the fault taxonomy" when
+#: they appear in a bare except-Exception handler body (LINT006)
+FAULT_TAXONOMY_NAMES = frozenset({
+    "faults", "classify", "is_oom", "is_transient",
+    "FaultError", "TransientError", "TransientWorkerError",
+    "InjectedIOError", "InjectedCrash", "CheckpointCorruptError",
+})
+
 
 def category_for(path: str) -> str:
     parts = os.path.normpath(path).split(os.sep)
     base = os.path.basename(path)
     if "kernels" in parts:
         return "kernels"
-    if "engine" in parts and base in HOT_LOOP_MODULES:
-        return "engine-hot"
+    if "engine" in parts:
+        return "engine-hot" if base in HOT_LOOP_MODULES else "engine"
     return "general"
 
 
@@ -88,6 +104,33 @@ def _is_jit_call(call: ast.Call) -> bool:
     if isinstance(f, ast.Name) and f.id == "jit":
         return True
     return isinstance(f, ast.Attribute) and f.attr == "jit"
+
+
+def _is_bare_exception_handler(handler: ast.ExceptHandler) -> bool:
+    """True for ``except Exception``/``except BaseException`` (possibly
+    inside a tuple). ``except:`` with no type is also bare."""
+    typ = handler.type
+    if typ is None:
+        return True
+    nodes = typ.elts if isinstance(typ, ast.Tuple) else [typ]
+    for n in nodes:
+        name = n.id if isinstance(n, ast.Name) else (
+            n.attr if isinstance(n, ast.Attribute) else None)
+        if name in ("Exception", "BaseException"):
+            return True
+    return False
+
+
+def _routes_through_taxonomy(handler: ast.ExceptHandler) -> bool:
+    for sub in ast.walk(handler):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name in FAULT_TAXONOMY_NAMES:
+            return True
+    return False
 
 
 def _is_pallas_call(call: ast.Call) -> bool:
@@ -160,6 +203,19 @@ def lint_source(src: str, path: str = "<memory>", *,
                     emit("LINT004", node,
                          "pallas_call without interpret= — kernels must "
                          "plumb interpret mode for off-TPU execution")
+        elif (isinstance(node, ast.ExceptHandler)
+              and category in ("engine", "engine-hot")
+              and _is_bare_exception_handler(node)
+              and not _routes_through_taxonomy(node)):
+            # the noqa waiver must sit on the ``except`` line itself, not
+            # anywhere in the (arbitrarily long) handler body
+            marker = ast.Pass()
+            marker.lineno = node.lineno
+            marker.end_lineno = node.lineno
+            emit("LINT006", marker,
+                 "bare except Exception in src/repro/engine/ — route the "
+                 "exception through the fault taxonomy (faults.classify/"
+                 "is_oom/is_transient) or waive with # repro: noqa(LINT006)")
         elif isinstance(node, ast.ImportFrom) and category != "kernels":
             mod = node.module or ""
             if _DEEP_KERNEL_RE.search(mod) or (

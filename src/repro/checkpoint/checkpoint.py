@@ -1,19 +1,48 @@
-"""Pytree checkpointing: flat-key npz + JSON manifest.
+"""Crash-safe pytree checkpointing: flat-key npz + JSON manifest.
 
 Sharded arrays are gathered to host before writing (fine for the scale we
 execute locally; the manifest records the tree structure so restore works
-without a template)."""
+without a template).
+
+Write protocol (engine Layer 9 — a checkpoint must never be half-trusted):
+
+  1. the npz is written to ``<name>.npz.tmp`` and ``os.replace``d into
+     place — readers never observe a partially-written archive;
+  2. the JSON manifest is written the same way, strictly AFTER the npz:
+     the manifest is the **commit record**. A crash between the two
+     leaves an orphaned ``ckpt_N.npz`` with no manifest — an uncommitted
+     checkpoint that :func:`latest_step`/:func:`committed_steps` simply
+     do not see (this also fixes the old bug where the orphan was
+     selected as latest and restore then died);
+  3. the manifest carries a per-array CRC32 of the stored bytes;
+     :func:`restore` verifies it (and maps unreadable archives) into
+     :class:`CheckpointCorruptError` so callers can fall back to the
+     previous step instead of loading garbage. Manifests from before the
+     CRC field restore without verification (legacy).
+
+``save(..., keep=k)`` rotates: only the newest k *committed* checkpoints
+survive (manifest deleted first, so a crash mid-rotation can only create
+uncommitted orphans, never a manifest pointing at a deleted npz).
+"""
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Dict, Optional
+import zlib
+import zipfile
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from ..engine import faults
+
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint on disk is unreadable or fails its checksum."""
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -32,45 +61,127 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save(directory: str, step: int, tree) -> str:
+def _npz_name(step: int) -> str:
+    return f"ckpt_{step:08d}.npz"
+
+
+def _json_name(step: int) -> str:
+    return f"ckpt_{step:08d}.json"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def save(directory: str, step: int, tree, *,
+         keep: Optional[int] = None) -> str:
+    """Write a committed checkpoint (see the module doc for the protocol);
+    with ``keep``, rotate out all but the newest ``keep`` committed steps."""
     os.makedirs(directory, exist_ok=True)
+    faults.on_checkpoint_io(step)
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrays)
+    path = os.path.join(directory, _npz_name(step))
+    tmp = path + ".tmp"
+    # np.savez appends ".npz" to bare string paths — hand it a file object
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    faults.on_checkpoint_commit(step)  # the torn-write crash window
     treedef = jax.tree_util.tree_structure(tree)
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump({"step": step, "treedef": str(treedef),
-                   "keys": sorted(arrays)}, f)
+    manifest = {"step": step, "treedef": str(treedef),
+                "keys": sorted(arrays),
+                "crc": {k: _crc(v) for k, v in arrays.items()}}
+    jpath = os.path.join(directory, _json_name(step))
+    jtmp = jpath + ".tmp"
+    with open(jtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(jtmp, jpath)  # <-- the commit point
+    if keep is not None:
+        rotate(directory, keep)
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def committed_steps(directory: str) -> List[int]:
+    """Ascending steps with BOTH the npz and its manifest present —
+    uncommitted (torn) checkpoints are invisible."""
     if not os.path.isdir(directory):
+        return []
+    files = set(os.listdir(directory))
+    steps = [int(m.group(1)) for f in files
+             if (m := re.match(r"ckpt_(\d+)\.json$", f))]
+    return sorted(s for s in steps if _npz_name(s) in files)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def rotate(directory: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` committed checkpoints (manifest
+    first — mid-rotation crashes leave orphans, never committed garbage)."""
+    for step in committed_steps(directory)[:-keep or None]:
+        for name in (_json_name(step), _npz_name(step)):
+            try:
+                os.remove(os.path.join(directory, name))
+            except FileNotFoundError:
+                pass
+
+
+def _load_manifest(directory: str, step: int) -> Optional[Dict[str, Any]]:
+    try:
+        with open(os.path.join(directory, _json_name(step))) as f:
+            return json.load(f)
+    except FileNotFoundError:
         return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+    except (json.JSONDecodeError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest for step {step}: {e}") from e
 
 
 def restore(directory: str, template, step: Optional[int] = None, *,
-            shardings=None):
+            shardings=None, verify: bool = True):
     """Restore into the structure of ``template`` (shapes must match).
 
     With ``shardings`` (a pytree of ``jax.sharding.Sharding``/devices
     matching ``template``, or a single sharding), the restored tree is
     placed on device via ``jax.device_put`` instead of being returned as
     bare host numpy arrays — resuming a sharded run must re-apply the
-    run's placement, not silently replicate."""
+    run's placement, not silently replicate.
+
+    Raises :class:`CheckpointCorruptError` for an uncommitted (no
+    manifest), unreadable, or checksum-failing checkpoint — callers fall
+    back to an earlier committed step (``Trainer.restore`` does)."""
     step = latest_step(directory) if step is None else step
     if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    manifest = _load_manifest(directory, step)
+    if manifest is None:
+        raise CheckpointCorruptError(
+            f"step {step} has no manifest (torn write?) in {directory}")
+    crcs = manifest.get("crc") if verify else None  # pre-CRC manifests: skip
     flat_t = _flatten(template)
-    with np.load(os.path.join(directory, f"ckpt_{step:08d}.npz")) as data:
-        missing = set(flat_t) - set(data.files)
-        if missing:
-            raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-        leaves_by_key = {k: data[k] for k in flat_t}
+    npz_path = os.path.join(directory, _npz_name(step))
+    try:
+        with np.load(npz_path) as data:
+            missing = set(flat_t) - set(data.files)
+            if missing:
+                raise KeyError(
+                    f"checkpoint missing keys: {sorted(missing)[:5]}...")
+            leaves_by_key = {k: data[k] for k in flat_t}
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"manifest for step {step} exists but {npz_path} is gone") from e
+    except (zipfile.BadZipFile, zlib.error, EOFError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint archive {npz_path}: {e}") from e
+    if crcs:
+        for key, arr in leaves_by_key.items():
+            want = crcs.get(key)
+            if want is not None and _crc(arr) != want:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for {key!r} in {npz_path}")
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     new_leaves = []
     for path, leaf in paths:

@@ -48,6 +48,18 @@ corrected bytes (``MBSPlan.calibrated``); the kernel block tuner sweeps
 launch block sizes for the accumulate/fused-update kernels and installs a
 resolver so ``block=None`` call sites pick the measured winner. Tuning
 changes speed and admission, never numerics. See DESIGN.md §Autotuning.
+
+Layer 9 — fault-tolerant runtime (``supervisor.py`` + ``faults.py``): the
+:class:`Supervisor` wraps the Trainer's step loop with a recovery state
+machine — runtime ``RESOURCE_EXHAUSTED`` degrades the plan (remat
+escalation, then micro-shrink with a negative calibration bound fed back
+into the Layer-7 cache), rebuilds the runtime and resumes from the last
+completed state; executors built with ``guard=True`` finite-check the
+gradient accumulator on device so non-finite steps are skipped/retried
+behind a circuit breaker; transient pipeline/checkpoint-I/O failures get
+bounded jittered retries. ``faults.py`` is the deterministic seeded
+fault-injection harness (+ the fault taxonomy) that makes every recovery
+path provable in CI on CPU. See DESIGN.md §Fault tolerance.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
@@ -62,3 +74,7 @@ from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
 from .sharded import ShardedExecutor, batch_partition_specs, psum_flat  # noqa: F401
 from .pipeline import Pipeline, PipelineStats  # noqa: F401
 from .trainer import Trainer  # noqa: F401
+from . import faults  # noqa: F401
+from .supervisor import (FaultRecord, NaNCircuitBreaker, NaNHalt,  # noqa: F401
+                         PlanExhausted, RestartBudgetExceeded, Supervisor,
+                         SupervisorConfig, SupervisorError, degrade_plan)

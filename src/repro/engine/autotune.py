@@ -405,6 +405,35 @@ def corrected_micro_search(cfg, seq: int, local_mini: int, budget: int,
     return lo
 
 
+def record_oom_bound(cfg, seq: int, micro: int, budget: int, *,
+                     remat_policy: str, mesh=None, optimizer: str = "sgd",
+                     executor: str = "compiled",
+                     cache: Optional[TuningCache] = None,
+                     cache_path: Optional[str] = None,
+                     **mm_kw) -> Tuple[float, float]:
+    """Feed an OBSERVED runtime OOM back into the calibration cache as a
+    negative bound (engine Layer 9): micro-batch ``micro`` provably does
+    NOT fit ``budget`` under this key, yet the current correction (cached
+    fit, or the identity for a pure-analytic plan) claims it does — so
+    raise the offset ``b`` until ``corrected(modeled(micro)) = budget + 1``.
+    Since corrected bytes are strictly increasing in the micro-batch size,
+    the next ``corrected_micro_search`` under this key admits strictly
+    less than ``micro``. A correction that already rejects ``micro`` is
+    left untouched (the OOM came from elsewhere — fragmentation, a
+    co-tenant — and clamping would double-penalize admission)."""
+    from ..core import memory_model
+    cache = cache or get_cache(cache_path)
+    key = memory_key(cfg, seq, remat_policy, mesh, optimizer, executor)
+    a, b = cache.memory_correction(key) or (1.0, 0.0)
+    est = memory_model.estimate(cfg, seq, remat_policy=remat_policy, **mm_kw)
+    fixed, per_sample = est.affine_coeffs()
+    modeled = fixed + per_sample * max(int(micro), 1)
+    if a * modeled + b <= budget:  # the correction wrongly admits micro
+        b = float(budget) - a * modeled + 1.0
+        cache.put_memory(key, a, b)
+    return a, b
+
+
 # ---------------------------------------------------------------------------
 # Half 2 — kernel block tuner
 # ---------------------------------------------------------------------------
@@ -497,7 +526,7 @@ def _tuned_block_resolver(kind: str, dtype_str: str, n: int,
     try:
         tuned = get_cache().tuned_block(
             block_key(kind, dtype_str, n, interpret=interpret))
-    except Exception:
+    except Exception:  # repro: noqa(LINT006) - degrade, never sink a launch
         return None  # a broken cache must never sink a kernel launch
     if tuned is None:
         return None

@@ -194,6 +194,56 @@ def global_grad_norm(grads) -> jnp.ndarray:
                         for g in jax.tree.leaves(grads)))
 
 
+# ---------------------------------------------------------------------------
+# numeric guard (engine Layer 9)
+# ---------------------------------------------------------------------------
+
+def finite_all(grads) -> jnp.ndarray:
+    """On-device scalar: True iff every element of the gradient accumulator
+    is finite. Works on a params-shaped tree AND on the flat executor's
+    dtype-bucketed buffer list (``jax.tree.leaves`` of a list is the list),
+    so the check composes with ``FlatSpec`` — one reduction per leaf fused
+    into the step, zero extra host syncs."""
+    ok = jnp.asarray(True)
+    for g in jax.tree.leaves(grads):
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(g)))
+    return ok
+
+
+def guarded_update(optimizer, grads, opt_state, params):
+    """Step ❺ behind the finite-check: if the accumulated gradient has any
+    non-finite element, skip the update (params + opt state pass through
+    unchanged, including the step counter — the step never happened).
+    ``lax.cond`` keeps the skip branch free of update math on device.
+
+    Returns ``(new_params, new_opt_state, ok)`` — ``ok`` is the on-device
+    finite flag; readback policy (sync for supervised runs) is the
+    caller's choice."""
+    ok = finite_all(grads)
+    new_params, new_opt_state = jax.lax.cond(
+        ok,
+        lambda p, s: apply_update(optimizer, grads, s, p),
+        lambda p, s: (p, s),
+        params, opt_state)
+    return new_params, new_opt_state, ok
+
+
+def guarded_update_flat(optimizer, spec: FlatSpec, acc_buffers, opt_state,
+                        params, *, interpret: Optional[bool] = None,
+                        block: Optional[int] = None):
+    """Flat-buffer variant of :func:`guarded_update`: the finite-check runs
+    directly on the dtype buckets (no unflatten), the fused Pallas update
+    only on the taken branch."""
+    ok = finite_all(acc_buffers)
+    new_params, new_opt_state = jax.lax.cond(
+        ok,
+        lambda p, s: apply_update_flat(optimizer, spec, acc_buffers, s, p,
+                                       interpret=interpret, block=block),
+        lambda p, s: (p, s),
+        params, opt_state)
+    return new_params, new_opt_state, ok
+
+
 def finalize_metrics(metric_sum: Dict[str, Any], loss, grads) -> Dict[str, Any]:
     out = dict(metric_sum)
     out["loss"] = loss  # Σ normalized micro losses == mini-batch mean loss

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import exec_core, flat
+from . import exec_core, faults, flat
 from .plan import MBSConfig, MBSPlan
 
 
@@ -131,19 +131,27 @@ class _CompiledExecutorBase:
     ``step_split`` jit boundary: callers must thread the returned state
     (the ``Trainer`` does) and never touch a donated buffer again. Pass
     ``donate=False`` when inputs are reused across calls (A/B comparisons,
-    benchmarks timing the same state repeatedly)."""
+    benchmarks timing the same state repeatedly).
+
+    ``guard=True`` (engine Layer 9) puts the optimizer update behind an
+    on-device finite-check of the accumulated gradient: a non-finite
+    accumulator skips step ❺ (state passes through unchanged) and the
+    metrics carry a ``nonfinite`` device scalar for the supervisor's
+    skip/retry policy. Guard off (the default) compiles the exact same
+    program as before — no cond, no extra metric."""
     name = "base"
     fused = False
 
     def __init__(self, loss_fn, optimizer, plan, *,
                  interpret: Optional[bool] = None, block: Optional[int] = None,
-                 donate: bool = True):
+                 donate: bool = True, guard: bool = False):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.plan = _as_plan(plan)
         self._interpret = interpret
         self._block = block
         self._donate = donate
+        self.guard = guard
         self._step_jit = None
         self._grads_jit = None
 
@@ -165,6 +173,12 @@ class _CompiledExecutorBase:
         pure — the launcher jits it with shardings and donation."""
         def train_step(params, opt_state, micro_batches):
             grads, loss, metric_sum = self._accumulated(params, micro_batches)
+            if self.guard:
+                new_params, new_opt, ok = exec_core.guarded_update(
+                    self.optimizer, grads, opt_state, params)
+                metrics = exec_core.finalize_metrics(metric_sum, loss, grads)
+                metrics["nonfinite"] = 1.0 - ok.astype(jnp.float32)
+                return new_params, new_opt, metrics
             new_params, new_opt = exec_core.apply_update(
                 self.optimizer, grads, opt_state, params)
             return new_params, new_opt, exec_core.finalize_metrics(
@@ -204,6 +218,7 @@ class _CompiledExecutorBase:
         Inputs are donated (unless constructed with ``donate=False``): the
         params/opt-state buffers are reused in place for the new state and
         the spent split batch is freed for step-❺ temporaries."""
+        faults.on_dispatch(self.plan)
         if self._step_jit is None:
             self._step_jit = jax.jit(
                 self.make_train_step(),
@@ -293,6 +308,15 @@ class FlatFusedExecutor(_CompiledExecutorBase):
         def train_step(params, opt_state, micro_batches):
             spec, acc, loss, metric_sum = self._accumulated_flat(
                 params, micro_batches)
+            if self.guard:
+                # finite-check runs directly on the dtype buckets — the
+                # FlatSpec composition the guard contract promises
+                new_params, new_opt, ok = exec_core.guarded_update_flat(
+                    self.optimizer, spec, acc, opt_state, params,
+                    interpret=self._interpret, block=self._block)
+                metrics = exec_core.finalize_metrics(metric_sum, loss, acc)
+                metrics["nonfinite"] = 1.0 - ok.astype(jnp.float32)
+                return new_params, new_opt, metrics
             new_params, new_opt = exec_core.apply_update_flat(
                 self.optimizer, spec, acc, opt_state, params,
                 interpret=self._interpret, block=self._block)
@@ -325,11 +349,13 @@ class StreamingExecutor:
     ``Trainer`` does so asynchronously, one step late)."""
     name = "streaming"
 
-    def __init__(self, loss_fn, optimizer, plan, device: Optional[Any] = None):
+    def __init__(self, loss_fn, optimizer, plan, device: Optional[Any] = None,
+                 *, guard: bool = False):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.plan = _as_plan(plan)
         self.device = device or jax.devices()[0]
+        self.guard = guard
         norm = self.plan.normalization
 
         @jax.jit
@@ -356,9 +382,14 @@ class StreamingExecutor:
         def _update(params, opt_state, acc):  # paper step ❺
             return exec_core.apply_update(optimizer, acc, opt_state, params)
 
+        @jax.jit
+        def _guarded_update(params, opt_state, acc):  # step ❺ behind the guard
+            return exec_core.guarded_update(optimizer, acc, opt_state, params)
+
         self._micro_grad_accum = _micro_grad_accum
         self._micro_step = _micro_step
         self._update = _update
+        self._guarded_update = _guarded_update
 
     def make_train_step(self) -> Callable:
         raise NotImplementedError(
@@ -407,10 +438,14 @@ class StreamingExecutor:
         for cur in micro_iter:
             carry = self._micro_step(params, carry, cur, n_s_f, total_valid)
         acc, loss, metric_sum = carry
-        params, opt_state = self._update(params, opt_state, acc)
         out: Dict[str, Any] = {k: v / n_s for k, v in metric_sum.items()}
         out["loss"] = loss  # Σ normalized micro losses == mini-batch loss
         out["grad_norm"] = exec_core.global_grad_norm(acc)
+        if self.guard:
+            params, opt_state, ok = self._guarded_update(params, opt_state, acc)
+            out["nonfinite"] = 1.0 - ok.astype(jnp.float32)
+        else:
+            params, opt_state = self._update(params, opt_state, acc)
         return params, opt_state, out
 
     def step_split(self, params, opt_state, micro_batches
@@ -418,6 +453,7 @@ class StreamingExecutor:
         """Streaming update over a pre-split (and typically pre-staged)
         ``(N_Sμ, N_μ, ...)`` batch — the ``Pipeline`` overlaps the
         mini-batch transfer, so micro-batches are sliced on device."""
+        faults.on_dispatch(self.plan)
         n_s = jax.tree.leaves(micro_batches)[0].shape[0]
         micro_iter = (jax.tree.map(lambda x, i=i: x[i], micro_batches)
                       for i in range(n_s))

@@ -20,12 +20,14 @@ here, not as mysteriously slow device time.
 from __future__ import annotations
 
 import dataclasses
+import random as _random
 import time
 from typing import Any, Dict, Iterator, Optional
 
 import jax
 
 from ..core.streaming import prefetch_iterator
+from . import faults
 from .plan import MBSPlan
 
 
@@ -35,6 +37,7 @@ class PipelineStats:
     batches: int = 0
     wait_s: float = 0.0  # consumer time blocked on host data / staging
     elapsed_s: float = 0.0  # total wall time of the pass
+    retries: int = 0  # transient producer failures absorbed by backoff
 
     @property
     def input_wait_fraction(self) -> float:
@@ -62,16 +65,26 @@ class Pipeline:
     Batch ``i`` of a pass started at ``start`` is always drawn with seed
     ``seed + start + i``, so a resumed run consumes exactly the stream an
     uninterrupted run would have seen.
+
+    Transient producer failures (the ``faults`` taxonomy's
+    ``TransientError`` plus plain ``OSError``) get ``retries`` bounded
+    retries with seeded jittered backoff before the existing fail-fast
+    propagation; absorbed retries are counted in ``stats.retries`` next to
+    ``input_wait_fraction``. The retry re-draws the SAME seeded batch, so
+    an absorbed fault never perturbs the data stream.
     """
 
     def __init__(self, dataset, plan: MBSPlan, *, prefetch: int = 2,
                  stage: bool = True, sharding: Any = None, seed: int = 0,
-                 batch_kw: Optional[Dict[str, Any]] = None, mesh: Any = None):
+                 batch_kw: Optional[Dict[str, Any]] = None, mesh: Any = None,
+                 retries: int = 2, retry_backoff_s: float = 0.01):
         self.dataset = dataset
         self.plan = plan
         self.prefetch = prefetch
         self.stage = stage
         self.seed = seed
+        self.retries = retries
+        self.retry_backoff_s = retry_backoff_s
         self.batch_kw = dict(batch_kw or {})
         if mesh is not None:
             if sharding is not None:
@@ -96,6 +109,17 @@ class Pipeline:
             return jax.device_put(split)
         return jax.device_put(split, self._resolved_sharding)
 
+    def rebatch(self, step: int):
+        """Synthesize, split and stage global step ``step``'s batch again —
+        byte-identical to what ``batches()`` would have yielded for it
+        (step-indexed seeding), but WITHOUT the fault-injection hooks: this
+        is the supervisor's NaN bounded-retry path, re-drawing a poisoned
+        batch after the executors' donation already consumed the original
+        buffers."""
+        mini = self.dataset.batch(self.plan.mini_batch_size,
+                                  self.seed + step, **self.batch_kw)
+        return self._put(self.plan.split(mini))
+
     # -- iteration ----------------------------------------------------------
 
     def batches(self, num_batches: int, start: int = 0
@@ -105,10 +129,23 @@ class Pipeline:
         self.stats = stats = PipelineStats()
 
         def host_gen():
+            rng = _random.Random(self.seed ^ 0x5EED)  # jitter only, not data
             for i in range(start, start + num_batches):
-                mini = self.dataset.batch(self.plan.mini_batch_size,
-                                          self.seed + i, **self.batch_kw)
-                yield self.plan.split(mini)
+                for attempt in range(self.retries + 1):
+                    try:
+                        faults.on_host_batch(i)
+                        mini = self.dataset.batch(self.plan.mini_batch_size,
+                                                  self.seed + i,
+                                                  **self.batch_kw)
+                        split = self.plan.split(mini)
+                        break
+                    except (faults.TransientError, OSError):
+                        if attempt >= self.retries:
+                            raise  # bounded: fail fast like before
+                        stats.retries += 1
+                        time.sleep(self.retry_backoff_s
+                                   * (1 + rng.random()) * (2 ** attempt))
+                yield faults.corrupt_batch(split, i)
 
         it = (prefetch_iterator(host_gen(), self.prefetch)
               if self.prefetch else host_gen())

@@ -55,7 +55,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..launch import mesh as mesh_lib
-from . import exec_core, flat as flat_lib
+from . import exec_core, faults, flat as flat_lib
 from .executors import EXECUTORS, _as_plan, get_executor
 from .plan import MBSPlan
 
@@ -126,13 +126,18 @@ class ShardedExecutor:
     Implements the :class:`engine.executors.Executor` protocol; the
     ``inner`` name selects the local accumulation strategy ("compiled" |
     "streaming" | "fused" | "flat"). ``donate=False`` for callers that
-    reuse params/opt-state across calls (A/B tests, benchmarks)."""
+    reuse params/opt-state across calls (A/B tests, benchmarks).
+
+    ``guard=True`` (engine Layer 9) finite-checks the globally-reduced
+    gradient inside ``_finalize`` — after the one psum, so the flag is
+    replicated and every device takes the same skip/update branch — and
+    surfaces a ``nonfinite`` metric for the supervisor."""
     name = "sharded"
 
     def __init__(self, loss_fn, optimizer, plan, *, mesh,
                  inner: str = "compiled", defer_sync: bool = True,
                  donate: bool = True, interpret: Optional[bool] = None,
-                 block: Optional[int] = None):
+                 block: Optional[int] = None, guard: bool = False):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.plan: MBSPlan = _as_plan(plan)
@@ -143,6 +148,7 @@ class ShardedExecutor:
         self._donate = donate
         self._interpret = interpret
         self._block = block
+        self.guard = guard
         if not self.axes or self.dp < 2:
             raise ValueError(
                 "ShardedExecutor needs a mesh with a (pod, data) extent of "
@@ -232,17 +238,28 @@ class ShardedExecutor:
         loss = loss * scale
         # metrics were summed over every (device, micro-batch) pair
         metrics = jax.tree.map(lambda m: m / (self.dp * n_s), metric_sum)
+        ok = None
         if self.inner_name == "flat":
             spec = flat_lib.FlatSpec.for_tree(params)
             bufs = spec.flatten(grads, dtype=jnp.float32)
-            new_params, new_opt = exec_core.apply_update_flat(
-                self.optimizer, spec, bufs, opt_state, params,
-                interpret=self._interpret, block=self._block)
+            if self.guard:
+                new_params, new_opt, ok = exec_core.guarded_update_flat(
+                    self.optimizer, spec, bufs, opt_state, params,
+                    interpret=self._interpret, block=self._block)
+            else:
+                new_params, new_opt = exec_core.apply_update_flat(
+                    self.optimizer, spec, bufs, opt_state, params,
+                    interpret=self._interpret, block=self._block)
+        elif self.guard:
+            new_params, new_opt, ok = exec_core.guarded_update(
+                self.optimizer, grads, opt_state, params)
         else:
             new_params, new_opt = exec_core.apply_update(
                 self.optimizer, grads, opt_state, params)
-        return new_params, new_opt, exec_core.finalize_metrics(
-            metrics, loss, grads)
+        out = exec_core.finalize_metrics(metrics, loss, grads)
+        if ok is not None:
+            out["nonfinite"] = 1.0 - ok.astype(jnp.float32)
+        return new_params, new_opt, out
 
     # -- compiled path ------------------------------------------------------
 
@@ -322,6 +339,7 @@ class ShardedExecutor:
 
     def step_split(self, params, opt_state, micro_batches
                    ) -> Tuple[Any, Any, Dict[str, Any]]:
+        faults.on_dispatch(self.plan)
         if self.inner_name == "streaming":
             return self._stream_step_split(params, opt_state, micro_batches)
         if self._step_jit is None:

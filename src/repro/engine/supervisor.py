@@ -1,0 +1,468 @@
+"""Fault-tolerant training runtime (engine Layer 9): the Supervisor.
+
+MBP admission plans to the *edge* of device memory, so a production run
+must assume the plan will sometimes be wrong at runtime — allocator
+fragmentation, a co-tenant, a calibration miss — and that long huge-batch
+runs will hit non-finite gradients and flaky I/O. The
+:class:`Supervisor` wraps the ``Trainer``'s step loop with a recovery
+state machine over the ``faults`` taxonomy:
+
+  ``oom``        (``RESOURCE_EXHAUSTED`` out of executor dispatch)
+                 → **degrade + re-plan + resume**: escalate the remat
+                 policy one rung up the Layer-5 lattice first (recompute
+                 is cheaper than losing batch — the paper's whole point
+                 is keeping N_B), then shrink the micro-batch and
+                 re-derive the plan via ``plan_mbs``, feeding the
+                 observed failure back into the Layer-7 tuning cache as
+                 a negative calibration bound
+                 (``autotune.record_oom_bound``) so the re-plan — and
+                 every future plan under this key — admits strictly less
+                 than what just OOMed. Rebuild executor + pipeline for
+                 the new plan, restore the last completed state (PR-2
+                 resume machinery: committed checkpoints, else the
+                 in-memory anchor), replay from there. The Pipeline's
+                 step-indexed seeding makes the post-recovery trajectory
+                 equal an uninterrupted run at the degraded plan.
+  ``nonfinite``  (the executors' ``guard=True`` on-device finite-check)
+                 → skip-step + bounded retry: the guarded update already
+                 left params/opt-state untouched, so the supervisor
+                 re-draws the same seeded batch (``pipeline.rebatch`` —
+                 donation consumed the poisoned buffers) up to
+                 ``nan_retries`` times, then skips; ``max_consecutive_nan``
+                 skipped steps in a row trip the circuit breaker
+                 (``on_nan="halt"`` raises on the first one instead).
+  ``transient``  (``faults.TransientError`` / ``OSError`` escaping the
+                 Pipeline's own bounded retries, or checkpoint-I/O
+                 failures) → bounded retry with jittered backoff; a
+                 checkpoint that still fails after ``io_retries`` is
+                 logged and *skipped* — training goes on, durability
+                 catches up at the next cadence.
+  ``crash``      (``faults.InjectedCrash``) → NOT handled: it models the
+                 process dying (e.g. mid-checkpoint-write); the harness
+                 lets it propagate so tests can assert the on-disk state
+                 a real crash would leave.
+  ``fatal``      everything else → propagate unchanged. A real bug must
+                 not be retried into silence.
+
+Degradation order — remat before micro-shrink — because escalating remat
+preserves the planned batch geometry (same N_μ/N_Sμ, only more
+recompute), while shrinking the micro-batch re-pads/re-masks the split
+and costs throughput; and because the remat lattice is bounded (4 rungs)
+whereas micro-shrink is where the real admission give-back happens, it
+is the escape hatch once recompute is exhausted.
+
+Supervision cost: when the guard is active the supervisor reads the
+``nonfinite`` flag synchronously every step (one scalar readback) —
+without it, step i+1's dispatch would consume state before step i's
+skip decision is known. Unsupervised runs keep the Trainer's fully
+async readback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random as _random
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from ..checkpoint import checkpoint
+from ..models import remat as remat_lib
+from . import autotune, faults
+from .plan import MBSPlan, plan_mbs
+from .trainer import _default_log
+
+
+class SupervisorError(RuntimeError):
+    """Base class for supervisor give-ups (recovery budget exhausted)."""
+    exit_code = 40
+
+
+class RestartBudgetExceeded(SupervisorError):
+    """More OOM restarts than ``max_restarts``."""
+    exit_code = 41
+
+
+class PlanExhausted(SupervisorError):
+    """OOM with nothing left to degrade (remat full, micro-batch 1)."""
+    exit_code = 42
+
+
+class NaNCircuitBreaker(SupervisorError):
+    """``max_consecutive_nan`` skipped steps in a row."""
+    exit_code = 43
+
+
+class NaNHalt(SupervisorError):
+    """Non-finite step under ``on_nan="halt"``."""
+    exit_code = 44
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    """Recovery budgets + policies (all deterministic; ``seed`` keys only
+    the backoff jitter)."""
+    max_restarts: int = 3  # OOM re-plan budget for the whole fit
+    on_nan: str = "skip"  # "skip" (bounded retry then skip) | "halt"
+    nan_retries: int = 1  # same-step clean re-draw attempts before skipping
+    max_consecutive_nan: int = 3  # skipped-in-a-row circuit breaker
+    io_retries: int = 3  # checkpoint-I/O attempts per save
+    stream_retries: int = 2  # transient failures escaping the Pipeline
+    backoff_s: float = 0.02  # base backoff (jittered, doubling)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.on_nan not in ("skip", "halt"):
+            raise ValueError(f"on_nan must be 'skip'|'halt', "
+                             f"got {self.on_nan!r}")
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """One recovery event for the report / ``BENCH_faults.json``."""
+    kind: str  # faults taxonomy label
+    step: int  # global step at which the fault surfaced
+    action: str  # what the supervisor did
+    recovery_s: float = 0.0  # fault caught -> ready to dispatch again
+    steps_lost: int = 0  # completed steps replayed (OOM) or skipped (NaN)
+
+
+def degrade_plan(plan: MBSPlan, ctx: Optional[Dict[str, Any]] = None
+                 ) -> Tuple[MBSPlan, str]:
+    """One deterministic rung down the degradation ladder; returns
+    ``(new_plan, action)``.
+
+    Rungs: escalate ``remat_policy`` up the Layer-5 lattice (micro size
+    pinned — geometry preserved) until "full", then shrink the
+    micro-batch: with a plan ``ctx`` (the launcher's model/budget view)
+    re-derive via ``plan_mbs(calibrate="auto")`` so the Layer-7 negative
+    bound recorded for the OOM drives the new admission; without one,
+    halve (keeping data-parallel divisibility). Raises
+    :class:`PlanExhausted` at the bottom of the ladder."""
+    lattice = remat_lib.POLICIES
+    i = lattice.index(plan.remat_policy)
+    if i + 1 < len(lattice):
+        nxt = lattice[i + 1]
+        action = f"remat {plan.remat_policy}->{nxt}"
+        if ctx and ctx.get("model_cfg") is not None:
+            new = plan_mbs(plan.mini_batch_size,
+                           micro_batch_size=plan.micro_batch_size,
+                           remat_policy=nxt, **_ctx_kw(plan, ctx))
+        else:
+            new = dataclasses.replace(plan, remat_policy=nxt,
+                                      auto_policy=False)
+        return new, action
+
+    dp = max(plan.data_parallel, 1)
+    if plan.micro_batch_size <= max(1, dp):
+        raise PlanExhausted(
+            f"OOM at remat=full, micro={plan.micro_batch_size}, dp={dp}: "
+            "nothing left to degrade (the model itself does not fit — "
+            "MBS cannot shrink it; add model parallelism)")
+    if ctx and ctx.get("model_cfg") is not None \
+            and ctx.get("budget_bytes") is not None:
+        new = plan_mbs(plan.mini_batch_size,
+                       budget_bytes=ctx["budget_bytes"],
+                       remat_policy=plan.remat_policy, calibrate="auto",
+                       **_ctx_kw(plan, ctx))
+        if new.micro_batch_size < plan.micro_batch_size:
+            return new, (f"replan micro {plan.micro_batch_size}->"
+                         f"{new.micro_batch_size} (calibrated)")
+        # bound didn't move admission (e.g. corrupted cache degraded the
+        # lookup to analytic) — fall through to the deterministic halving
+    new_micro = (plan.micro_batch_size // 2 // dp) * dp if dp > 1 \
+        else plan.micro_batch_size // 2
+    if new_micro < max(1, dp):
+        raise PlanExhausted(
+            f"cannot halve micro={plan.micro_batch_size} below the "
+            f"data-parallel extent {dp}")
+    action = f"halve micro {plan.micro_batch_size}->{new_micro}"
+    if ctx and ctx.get("model_cfg") is not None:
+        return plan_mbs(plan.mini_batch_size, micro_batch_size=new_micro,
+                        remat_policy=plan.remat_policy,
+                        **_ctx_kw(plan, ctx)), action
+    n_s = math.ceil(plan.mini_batch_size / new_micro)
+    pad = n_s * new_micro - plan.mini_batch_size
+    norm = ("exact" if (pad and plan.normalization == "paper")
+            else plan.normalization)
+    return dataclasses.replace(
+        plan, micro_batch_size=new_micro, num_micro_batches=n_s, pad=pad,
+        normalization=norm,
+        auto_normalization=plan.auto_normalization or norm != plan.normalization,
+        local_micro=new_micro // dp if dp > 1 else new_micro,
+        auto_micro=False, calibrated=False, correction=None), action
+
+
+def _ctx_kw(plan: MBSPlan, ctx: Dict[str, Any]) -> Dict[str, Any]:
+    """The ``plan_mbs`` kwargs a launcher-style plan context carries."""
+    kw = dict(model_cfg=ctx.get("model_cfg"), seq_len=ctx.get("seq_len"),
+              normalization=plan.normalization,
+              accum_dtype=plan.accum_dtype, mesh=ctx.get("mesh"),
+              optimizer=ctx.get("optimizer", "sgd"),
+              executor=ctx.get("executor", "compiled"),
+              tuning_cache=ctx.get("tuning_cache"))
+    kw.update(ctx.get("mm_kw") or {})
+    return kw
+
+
+class Supervisor:
+    """Wraps a ``(step_fn, pipeline)`` runtime with the Layer-9 recovery
+    state machine (see the module doc).
+
+    ``build(plan) -> (step_fn, pipeline)`` is the rebuild factory the OOM
+    path calls after degrading the plan — the launcher's executor/pipeline
+    construction, closed over model/optimizer; executors should be built
+    with ``guard=True`` so the NaN path has its on-device flag.
+
+    ``plan_ctx`` (optional) is the launcher's planning context
+    (``model_cfg``, ``seq_len``, ``budget_bytes``, ``mesh``, ``optimizer``,
+    ``executor``, ``tuning_cache``, ``mm_kw``): with it, OOM degradation
+    re-derives plans through ``plan_mbs`` and records the negative
+    calibration bound; without it, degradation is purely geometric
+    (remat escalation, then halving).
+    """
+
+    def __init__(self, build: Callable[[MBSPlan], Tuple[Callable, Any]],
+                 plan: MBSPlan, *,
+                 config: Optional[SupervisorConfig] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_keep: Optional[int] = None, log_every: int = 5,
+                 log_fn: Callable = _default_log,
+                 state_shardings: Any = None,
+                 plan_ctx: Optional[Dict[str, Any]] = None):
+        self.build = build
+        self.plan = plan
+        self.config = config or SupervisorConfig()
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.ckpt_keep = ckpt_keep
+        self.log_every = log_every
+        self.log_fn = log_fn
+        self.state_shardings = state_shardings
+        self.plan_ctx = plan_ctx
+        self.step_fn, self.pipeline = build(plan)
+        self.restarts = 0
+        self.records: List[FaultRecord] = []
+        self.history: Dict[int, float] = {}  # step -> loss (completed steps)
+        self._rng = _random.Random(self.config.seed ^ 0x0F0F)
+        self._snapshot: Optional[Tuple[Any, Any, int]] = None
+        self._templates = None
+
+    # -- state anchoring / restore ------------------------------------------
+
+    def _anchor(self, params, opt_state, step: int) -> None:
+        """Host-side copy of the completed state at ``step`` — the restore
+        source of last resort (donation invalidates the device buffers the
+        moment the next step dispatches). Refreshed at checkpoint cadence,
+        so its sync cost amortizes like a save."""
+        self._snapshot = (jax.device_get(params), jax.device_get(opt_state),
+                          step)
+
+    def _save(self, params, opt_state, step: int) -> None:
+        """Checkpoint with bounded transient-I/O retry; a save that still
+        fails is skipped (training continues, durability catches up next
+        cadence). ``InjectedCrash`` propagates — it models process death."""
+        self._anchor(params, opt_state, step)
+        if not self.ckpt_dir:
+            return
+        for attempt in range(self.config.io_retries + 1):
+            try:
+                checkpoint.save(self.ckpt_dir, step,
+                                {"params": params, "opt_state": opt_state},
+                                keep=self.ckpt_keep)
+                return
+            except faults.InjectedCrash:
+                raise
+            except OSError as e:
+                if attempt >= self.config.io_retries:
+                    warnings.warn(f"checkpoint at step {step} failed after "
+                                  f"{attempt + 1} attempts ({e}); continuing")
+                    return
+                self.records.append(FaultRecord(
+                    "transient", step, f"ckpt-io retry {attempt + 1}"))
+                self._backoff(attempt)
+
+    def _restore(self):
+        """(params, opt_state, step) of the newest recoverable completed
+        state: the newest loadable committed checkpoint, else the
+        in-memory anchor."""
+        if self.ckpt_dir:
+            for step in reversed(checkpoint.committed_steps(self.ckpt_dir)):
+                try:
+                    tree = checkpoint.restore(self.ckpt_dir, self._templates,
+                                              step,
+                                              shardings=self.state_shardings)
+                except checkpoint.CheckpointCorruptError:
+                    continue
+                if self.state_shardings is None:
+                    tree = jax.device_put(tree)
+                if self._snapshot is None or step >= self._snapshot[2]:
+                    return tree["params"], tree["opt_state"], step
+                break  # the anchor is newer
+        params, opt_state, step = self._snapshot
+        placed = {"params": params, "opt_state": opt_state}
+        placed = jax.device_put(
+            placed, self.state_shardings) if self.state_shardings is not None \
+            else jax.device_put(placed)
+        return placed["params"], placed["opt_state"], step
+
+    def restore(self, params, opt_state):
+        """Trainer-compatible initial resume: ``(params, opt_state, step)``
+        from the newest *loadable* committed checkpoint in ``ckpt_dir``
+        (torn / checksum-failing ones are skipped), or ``None``."""
+        if not self.ckpt_dir:
+            return None
+        self._templates = jax.eval_shape(
+            lambda p, o: {"params": p, "opt_state": o}, params, opt_state)
+        for step in reversed(checkpoint.committed_steps(self.ckpt_dir)):
+            try:
+                tree = checkpoint.restore(self.ckpt_dir, self._templates,
+                                          step, shardings=self.state_shardings)
+            except checkpoint.CheckpointCorruptError:
+                continue
+            if self.state_shardings is None:
+                tree = jax.device_put(tree)
+            return tree["params"], tree["opt_state"], step
+        return None
+
+    def _backoff(self, attempt: int) -> None:
+        time.sleep(self.config.backoff_s * (1 + self._rng.random())
+                   * (2 ** attempt))
+
+    # -- the recovery state machine -----------------------------------------
+
+    def _recover_oom(self, exc: BaseException, failed_step: int
+                     ) -> Tuple[Any, Any, int]:
+        """Degrade → re-plan (negative bound) → rebuild → restore."""
+        t0 = time.perf_counter()
+        self.restarts += 1
+        if self.restarts > self.config.max_restarts:
+            raise RestartBudgetExceeded(
+                f"{self.restarts - 1} restarts exhausted (last OOM at step "
+                f"{failed_step}: {exc})") from exc
+        ctx = self.plan_ctx
+        cache_path = (ctx or {}).get("tuning_cache")
+        faults.on_replan(cache_path or
+                         (autotune.get_cache().path if ctx else None))
+        if ctx and ctx.get("model_cfg") is not None \
+                and ctx.get("budget_bytes") is not None:
+            # the observed failure becomes a negative calibration bound
+            # BEFORE re-planning, so plan_mbs(calibrate="auto") sees it
+            autotune.record_oom_bound(
+                ctx["model_cfg"], ctx["seq_len"], self.plan.micro_batch_size,
+                ctx["budget_bytes"], remat_policy=self.plan.remat_policy,
+                mesh=ctx.get("mesh"), optimizer=ctx.get("optimizer", "sgd"),
+                executor=ctx.get("executor", "compiled"),
+                cache_path=cache_path,
+                **(ctx.get("mm_kw") or {}))
+        old = self.plan
+        self.plan, action = degrade_plan(old, ctx)
+        self.step_fn, self.pipeline = self.build(self.plan)
+        params, opt_state, resume_step = self._restore()
+        rec = FaultRecord("oom", failed_step, action,
+                          recovery_s=time.perf_counter() - t0,
+                          steps_lost=failed_step - resume_step)
+        self.records.append(rec)
+        if self.log_fn:
+            print(f"[supervisor] OOM at step {failed_step}: {action}; "
+                  f"resuming from step {resume_step} "
+                  f"({rec.recovery_s:.2f}s, {rec.steps_lost} steps replayed)",
+                  flush=True)
+        return params, opt_state, resume_step
+
+    def _handle_nonfinite(self, params, opt_state, metrics, step: int):
+        """Bounded same-batch (clean re-draw) retry, then skip. The guarded
+        update already passed state through untouched, so the returned
+        buffers ARE the pre-step state."""
+        if self.config.on_nan == "halt":
+            raise NaNHalt(f"non-finite gradient at step {step} "
+                          "(on_nan='halt')")
+        t0 = time.perf_counter()
+        for attempt in range(self.config.nan_retries):
+            batch = self.pipeline.rebatch(step)
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            if not float(metrics.get("nonfinite", 0.0)):
+                self.records.append(FaultRecord(
+                    "nonfinite", step, f"retried ok (attempt {attempt + 1})",
+                    recovery_s=time.perf_counter() - t0))
+                return params, opt_state, metrics, False
+        self.records.append(FaultRecord(
+            "nonfinite", step, "skipped", steps_lost=1,
+            recovery_s=time.perf_counter() - t0))
+        return params, opt_state, metrics, True
+
+    # -- the loop -----------------------------------------------------------
+
+    def fit(self, params, opt_state, num_steps: int, *, start_step: int = 0
+            ) -> Tuple[Any, Any, Dict[str, float]]:
+        """Supervised ``Trainer.fit``: same contract (final state + last
+        step's metrics as host floats), plus ``self.records`` /
+        ``self.history`` / ``self.report()`` describing every recovery."""
+        cfg = self.config
+        t_fit = time.perf_counter()
+        self._templates = jax.eval_shape(
+            lambda p, o: {"params": p, "opt_state": o}, params, opt_state)
+        self._anchor(params, opt_state, start_step)
+        step = start_step
+        consecutive_nan = 0
+        stream_failures = 0
+        last: Dict[str, float] = {}
+        while step < num_steps:
+            stream = self.pipeline.batches(num_steps - step, start=step)
+            try:
+                for batch in stream:
+                    params, opt_state, metrics = self.step_fn(
+                        params, opt_state, batch)
+                    if float(metrics.get("nonfinite", 0.0)):
+                        params, opt_state, metrics, skipped = \
+                            self._handle_nonfinite(params, opt_state,
+                                                   metrics, step)
+                        if skipped:
+                            consecutive_nan += 1
+                            if consecutive_nan >= cfg.max_consecutive_nan:
+                                raise NaNCircuitBreaker(
+                                    f"{consecutive_nan} consecutive "
+                                    f"non-finite steps ending at {step}")
+                        else:
+                            consecutive_nan = 0
+                    else:
+                        consecutive_nan = 0
+                    last = {k: float(v) for k, v in metrics.items()}
+                    self.history[step] = last.get("loss", float("nan"))
+                    if self.log_fn and self.log_every \
+                            and step % self.log_every == 0:
+                        self.log_fn(step, last, time.perf_counter() - t_fit)
+                    step += 1
+                    if self.ckpt_every and step % self.ckpt_every == 0 \
+                            and step < num_steps:
+                        self._save(params, opt_state, step)
+            except Exception as exc:
+                if faults.is_oom(exc):
+                    params, opt_state, step = self._recover_oom(exc, step)
+                    continue
+                if faults.is_transient(exc):
+                    stream_failures += 1
+                    if stream_failures > cfg.stream_retries:
+                        raise
+                    self.records.append(FaultRecord(
+                        "transient", step, "stream restart"))
+                    self._backoff(stream_failures - 1)
+                    continue  # re-open the stream at the current step
+                raise  # fatal (and InjectedCrash): propagate unchanged
+        if num_steps > start_step:
+            self._save(params, opt_state, num_steps)
+        return params, opt_state, last
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "restarts": self.restarts,
+            "plan": {"micro_batch_size": self.plan.micro_batch_size,
+                     "num_micro_batches": self.plan.num_micro_batches,
+                     "remat_policy": self.plan.remat_policy},
+            "faults": [dataclasses.asdict(r) for r in self.records],
+            "steps_lost": sum(r.steps_lost for r in self.records),
+            "completed_steps": len(self.history),
+        }

@@ -44,12 +44,13 @@ class Trainer:
 
     def __init__(self, step_fn: Callable, pipeline: Pipeline, *,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 log_every: int = 5, state_shardings: Any = None,
-                 log_fn: Callable = _default_log):
+                 ckpt_keep: Optional[int] = None, log_every: int = 5,
+                 state_shardings: Any = None, log_fn: Callable = _default_log):
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        self.ckpt_keep = ckpt_keep
         self.log_every = log_every
         self.state_shardings = state_shardings
         self.log_fn = log_fn
@@ -60,22 +61,35 @@ class Trainer:
         if not self.ckpt_dir:
             return None
         return checkpoint.save(self.ckpt_dir, step,
-                               {"params": params, "opt_state": opt_state})
+                               {"params": params, "opt_state": opt_state},
+                               keep=self.ckpt_keep)
 
     def restore(self, params_template, opt_state_template
                 ) -> Optional[Tuple[Any, Any, int]]:
-        """(params, opt_state, start_step) from the latest checkpoint in
-        ``ckpt_dir``, placed per ``state_shardings`` (default device when
-        none) — or ``None`` when there is nothing to resume from."""
+        """(params, opt_state, start_step) from the newest *loadable*
+        committed checkpoint in ``ckpt_dir``, placed per
+        ``state_shardings`` (default device when none) — or ``None`` when
+        there is nothing to resume from. Torn writes are invisible
+        (uncommitted — no manifest) and checksum-failing checkpoints are
+        skipped in favor of the previous committed step."""
         if not self.ckpt_dir:
             return None
-        step = checkpoint.latest_step(self.ckpt_dir)
-        if step is None:
-            return None
+        for step in reversed(checkpoint.committed_steps(self.ckpt_dir)):
+            try:
+                tree = self._restore_step(step, params_template,
+                                          opt_state_template)
+            except checkpoint.CheckpointCorruptError:
+                continue  # fall back to the previous committed step
+            if self.state_shardings is None:
+                tree = jax.device_put(tree)
+            return tree["params"], tree["opt_state"], step
+        return None
+
+    def _restore_step(self, step: int, params_template, opt_state_template):
         template = {"params": params_template,
                     "opt_state": opt_state_template}
         try:
-            tree = checkpoint.restore(self.ckpt_dir, template, step,
+            return checkpoint.restore(self.ckpt_dir, template, step,
                                       shardings=self.state_shardings)
         except KeyError:
             # legacy params-only checkpoint: restore what is there and
@@ -88,10 +102,7 @@ class Trainer:
                       else self.state_shardings)
             params = checkpoint.restore(self.ckpt_dir, params_template,
                                         step, shardings=pshard)
-            tree = {"params": params, "opt_state": opt_state_template}
-        if self.state_shardings is None:
-            tree = jax.device_put(tree)
-        return tree["params"], tree["opt_state"], step
+            return {"params": params, "opt_state": opt_state_template}
 
     # -- the loop -----------------------------------------------------------
 

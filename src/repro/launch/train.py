@@ -13,14 +13,26 @@ N_Sμ; without it the micro-batch size is derived from the analytic memory
 model (``--hbm-budget-gb``). Ragged mini-batches (N_B % N_μ != 0) are
 padded + masked, not rejected.
 
+With ``--supervise`` the whole runtime (executor + pipeline) is built
+through a rebuild factory and driven by the engine Layer-9
+:class:`engine.Supervisor` instead of the bare ``Trainer``: executors run
+with the on-device finite-guard, runtime OOM degrades the plan (remat
+escalation, then calibrated micro-shrink — the failure is recorded as a
+negative bound in the tuning cache) and resumes from the last completed
+state, non-finite steps are retried/skipped per ``--on-nan``, and
+supervisor give-ups map onto the documented exit codes (40–44,
+DESIGN.md §Fault tolerance).
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
       --reduced --steps 20 --mini-batch 16 [--microbatches 4] \
       [--executor compiled|streaming|fused] \
-      [--ckpt-dir /tmp/ckpt --ckpt-every 10 --resume]
+      [--ckpt-dir /tmp/ckpt --ckpt-every 10 --resume] \
+      [--supervise --max-restarts 3 --on-nan skip --ckpt-keep 3]
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -76,22 +88,88 @@ def build_plan(cfg, args, optimizer=None, mesh=None) -> engine.MBSPlan:
         **optim.memory_model_kw(optimizer, fused=args.executor == "flat"))
 
 
-def build_executor(cfg, plan, args, optimizer=None, mesh=None):
+def build_executor(cfg, plan, args, optimizer=None, mesh=None, guard=False):
     """The step path used by main() — also exercised directly by the
     end-to-end ragged-tail test. The loss compiles under the plan's
     chosen remat policy, so the step matches what the planner admitted.
     With a data-parallel ``mesh`` (>1 worker on the batch axes) every
     ``--executor`` routes through the :class:`engine.ShardedExecutor`
     wrapper: per-device accumulation, ONE gradient all-reduce per
-    mini-batch."""
+    mini-batch. ``guard=True`` (the supervised mode) adds the on-device
+    finite-check to the update, surfacing a ``nonfinite`` metric."""
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     loss_fn = steps.make_loss_fn(cfg, dtype=dtype,
                                  remat_policy=plan.remat_policy)
     opt = optimizer or default_optimizer(args)
     if mesh is not None and mesh_lib.data_parallel_size(mesh) > 1:
         return engine.ShardedExecutor(loss_fn, opt, plan, mesh=mesh,
-                                      inner=args.executor), opt
-    return engine.get_executor(args.executor)(loss_fn, opt, plan), opt
+                                      inner=args.executor, guard=guard), opt
+    return engine.get_executor(args.executor)(loss_fn, opt, plan,
+                                              guard=guard), opt
+
+
+def make_build(cfg, args, ds, mesh, host_dp, opt):
+    """``plan -> (step_fn, pipeline)``: one factory for all three runtime
+    shapes (host-DP sharded, single-device streaming, GSPMD compiled).
+    ``main()`` calls it once for the plain ``Trainer``; the Supervisor
+    keeps it as the rebuild hook its OOM path re-invokes after degrading
+    the plan — everything plan-dependent (executor, jit, pipeline split
+    geometry) is reconstructed from scratch for the new plan."""
+    guard = args.supervise
+
+    def build(plan):
+        executor, _ = build_executor(cfg, plan, args, optimizer=opt,
+                                     mesh=mesh if host_dp else None,
+                                     guard=guard)
+        if host_dp:
+            # data-parallel host mesh (engine Layer 6): per-device
+            # accumulation of local_micro samples, ONE deferred gradient
+            # all-reduce per mini-batch; the Pipeline stages with the
+            # mesh batch shardings
+            pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                       sharding=executor.batch_shardings)
+            return executor.step_split, pipeline
+        if args.executor == "streaming":
+            # eager paper pipeline: whole split mini-batches staged to the
+            # device, micro-batches sliced on device
+            pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                       sharding=executor.device)
+            return executor.step_split, pipeline
+        # GSPMD: donate params/opt-state (reused in place) AND the spent
+        # split batch (freed for step-❺ temporaries); the loop threads
+        # state and never touches a donated buffer again
+        donate = not args.no_donate
+        jitted = jax.jit(executor.make_train_step(),
+                         donate_argnums=(0, 1, 2) if donate else ())
+
+        def step(params, opt_state, batch):
+            # tracing is lazy (first call) and the step body resolves
+            # PartitionSpecs against the ambient mesh — keep it active at
+            # dispatch like the pre-factory `with mesh:` block did
+            with mesh:
+                return jitted(params, opt_state, batch)
+
+        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
+                                   mesh=mesh)
+        return step, pipeline
+
+    return build
+
+
+def make_plan_ctx(cfg, args, mesh, optimizer):
+    """The Supervisor's planning context: everything ``build_plan`` knows,
+    so an OOM re-plan goes through the same ``plan_mbs`` the launcher used
+    — and the observed failure lands in the same tuning-cache key."""
+    budget = (int(args.hbm_budget_gb * 1024 ** 3)
+              if args.hbm_budget_gb else None)
+    dtype_bytes = 4 if args.dtype == "float32" else 2
+    return dict(
+        model_cfg=cfg, seq_len=args.seq, budget_bytes=budget, mesh=mesh,
+        executor=args.executor, tuning_cache=args.tuning_cache,
+        mm_kw=dict(act_bytes=dtype_bytes, remat=not args.reduced,
+                   fsdp_params=args.mesh == "production",
+                   **optim.memory_model_kw(
+                       optimizer, fused=args.executor == "flat")))
 
 
 def run_trainer(trainer, params, opt_state, args):
@@ -110,7 +188,36 @@ def run_trainer(trainer, params, opt_state, args):
         print(f"checkpointed to {args.ckpt_dir}", flush=True)
     stats = trainer.pipeline.stats
     print(f"input-wait fraction {stats.input_wait_fraction:.3f} "
-          f"({stats.wait_s:.2f}s of {stats.elapsed_s:.2f}s)", flush=True)
+          f"({stats.wait_s:.2f}s of {stats.elapsed_s:.2f}s, "
+          f"{stats.retries} producer retries)", flush=True)
+    return params, opt_state, last
+
+
+def run_supervised(supervisor, params, opt_state, args):
+    """Resume + supervised fit; SupervisorError exit codes (40–44) become
+    the process exit status so orchestration can tell "shrink the job"
+    (PlanExhausted) from "investigate the data" (NaNCircuitBreaker)."""
+    start = 0
+    if args.resume:
+        restored = supervisor.restore(params, opt_state)
+        if restored is not None:
+            params, opt_state, start = restored
+            print(f"resumed from step {start}", flush=True)
+        else:
+            print("no checkpoint to resume from; starting fresh", flush=True)
+    try:
+        params, opt_state, last = supervisor.fit(params, opt_state,
+                                                 args.steps, start_step=start)
+    except engine.SupervisorError as e:
+        print(f"[supervisor] giving up: {e}", flush=True)
+        sys.exit(e.exit_code)
+    rep = supervisor.report()
+    print(f"[supervisor] done: restarts={rep['restarts']} "
+          f"steps_lost={rep['steps_lost']} "
+          f"plan: micro={rep['plan']['micro_batch_size']} "
+          f"remat={rep['plan']['remat_policy']}", flush=True)
+    if args.ckpt_dir:
+        print(f"checkpointed to {args.ckpt_dir}", flush=True)
     return params, opt_state, last
 
 
@@ -156,6 +263,20 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="restore params+opt state from the latest "
                          "checkpoint in --ckpt-dir and continue from its step")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the Layer-9 fault-tolerant Supervisor: "
+                         "guarded executors, OOM degrade-and-resume, "
+                         "bounded retries; give-ups exit 40-44")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="OOM re-plan budget for the whole run "
+                         "(--supervise only)")
+    ap.add_argument("--on-nan", choices=["skip", "halt"], default="skip",
+                    help="non-finite-gradient policy: bounded retry then "
+                         "skip behind a circuit breaker, or halt "
+                         "immediately (--supervise only)")
+    ap.add_argument("--ckpt-keep", type=int, default=None, metavar="K",
+                    help="keep only the newest K committed checkpoints "
+                         "(default: keep all)")
     ap.add_argument("--no-donate", action="store_true",
                     help="do not donate params/opt-state/batch at the "
                          "step jit boundary (A/B runs that reuse state)")
@@ -187,68 +308,54 @@ def main():
     mesh = build_mesh(args)
     dp = mesh_lib.data_parallel_size(mesh)
     host_dp = args.mesh == "host" and dp > 1
-    plan = build_plan(cfg, args, mesh=mesh)
+    opt = default_optimizer(args)
+    plan = build_plan(cfg, args, optimizer=opt, mesh=mesh)
     print(plan.describe(), flush=True)
-    executor, opt = build_executor(cfg, plan, args,
-                                   mesh=mesh if host_dp else None)
 
     init = encdec.init_params if cfg.is_encdec else transformer.init_params
     ds = LMDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
 
-    if host_dp:
-        # data-parallel host mesh (engine Layer 6): every executor runs
-        # through the ShardedExecutor — per-device accumulation of
-        # local_micro samples, ONE deferred gradient all-reduce per
-        # mini-batch; the Pipeline stages with the mesh batch shardings
+    gspmd = not host_dp and args.executor != "streaming"
+    if gspmd:
+        with mesh:
+            pshapes = jax.eval_shape(lambda k: init(cfg, k),
+                                     jax.random.PRNGKey(0))
+            pspecs = sharding.param_specs(pshapes, mesh)
+            params = jax.jit(lambda k: init(cfg, k),
+                             out_shardings=sharding.named(pspecs, mesh))(
+                jax.random.PRNGKey(0))
+            opt_specs = sharding.param_specs(
+                jax.eval_shape(opt.init, pshapes), mesh)
+            opt_state = jax.jit(opt.init, out_shardings=sharding.named(
+                opt_specs, mesh))(params)
+        state_shardings = {"params": sharding.named(pspecs, mesh),
+                           "opt_state": sharding.named(opt_specs, mesh)}
+    else:
         params = init(cfg, jax.random.PRNGKey(0))
-        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
-                                   sharding=executor.batch_shardings)
-        trainer = engine.Trainer(executor.step_split, pipeline,
-                                 ckpt_dir=args.ckpt_dir,
-                                 ckpt_every=args.ckpt_every,
-                                 log_every=args.log_every)
-        run_trainer(trainer, params, opt.init(params), args)
+        opt_state = opt.init(params)
+        state_shardings = None
+
+    build = make_build(cfg, args, ds, mesh, host_dp, opt)
+
+    if args.supervise:
+        supervisor = engine.Supervisor(
+            build, plan,
+            config=engine.SupervisorConfig(max_restarts=args.max_restarts,
+                                           on_nan=args.on_nan),
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            ckpt_keep=args.ckpt_keep, log_every=args.log_every,
+            state_shardings=state_shardings,
+            plan_ctx=make_plan_ctx(cfg, args, mesh, opt))
+        run_supervised(supervisor, params, opt_state, args)
         return
 
-    if args.executor == "streaming":
-        # eager paper pipeline: single-device double-buffered streaming;
-        # the Pipeline stages whole split mini-batches to the device, the
-        # executor slices micro-batches on device
-        params = init(cfg, jax.random.PRNGKey(0))
-        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
-                                   sharding=executor.device)
-        trainer = engine.Trainer(executor.step_split, pipeline,
-                                 ckpt_dir=args.ckpt_dir,
-                                 ckpt_every=args.ckpt_every,
-                                 log_every=args.log_every)
-        run_trainer(trainer, params, opt.init(params), args)
-        return
-
-    with mesh:
-        pshapes = jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
-        pspecs = sharding.param_specs(pshapes, mesh)
-        params = jax.jit(lambda k: init(cfg, k),
-                         out_shardings=sharding.named(pspecs, mesh))(
-            jax.random.PRNGKey(0))
-        opt_specs = sharding.param_specs(
-            jax.eval_shape(opt.init, pshapes), mesh)
-        opt_state = jax.jit(opt.init, out_shardings=sharding.named(
-            opt_specs, mesh))(params)
-        # donate params/opt-state (reused in place for the new state) AND
-        # the spent split batch (freed for step-❺ temporaries); the Trainer
-        # threads state and never touches a donated buffer again
-        donate = not args.no_donate
-        step = jax.jit(executor.make_train_step(),
-                       donate_argnums=(0, 1, 2) if donate else ())
-        pipeline = engine.Pipeline(ds, plan, prefetch=args.prefetch,
-                                   mesh=mesh)
-        trainer = engine.Trainer(
-            step, pipeline, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every, log_every=args.log_every,
-            state_shardings={
-                "params": sharding.named(pspecs, mesh),
-                "opt_state": sharding.named(opt_specs, mesh)})
-        run_trainer(trainer, params, opt_state, args)
+    step_fn, pipeline = build(plan)
+    trainer = engine.Trainer(step_fn, pipeline, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every,
+                             ckpt_keep=args.ckpt_keep,
+                             log_every=args.log_every,
+                             state_shardings=state_shardings)
+    run_trainer(trainer, params, opt_state, args)
 
 
 if __name__ == "__main__":

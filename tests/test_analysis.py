@@ -206,6 +206,9 @@ LINT_FIXTURES = {
                 "out = pl.pallas_call(kernel, out_shape=s)(x)\n", "kernels"),
     "LINT005": ("from repro.kernels.grad_accum import grad_accum\n",
                 "general"),
+    # one-liner handler so the noqa-waiver fixture lands on the except line
+    # (LINT006's waiver must sit there, not anywhere in the handler body)
+    "LINT006": ("try: x = 1\nexcept Exception: pass\n", "engine"),
 }
 
 
@@ -229,6 +232,17 @@ def test_lint_noqa_waives(rule):
 
 def test_lint001_ignores_cold_code():
     src, _ = LINT_FIXTURES["LINT001"]
+    assert analysis.lint_source(src, "fixture.py", category="general") == []
+
+
+def test_lint006_taxonomy_routing_passes():
+    src = ("try:\n    x = 1\nexcept Exception as e:\n"
+           "    if faults.is_oom(e):\n        raise\n")
+    assert analysis.lint_source(src, "fixture.py", category="engine") == []
+
+
+def test_lint006_ignores_engine_external_code():
+    src, _ = LINT_FIXTURES["LINT006"]
     assert analysis.lint_source(src, "fixture.py", category="general") == []
 
 

@@ -1,0 +1,533 @@
+"""Fault-tolerant runtime (engine Layer 9): the recovery conformance matrix.
+
+Every recovery path of the :class:`engine.Supervisor` is proven against
+the deterministic fault-injection harness (``engine.faults``) on the tiny
+conformance model, across the full executor grid (+ the sharded wrapper
+under ``@pytest.mark.mesh``):
+
+  * **negative control** — with no faults injected, the supervised loop
+    is *bitwise identical* to the unsupervised ``Trainer`` (the guard-off
+    executors compile the same program; supervision must be invisible);
+  * **OOM** — an injected ``RESOURCE_EXHAUSTED`` at dispatch degrades the
+    plan deterministically (remat escalation first, then micro-shrink)
+    and the post-recovery trajectory equals an *uninterrupted* run at the
+    degraded plan, within the harness per-dtype tolerances;
+  * **non-finite gradients** — the on-device guard skips the poisoned
+    update (params/opt-state provably untouched), the bounded clean
+    re-draw retry recovers the exact clean trajectory, and the
+    consecutive-skip circuit breaker / ``on_nan="halt"`` raise the
+    documented ``SupervisorError`` subclasses (exit codes 40–44);
+  * **transient worker/stream faults** — absorbed by the Pipeline's
+    seeded-backoff retries (counted in ``stats.retries``) or by the
+    supervisor's bounded stream restarts, with the data stream unchanged;
+  * **crash-safe checkpoints** — torn writes (crash between npz rename
+    and manifest commit) are invisible to ``committed_steps``/restore,
+    CRC catches silent payload corruption, orphaned npz files don't break
+    ``latest_step``, keep-last-k rotation holds, and checkpoint-I/O
+    faults are retried then skipped without sinking training;
+  * **calibrated re-plan** — an OOM at a calibrated plan records a
+    negative bound in the tuning cache and triggers EXACTLY ONE re-plan
+    whose admission is strictly smaller (the injected fault persists
+    until admission actually drops below it), even when the cache file is
+    corrupted mid-recovery.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import (EXECUTOR_GRID, GOLDEN_LOSSES, ToyDataset,
+                      assert_trees_close, host_mesh, make_executor,
+                      make_sharded_executor, max_abs_err, tiny_loss_fn,
+                      tiny_optimizer, tiny_params)
+from repro import configs, engine
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core import memory_model
+from repro.engine import faults
+
+MINI, STEPS = 10, 5
+
+
+def make_plan(**kw):
+    base = dict(micro_batch_size=4, normalization="exact")
+    base.update(kw)
+    return engine.plan_mbs(MINI, **base)
+
+
+def fresh_state():
+    params = tiny_params()
+    return params, tiny_optimizer().init(params)
+
+
+def make_build(executor: str, *, guard: bool = True, mesh=None,
+               pipeline_kw=None):
+    """The launcher-shaped rebuild factory over the tiny model."""
+    ds = ToyDataset()
+
+    def build(plan):
+        if mesh is not None:
+            ex = make_sharded_executor("compiled", tiny_loss_fn,
+                                       tiny_optimizer(), plan, mesh,
+                                       guard=guard)
+            sharding = ex.batch_shardings
+        else:
+            ex = make_executor(executor, tiny_loss_fn, tiny_optimizer(),
+                               plan, guard=guard)
+            sharding = None
+        pipeline = engine.Pipeline(ds, plan, prefetch=0, sharding=sharding,
+                                   **(pipeline_kw or {}))
+        return ex.step_split, pipeline
+
+    return build
+
+
+def run_supervised(build, specs=(), *, plan=None, sup_kw=None, steps=STEPS,
+                   **sup_ctor_kw):
+    plan = plan or make_plan()
+    sup = engine.Supervisor(build, plan,
+                            config=engine.SupervisorConfig(**(sup_kw or {})),
+                            log_fn=None, **sup_ctor_kw)
+    params, opt_state = fresh_state()
+    with faults.inject(faults.FaultPlan(*specs)) as fp:
+        params, opt_state, last = sup.fit(params, opt_state, steps)
+    return sup, fp, params, opt_state, last
+
+
+def run_unsupervised(build, plan, steps=STEPS):
+    step_fn, pipeline = build(plan)
+    trainer = engine.Trainer(step_fn, pipeline, log_fn=None)
+    params, opt_state = fresh_state()
+    return trainer.fit(params, opt_state, steps)
+
+
+# ---------------------------------------------------------------------------
+# negative control: supervision is invisible when nothing goes wrong
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_negative_control_bitwise(executor):
+    build = make_build(executor, guard=False)
+    sup, fp, p_sup, s_sup, _ = run_supervised(build)
+    p_ref, s_ref, _ = run_unsupervised(build, make_plan())
+    assert fp.fired == []
+    assert sup.restarts == 0 and sup.records == []
+    assert max_abs_err(p_sup, p_ref) == 0.0
+    assert max_abs_err(s_sup, s_ref) == 0.0
+
+
+def test_supervised_golden_trajectory():
+    sup, _, _, _, _ = run_supervised(make_build("compiled"))
+    np.testing.assert_allclose(
+        [sup.history[i] for i in range(STEPS)], GOLDEN_LOSSES, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# OOM: degrade + re-plan + resume == uninterrupted run at the degraded plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_oom_recovery_matches_degraded_golden(executor):
+    # remat pinned to "full": degradation takes the micro-shrink rung, so
+    # the recovered run executes a genuinely different schedule (4 -> 2)
+    plan = make_plan(remat_policy="full")
+    build = make_build(executor)
+    sup, fp, p_got, s_got, _ = run_supervised(build, [faults.oom_at(2)],
+                                              plan=plan)
+    assert fp.fired_kinds() == ["oom"]
+    assert sup.restarts == 1
+    assert sup.plan.micro_batch_size == 2
+    [rec] = [r for r in sup.records if r.kind == "oom"]
+    assert rec.action == "halve micro 4->2"
+    degraded, _ = engine.degrade_plan(plan)
+    p_ref, s_ref, _ = run_unsupervised(build, degraded)
+    assert_trees_close(p_got, p_ref, what=f"{executor} params after OOM")
+    assert_trees_close(s_got, s_ref, what=f"{executor} opt state after OOM")
+
+
+def test_oom_remat_escalation_first():
+    # default plan sits mid-lattice: the first rung is more recompute at
+    # UNCHANGED geometry (the paper's point: don't give back batch)
+    plan = make_plan()
+    sup, _, p_got, _, _ = run_supervised(make_build("compiled"),
+                                         [faults.oom_at(2)], plan=plan)
+    [rec] = sup.records
+    assert rec.kind == "oom" and "remat" in rec.action
+    assert sup.plan.micro_batch_size == plan.micro_batch_size
+    assert sup.plan.remat_policy != plan.remat_policy
+    degraded, _ = engine.degrade_plan(plan)
+    p_ref, _, _ = run_unsupervised(make_build("compiled"), degraded)
+    assert_trees_close(p_got, p_ref, what="params after remat escalation")
+
+
+def test_oom_restart_budget_and_plan_exhaustion():
+    plan = make_plan(remat_policy="full")
+    build = make_build("compiled")
+    with pytest.raises(engine.RestartBudgetExceeded):
+        run_supervised(build, [faults.oom_at(0, times=99)], plan=plan,
+                       sup_kw={"max_restarts": 1})
+    # micro=1 at remat=full: nothing left on the ladder
+    with pytest.raises(engine.PlanExhausted):
+        run_supervised(build, [faults.oom_at(0, times=99)],
+                       plan=make_plan(micro_batch_size=1,
+                                      remat_policy="full"),
+                       sup_kw={"max_restarts": 99})
+
+
+# ---------------------------------------------------------------------------
+# non-finite gradients: guard + retry/skip + circuit breaker
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_nan_retry_recovers_clean_trajectory(executor):
+    build = make_build(executor)
+    sup, fp, p_got, s_got, _ = run_supervised(build, [faults.nan_at(1)])
+    assert fp.fired_kinds() == ["nan"]
+    [rec] = sup.records
+    assert rec.kind == "nonfinite" and rec.action.startswith("retried ok")
+    p_ref, s_ref, _ = run_unsupervised(build, make_plan())
+    assert max_abs_err(p_got, p_ref) == 0.0, \
+        f"{executor}: clean re-draw retry must be invisible"
+    assert max_abs_err(s_got, s_ref) == 0.0
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_nan_skip_leaves_state_untouched(executor):
+    build = make_build(executor)
+    # retries off: the clean re-draw (which bypasses injection by
+    # construction) never runs, so the poisoned step must be skipped
+    sup, _, p_got, s_got, _ = run_supervised(
+        build, [faults.nan_at(1)], sup_kw={"nan_retries": 0})
+    [rec] = sup.records
+    assert rec.action == "skipped" and rec.steps_lost == 1
+    # expected = the same stream with step 1's update elided entirely
+    # (the guarded update must not have touched params or opt state)
+    ds = ToyDataset()
+    plan = make_plan()
+    ex = make_executor(executor, tiny_loss_fn, tiny_optimizer(), plan,
+                       guard=True)
+    p_ref, s_ref = fresh_state()
+    for i in (0, 2, 3, 4):
+        batch = jax.device_put(plan.split(ds.batch(MINI, i)))
+        p_ref, s_ref, _ = ex.step_split(p_ref, s_ref, batch)
+    assert max_abs_err(p_got, p_ref) == 0.0, \
+        f"{executor}: skipped step must leave state bitwise untouched"
+    assert max_abs_err(s_got, s_ref) == 0.0
+
+
+def test_nan_circuit_breaker():
+    with pytest.raises(engine.NaNCircuitBreaker):
+        run_supervised(make_build("compiled"),
+                       [faults.nan_at(None, times=99)],
+                       sup_kw={"nan_retries": 0, "max_consecutive_nan": 2})
+
+
+def test_on_nan_halt():
+    with pytest.raises(engine.NaNHalt):
+        run_supervised(make_build("compiled"), [faults.nan_at(1)],
+                       sup_kw={"on_nan": "halt"})
+
+
+def test_exit_code_contract():
+    assert engine.SupervisorError.exit_code == 40
+    assert engine.RestartBudgetExceeded.exit_code == 41
+    assert engine.PlanExhausted.exit_code == 42
+    assert engine.NaNCircuitBreaker.exit_code == 43
+    assert engine.NaNHalt.exit_code == 44
+    for sub in (engine.RestartBudgetExceeded, engine.PlanExhausted,
+                engine.NaNCircuitBreaker, engine.NaNHalt):
+        assert issubclass(sub, engine.SupervisorError)
+
+
+# ---------------------------------------------------------------------------
+# transient worker / stream failures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTOR_GRID)
+def test_worker_fault_absorbed_by_pipeline_retry(executor):
+    build = make_build(executor)
+    sup, fp, p_got, _, _ = run_supervised(build, [faults.worker_at(1)])
+    assert fp.fired_kinds() == ["worker"]
+    assert sup.pipeline.stats.retries == 1  # surfaced next to wait stats
+    assert sup.restarts == 0 and sup.records == []
+    p_ref, _, _ = run_unsupervised(build, make_plan())
+    assert max_abs_err(p_got, p_ref) == 0.0, \
+        f"{executor}: absorbed retry must not perturb the data stream"
+
+
+def test_stream_restart_resumes_midstream():
+    # pipeline retries disabled: the transient escapes to the supervisor,
+    # which re-opens the stream at the current step (bounded restarts)
+    build = make_build("compiled", pipeline_kw={"retries": 0})
+    sup, fp, p_got, _, _ = run_supervised(build,
+                                          [faults.worker_at(2, times=2)])
+    assert fp.fired_kinds() == ["worker", "worker"]
+    assert [r.action for r in sup.records] == ["stream restart"] * 2
+    p_ref, _, _ = run_unsupervised(build, make_plan())
+    assert max_abs_err(p_got, p_ref) == 0.0
+
+
+def test_stream_restart_budget_exhausts():
+    build = make_build("compiled", pipeline_kw={"retries": 0})
+    with pytest.raises(faults.TransientWorkerError):
+        run_supervised(build, [faults.worker_at(2, times=99)],
+                       sup_kw={"stream_retries": 2})
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints
+# ---------------------------------------------------------------------------
+
+def _tree():
+    params, opt_state = fresh_state()
+    return {"params": params, "opt_state": opt_state}
+
+
+def test_torn_write_is_invisible_then_resume_matches_clean(tmp_path):
+    ckpt_dir = str(tmp_path / "ckpt")
+    build = make_build("compiled")
+    sup = engine.Supervisor(build, make_plan(), log_fn=None,
+                            ckpt_dir=ckpt_dir, ckpt_every=1)
+    params, opt_state = fresh_state()
+    with faults.inject(faults.FaultPlan(faults.torn_write_at(2))):
+        with pytest.raises(faults.InjectedCrash):
+            sup.fit(params, opt_state, STEPS)
+    # the crash hit between npz rename and manifest commit: the orphaned
+    # npz is on disk but MUST be invisible to the commit record
+    assert os.path.exists(os.path.join(ckpt_dir, "ckpt_00000002.npz"))
+    assert not os.path.exists(os.path.join(ckpt_dir, "ckpt_00000002.json"))
+    assert ckpt_lib.committed_steps(ckpt_dir) == [1]
+    assert ckpt_lib.latest_step(ckpt_dir) == 1
+
+    # "process restart": a fresh supervisor resumes from the commit record
+    sup2 = engine.Supervisor(build, make_plan(), log_fn=None,
+                             ckpt_dir=ckpt_dir, ckpt_every=1)
+    params, opt_state = fresh_state()
+    restored = sup2.restore(params, opt_state)
+    assert restored is not None and restored[2] == 1
+    p_got, s_got, _ = sup2.fit(restored[0], restored[1], STEPS,
+                               start_step=1)
+    p_ref, _, _ = run_unsupervised(build, make_plan())
+    assert max_abs_err(p_got, p_ref) == 0.0, \
+        "resume-after-crash must replay onto the clean trajectory"
+
+
+def test_crc_detects_silent_payload_corruption(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    ckpt_lib.save(d, 1, tree)
+    ckpt_lib.save(d, 2, tree)
+    # silently corrupt step 2's payload: valid npz, same keys, wrong bytes
+    path = os.path.join(d, "ckpt_00000002.npz")
+    data = dict(np.load(path))
+    data[list(data)[0]] = data[list(data)[0]] + 1.0
+    with open(path, "wb") as f:
+        np.savez(f, **data)
+    with pytest.raises(ckpt_lib.CheckpointCorruptError):
+        ckpt_lib.restore(d, tree, 2)
+    # the resume walk skips it and lands on the older good checkpoint
+    build = make_build("compiled")
+    sup = engine.Supervisor(build, make_plan(), log_fn=None, ckpt_dir=d)
+    restored = sup.restore(*fresh_state())
+    assert restored is not None and restored[2] == 1
+
+
+def test_orphan_npz_does_not_break_latest_step(tmp_path):
+    d = str(tmp_path)
+    ckpt_lib.save(d, 3, _tree())
+    # an orphaned npz with no manifest (the pre-crash-safety failure mode)
+    with open(os.path.join(d, "ckpt_00000007.npz"), "wb") as f:
+        np.savez(f, junk=np.zeros(3))
+    assert ckpt_lib.committed_steps(d) == [3]
+    assert ckpt_lib.latest_step(d) == 3
+    restored = ckpt_lib.restore(d, _tree())
+    assert restored is not None
+
+
+def test_keep_last_k_rotation(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2, 3, 4):
+        ckpt_lib.save(d, step, _tree(), keep=2)
+    assert ckpt_lib.committed_steps(d) == [3, 4]
+    names = sorted(os.listdir(d))
+    assert names == ["ckpt_00000003.json", "ckpt_00000003.npz",
+                     "ckpt_00000004.json", "ckpt_00000004.npz"]
+
+
+def test_trainer_ckpt_keep_and_corrupt_skip(tmp_path):
+    d = str(tmp_path)
+    build = make_build("compiled", guard=False)
+    step_fn, pipeline = build(make_plan())
+    trainer = engine.Trainer(step_fn, pipeline, ckpt_dir=d, ckpt_every=1,
+                             ckpt_keep=3, log_fn=None)
+    trainer.fit(*fresh_state(), STEPS)
+    assert ckpt_lib.committed_steps(d) == [3, 4, 5]
+    # tear the newest: Trainer.restore must fall back to the next one
+    os.remove(os.path.join(d, "ckpt_00000005.json"))
+    restored = trainer.restore(*fresh_state())
+    assert restored is not None and restored[2] == 4
+
+
+def test_ckpt_io_fault_retried_then_skipped(tmp_path):
+    ckpt_dir = str(tmp_path / "ckpt")
+    build = make_build("compiled")
+    # one transient I/O failure: absorbed by the save retry loop
+    sup, _, _, _, _ = run_supervised(build, [faults.ckpt_io_at(2)],
+                                     ckpt_dir=ckpt_dir, ckpt_every=2)
+    assert [r.action for r in sup.records] == ["ckpt-io retry 1"]
+    assert ckpt_lib.committed_steps(ckpt_dir) == [2, 4, STEPS]
+
+    # persistent I/O failure: the save is SKIPPED (training continues,
+    # durability catches up at the next cadence), never fatal
+    ckpt_dir2 = str(tmp_path / "ckpt2")
+    with pytest.warns(UserWarning, match="checkpoint at step 2 failed"):
+        sup, _, _, _, _ = run_supervised(
+            build, [faults.ckpt_io_at(2, times=99)], ckpt_dir=ckpt_dir2,
+            ckpt_every=2, sup_kw={"io_retries": 1})
+    assert ckpt_lib.committed_steps(ckpt_dir2) == [4, STEPS]
+
+
+# ---------------------------------------------------------------------------
+# calibrated re-plan: the OOM feeds the Layer-7 cache as a negative bound
+# ---------------------------------------------------------------------------
+
+def _calibrated_setup(tmp_path):
+    cfg = configs.get_reduced("qwen2-1.5b")
+    seq = 32
+    cache_path = str(tmp_path / "tuning.json")
+    est = memory_model.estimate(cfg, seq, remat_policy="full")
+    budget = est.total(4)  # admits a handful of samples at remat=full
+    plan = engine.plan_mbs(16, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=budget, remat_policy="full",
+                           calibrate="auto", tuning_cache=cache_path)
+    ctx = dict(model_cfg=cfg, seq_len=seq, budget_bytes=budget,
+               executor="compiled", tuning_cache=cache_path)
+    ds = ToyDataset()
+
+    def build(pl):
+        ex = make_executor("compiled", tiny_loss_fn, tiny_optimizer(), pl,
+                           guard=True)
+        return ex.step_split, engine.Pipeline(ds, pl, prefetch=0)
+
+    return plan, ctx, build, cache_path
+
+
+def test_calibrated_oom_exactly_one_replan_strictly_smaller(tmp_path):
+    plan, ctx, build, _ = _calibrated_setup(tmp_path)
+    assert plan.micro_batch_size >= 2
+    sup = engine.Supervisor(build, plan, log_fn=None, plan_ctx=ctx)
+    params, opt_state = fresh_state()
+    # the fault persists until admission genuinely drops below the size
+    # that OOMed — so a re-plan that failed to shrink would fire it again
+    specs = [faults.oom_at(1, times=99,
+                           min_micro=plan.micro_batch_size)]
+    with faults.inject(faults.FaultPlan(*specs)) as fp:
+        sup.fit(params, opt_state, 4)
+    assert sup.restarts == 1, "must re-plan EXACTLY once"
+    assert fp.fired_kinds() == ["oom"]
+    assert sup.plan.micro_batch_size < plan.micro_batch_size, \
+        "re-planned admission must be strictly smaller"
+    [rec] = [r for r in sup.records if r.kind == "oom"]
+    assert "replan" in rec.action or "halve" in rec.action
+
+
+def test_corrupt_cache_never_sinks_recovery(tmp_path):
+    plan, ctx, build, cache_path = _calibrated_setup(tmp_path)
+    sup = engine.Supervisor(build, plan, log_fn=None, plan_ctx=ctx)
+    params, opt_state = fresh_state()
+    specs = [faults.oom_at(1, times=99, min_micro=plan.micro_batch_size),
+             faults.corrupt_cache()]
+    with faults.inject(faults.FaultPlan(*specs)) as fp:
+        sup.fit(params, opt_state, 4)
+    assert "corrupt_cache" in fp.fired_kinds()
+    assert sup.restarts == 1
+    assert sup.plan.micro_batch_size < plan.micro_batch_size
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder itself (unit)
+# ---------------------------------------------------------------------------
+
+def test_degradation_ladder_is_deterministic():
+    plan = make_plan(remat_policy="none")
+    seen = []
+    while True:
+        try:
+            plan, action = engine.degrade_plan(plan)
+        except engine.PlanExhausted:
+            break
+        seen.append(action)
+    assert seen == ["remat none->dots", "remat dots->period",
+                    "remat period->full", "halve micro 4->2",
+                    "halve micro 2->1"]
+
+
+def test_degradation_respects_data_parallel_divisibility():
+    mesh = host_mesh(2)
+    plan = engine.plan_mbs(MINI, micro_batch_size=4, mesh=mesh,
+                           remat_policy="full", normalization="exact")
+    degraded, action = engine.degrade_plan(plan)
+    assert degraded.micro_batch_size == 2
+    assert degraded.micro_batch_size % 2 == 0
+    assert degraded.local_micro == 1
+    with pytest.raises(engine.PlanExhausted):
+        engine.degrade_plan(degraded)  # can't go below the data extent
+
+
+def test_fault_taxonomy_classification():
+    assert faults.classify(faults.injected_oom()) == "oom"
+    assert faults.classify(RuntimeError("RESOURCE_EXHAUSTED: oom")) == "oom"
+    assert faults.classify(faults.TransientWorkerError("x")) == "transient"
+    assert faults.classify(faults.InjectedIOError("x")) == "transient"
+    assert faults.classify(OSError("disk")) == "transient"
+    assert faults.classify(faults.InjectedCrash("x")) == "crash"
+    assert faults.classify(ValueError("bug")) == "fatal"
+    assert isinstance(faults.InjectedIOError("x"), OSError)
+
+
+# ---------------------------------------------------------------------------
+# sharded dimension (engine Layer 6 x Layer 9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.mesh
+def test_sharded_negative_control_bitwise():
+    mesh = host_mesh(2)
+    plan = engine.plan_mbs(MINI, micro_batch_size=4, mesh=mesh,
+                           normalization="exact")
+    build = make_build("compiled", guard=False, mesh=mesh)
+    sup, fp, p_sup, s_sup, _ = run_supervised(build, plan=plan)
+    p_ref, s_ref, _ = run_unsupervised(build, plan)
+    assert fp.fired == [] and sup.records == []
+    assert max_abs_err(p_sup, p_ref) == 0.0
+    assert max_abs_err(s_sup, s_ref) == 0.0
+
+
+@pytest.mark.mesh
+def test_sharded_oom_recovery_matches_degraded_golden():
+    mesh = host_mesh(2)
+    plan = engine.plan_mbs(MINI, micro_batch_size=4, mesh=mesh,
+                           remat_policy="full", normalization="exact")
+    build = make_build("compiled", mesh=mesh)
+    sup, fp, p_got, s_got, _ = run_supervised(build, [faults.oom_at(2)],
+                                              plan=plan)
+    assert fp.fired_kinds() == ["oom"]
+    assert sup.plan.micro_batch_size == 2
+    assert sup.plan.local_micro == 1
+    degraded, _ = engine.degrade_plan(plan)
+    p_ref, s_ref, _ = run_unsupervised(build, degraded)
+    assert_trees_close(p_got, p_ref, what="sharded params after OOM")
+    assert_trees_close(s_got, s_ref, what="sharded opt state after OOM")
+
+
+@pytest.mark.mesh
+def test_sharded_nan_retry_recovers_clean_trajectory():
+    mesh = host_mesh(2)
+    plan = engine.plan_mbs(MINI, micro_batch_size=4, mesh=mesh,
+                           normalization="exact")
+    build = make_build("compiled", mesh=mesh)
+    sup, fp, p_got, _, _ = run_supervised(build, [faults.nan_at(1)],
+                                          plan=plan)
+    [rec] = sup.records
+    assert rec.kind == "nonfinite" and rec.action.startswith("retried ok")
+    p_ref, _, _ = run_unsupervised(build, plan)
+    assert max_abs_err(p_got, p_ref) == 0.0
