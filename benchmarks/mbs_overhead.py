@@ -47,7 +47,15 @@ and writes ``BENCH_faults.json``: per injected fault class (OOM at both
 degradation rungs, non-finite gradient retry/skip, transient worker,
 checkpoint I/O, torn checkpoint write), the supervisor's recovery time,
 steps lost/replayed and the plan admission before/after degradation —
-plus the steady-state supervision overhead vs the plain Trainer loop."""
+plus the steady-state supervision overhead vs the plain Trainer loop.
+
+``--serve-bench`` benchmarks the serving engine (engine Layer 10) and
+writes ``BENCH_serve.json``: steady-state decode tokens/s and p50/p99
+per-token latency under a synthetic Poisson request stream (warmup/compile
+excluded, decode-issued tokens only), TTFT, the admitted-slots-vs-budget
+curve from ``plan_serve``, and the XLA-measured decode peak
+(``memory_analysis`` on the pool-wide decode step) proving the plan's
+admission stays under the budget it was built for."""
 from __future__ import annotations
 
 import os
@@ -621,6 +629,86 @@ def faults_main(quick: bool = True, out_path: str = "BENCH_faults.json"):
     return results
 
 
+def serve_main(quick: bool = True, out_path: str = "BENCH_serve.json"):
+    """Serving benchmark (``--serve-bench``), the engine Layer 10
+    acceptance numbers, recorded run over run in ``BENCH_serve.json``."""
+    from repro.analysis import serve_checks
+    from repro.analysis.hlo_checks import measured_peak_bytes
+    from repro.engine import serving
+
+    arch = "qwen2-1.5b"
+    cfg = configs.get_reduced(arch)
+    max_len = 96
+    prefill_micro = 4
+    # a budget that admits a bounded slot pool (16 slots exactly) so the
+    # admission bound, not the slot cap, shapes the run
+    est = memory_model.serve_estimate(cfg, max_len, prefill_len=max_len)
+    budget = est.total(16, prefill_micro)
+    plan = serving.plan_serve(cfg, budget_bytes=budget, max_len=max_len,
+                              prefill_micro=prefill_micro)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    eng = serving.ServingEngine(params, cfg, plan, dtype=jnp.float32)
+
+    n_requests = 24 if quick else 96
+    prompt_lens, new_tokens = (8, 16, 32), (4, 8, 16)
+    reqs = list(serving.synthetic_traffic(
+        n_requests, rate_rps=200.0, prompt_lens=prompt_lens,
+        new_tokens=new_tokens, vocab_size=cfg.vocab_size, seed=0))
+    eng.run(reqs, warmup_prompt_lens=prompt_lens)
+    rep = eng.finished_report(reqs)
+
+    # measured decode peak at the SAME plan geometry, via the analysis layer
+    built = serve_checks.build_decode(
+        arch, budget_bytes=budget, max_len=max_len,
+        max_slots=plan.max_decode_slots, prefill_micro=plan.prefill_micro)
+    measured = measured_peak_bytes(built["compiled"])
+
+    # admitted-slots-vs-budget: the serving admission curve
+    curve = {}
+    for tag, frac in (("half", 0.5), ("planned", 1.0), ("double", 2.0)):
+        b = int(budget * frac)
+        try:
+            p = serving.plan_serve(cfg, budget_bytes=b, max_len=max_len,
+                                   prefill_micro=prefill_micro)
+            curve[tag] = {"budget_bytes": b, "slots": p.max_decode_slots,
+                          "modeled_peak_bytes": p.modeled_peak_bytes()}
+        except ValueError as e:
+            curve[tag] = {"budget_bytes": b, "slots": 0, "error": str(e)}
+
+    results = {
+        "benchmark": "serve", "arch": f"{arch}-reduced",
+        "max_len": max_len, "requests": n_requests,
+        "prompt_lens": list(prompt_lens), "new_tokens": list(new_tokens),
+        "plan": {"budget_bytes": int(budget),
+                 "decode_slots": plan.max_decode_slots,
+                 "prefill_micro": plan.prefill_micro,
+                 "kv_slot_bytes": plan.kv_slot_bytes,
+                 "modeled_peak_bytes": plan.modeled_peak_bytes()},
+        "report": rep,
+        "decode_peak": {"measured_bytes": int(measured),
+                        "budget_bytes": int(budget),
+                        "under_budget": bool(measured <= budget)},
+        "admitted_slots_vs_budget": curve,
+    }
+    dec = rep["decode"]
+    emit("serve/decode/tokens_per_s", dec["tokens_per_s"],
+         f"{dec['tokens']} decode-issued tokens over {dec['steps']} steps")
+    emit("serve/decode/itl_p50", dec["itl_s"]["p50"] * 1e6,
+         f"p99={dec['itl_s']['p99'] * 1e3:.1f}ms")
+    emit("serve/prefill/latency_p50", rep["prefill"]["latency_s"]["p50"] * 1e6,
+         f"{rep['prefill']['batches']} micro-batches (reported separately "
+         "from decode)")
+    emit("serve/ttft_p50", rep["ttft_s"]["p50"] * 1e6,
+         f"p99={rep['ttft_s']['p99'] * 1e3:.1f}ms")
+    emit("serve/slots", float(plan.max_decode_slots),
+         f"measured decode peak {measured} <= budget {int(budget)}: "
+         f"{measured <= budget}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 def _count_allreduce(jitted, *args) -> int:
     import re
     hlo = jitted.lower(*args).compile().as_text()
@@ -728,6 +816,10 @@ if __name__ == "__main__":
                     help="run the fault-tolerance benchmark (per-fault-class "
                          "recovery time / steps lost / admission "
                          "degradation) and write BENCH_faults.json")
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="run the serving benchmark (decode tok/s, p50/p99 "
+                         "per-token latency, admitted-slots-vs-budget, "
+                         "measured decode peak) and write BENCH_serve.json")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     a = ap.parse_args()
@@ -744,5 +836,7 @@ if __name__ == "__main__":
                     cache_path=a.tuning_cache)
     elif a.fault_bench:
         faults_main(quick=a.quick, out_path=a.out or "BENCH_faults.json")
+    elif a.serve_bench:
+        serve_main(quick=a.quick, out_path=a.out or "BENCH_serve.json")
     else:
         main(quick=a.quick)

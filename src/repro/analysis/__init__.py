@@ -11,6 +11,9 @@ contracts):
     (HLO003), the one-all-reduce-per-mini-batch schedule (HLO004).
   * ``lint``         — AST rules over ``src/repro`` (LINT001–LINT005),
     waivable inline with ``# repro: noqa(RULE)``.
+  * ``serve_checks`` — contracts on the COMPILED serving decode step
+    (engine Layer 10): KV-pool donation aliasing (SRV001) and the
+    decode-peak-vs-serve-model-vs-budget band (SRV002).
 
 ``suite.run_suite`` wires them over real reduced configurations;
 ``python -m repro.analysis`` is the CLI/CI gate and shares the repo
@@ -30,3 +33,6 @@ from .hlo_checks import (allreduce_count, check_aliasing,  # noqa: F401
 from .lint import (category_for, lint_paths, lint_repo,  # noqa: F401
                    lint_source)
 from .suite import TARGETS, check_bundle, run_suite  # noqa: F401
+from .serve_checks import (SERVE_TARGETS, build_decode,  # noqa: F401
+                           check_decode_aliasing, check_decode_memory,
+                           run_serve_suite)

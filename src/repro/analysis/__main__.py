@@ -47,6 +47,11 @@ def _parse(argv):
                          "only)")
     ap.add_argument("--lint-only", action="store_true",
                     help="run only the AST lint over src/repro")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the serving decode-step contracts "
+                         "(SRV001/SRV002) over the serve matrix instead of "
+                         "the training suite; --config picks archs "
+                         "(default: repro.analysis.SERVE_TARGETS)")
     ap.add_argument("--memory-tolerance", type=float, default=None,
                     help="HLO003 modeled-vs-measured factor (default 16)")
     ap.add_argument("--json", action="store_true",
@@ -80,6 +85,20 @@ def main(argv=None) -> int:
         except Exception:
             traceback.print_exc()
             return F.EXIT_ERROR
+    elif args.serve:
+        from . import serve_checks
+        for arch in args.config or list(serve_checks.SERVE_TARGETS):
+            try:
+                kw = {}
+                if args.memory_tolerance is not None:
+                    kw["tolerance"] = args.memory_tolerance
+                reports.append(serve_checks.run_serve_suite(
+                    arch, mesh=args.mesh, **kw))
+            except Exception:
+                traceback.print_exc()
+                print(f"ERROR: serve suite crashed on {arch} (see above)",
+                      file=sys.stderr)
+                tool_error = True
     else:
         kw = {}
         if args.memory_tolerance is not None:

@@ -83,6 +83,16 @@ RULES: Dict[str, Dict[str, str]] = {
                             "routes through the supervisor's fault "
                             "taxonomy (faults.classify/is_oom/...) or "
                             "carries # repro: noqa"},
+    "SRV001": {"layer": "hlo",
+               "contract": "the compiled decode step aliases the donated "
+                           "KV pool in place (input_output_aliases covers "
+                           "the full cache footprint — a non-donated path "
+                           "keeps two full KV copies live)"},
+    "SRV002": {"layer": "hlo",
+               "contract": "compiled decode peak agrees with "
+                           "core/memory_model.serve_estimate within the "
+                           "declared band AND stays under the budget the "
+                           "ServePlan was admitted against"},
 }
 
 

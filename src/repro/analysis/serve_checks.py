@@ -1,0 +1,169 @@
+"""Compiled decode-step contracts for the serving engine (SRV001–SRV002).
+
+The serving engine's steady state is ONE jitted decode step over the whole
+KV slot pool, so its memory behaviour is decided at compile time by two
+facts this module pins:
+
+  * SRV001 — the pool is DONATED back to itself each step. XLA must alias
+    every cache leaf (``input_output_aliases`` covering the full cache
+    footprint); a non-donated or alias-broken path keeps the old and new
+    cache live simultaneously — two full KV copies, which halves the slot
+    count ``plan_serve`` could otherwise admit.
+  * SRV002 — the compiled peak (``memory_analysis``: args + outs + temps −
+    aliased) agrees with ``core/memory_model.serve_estimate``'s decode-time
+    picture within a declared band AND stays under the budget the
+    :class:`ServePlan` was admitted against — the serving twin of HLO003.
+
+Everything lowers abstractly (``jax.eval_shape`` cache, abstract params) —
+no device allocation; the only real work is the XLA compile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..engine import serving
+from ..launch import steps
+from ..models import transformer
+from .findings import Finding, Report, SEVERITY_ERROR
+from .hlo_checks import measured_peak_bytes, tree_bytes
+
+#: the serve matrix: one pure-attention stack (ragged prefill, ring KV) and
+#: one state-carrying hybrid (exact-length grouping, ssm state slots) —
+#: resnet50 has no decode path and enc-dec is rejected by check_servable
+SERVE_TARGETS = ("qwen2-1.5b", "mamba2-780m")
+
+ANALYSIS_MAX_LEN = 64
+ANALYSIS_BUDGET = 1 << 30
+ANALYSIS_SLOTS = 8  # pinned: matrix compile time, not admission, decides
+ANALYSIS_PREFILL = 4
+
+#: SRV002 band: same order-of-magnitude tripwire philosophy as HLO003 but
+#: with decode-sized slack (the serve model's fixed term is 64 MiB, not GiB)
+SERVE_MEMORY_TOLERANCE = 16.0
+SERVE_SLACK_BYTES = 256 << 20
+
+
+def build_decode(arch: str, *, mesh=None, donate: bool = True,
+                 budget_bytes: int = ANALYSIS_BUDGET,
+                 max_len: int = ANALYSIS_MAX_LEN,
+                 max_slots: Optional[int] = ANALYSIS_SLOTS,
+                 prefill_micro: Optional[int] = ANALYSIS_PREFILL
+                 ) -> Dict[str, Any]:
+    """Plan + abstractly lower + compile one pool-wide decode step, exactly
+    as ``engine.serving.ServingEngine`` builds it (same donation contract,
+    greedy head)."""
+    cfg = configs.get_reduced(arch)
+    plan = serving.plan_serve(cfg, budget_bytes=budget_bytes, max_len=max_len,
+                              max_slots=max_slots, prefill_micro=prefill_micro,
+                              mesh=mesh)
+    S = plan.local_slots
+    cache = jax.eval_shape(functools.partial(
+        transformer.init_cache, cfg, S, max_len, jnp.bfloat16,
+        plan.global_window))
+    params = steps.abstract_params(cfg)
+    tok = jax.ShapeDtypeStruct((S, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((S,), jnp.int32)
+
+    def decode(p, c, t, cur):
+        logits, c = transformer.decode_step(p, cfg, t, c, cur,
+                                            dtype=jnp.float32,
+                                            global_window=plan.global_window)
+        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), c
+
+    jitted = jax.jit(decode, donate_argnums=(1,) if donate else ())
+    compiled = jitted.lower(params, cache, tok, pos).compile()
+    return dict(cfg=cfg, plan=plan, compiled=compiled,
+                cache_bytes=tree_bytes(cache))
+
+
+# ---------------------------------------------------------------------------
+# SRV001 — decode-cache donation aliasing
+# ---------------------------------------------------------------------------
+
+def check_decode_aliasing(compiled, cache_bytes: int, *,
+                          context: str = "") -> List[Finding]:
+    """With the pool donated, ``input_output_aliases`` must cover at least
+    the full cache footprint — anything less means XLA round-trips some
+    cache leaf through a copy and decode holds two KV generations live."""
+    mem = compiled.memory_analysis()
+    aliased = int(getattr(mem, "alias_size_in_bytes", 0))
+    if aliased < cache_bytes:
+        return [Finding(
+            "SRV001", SEVERITY_ERROR,
+            f"decode step aliases {aliased} bytes < KV pool footprint "
+            f"{cache_bytes} bytes — the cache is not updated in place "
+            "(two full KV copies live per step)",
+            location=context,
+            details={"alias_bytes": aliased, "cache_bytes": cache_bytes})]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# SRV002 — decode peak vs serve memory model vs budget
+# ---------------------------------------------------------------------------
+
+def check_decode_memory(compiled, plan: serving.ServePlan, *,
+                        tolerance: float = SERVE_MEMORY_TOLERANCE,
+                        slack_bytes: int = SERVE_SLACK_BYTES,
+                        context: str = "") -> List[Finding]:
+    """Decode-time twin of HLO003, plus the admission promise itself: the
+    compiled peak must sit inside the model band around
+    ``plan.modeled_peak_bytes(prefill_micro=0)`` (no prefill in flight
+    during a pure decode step) and NEVER exceed ``plan.budget_bytes`` —
+    the whole point of planned admission."""
+    measured = measured_peak_bytes(compiled)
+    modeled = plan.modeled_peak_bytes(prefill_micro=0)
+    details = {"measured_bytes": measured, "modeled_bytes": modeled,
+               "budget_bytes": plan.budget_bytes, "tolerance": tolerance,
+               "slack_bytes": slack_bytes,
+               "slots": plan.local_slots}
+    out = []
+    hi = modeled * tolerance + slack_bytes
+    lo = max(0.0, modeled / tolerance - slack_bytes)
+    if not (lo <= measured <= hi):
+        out.append(Finding(
+            "SRV002", SEVERITY_ERROR,
+            f"compiled decode peak {measured} bytes vs modeled {modeled} "
+            f"bytes — outside {tolerance}x band "
+            f"(allowed [{int(lo)}, {int(hi)}])",
+            location=context, details=details))
+    if measured > plan.budget_bytes:
+        out.append(Finding(
+            "SRV002", SEVERITY_ERROR,
+            f"compiled decode peak {measured} bytes exceeds the "
+            f"{plan.budget_bytes}-byte budget the plan admitted "
+            f"{plan.local_slots} slots against",
+            location=context, details=details))
+    return out
+
+
+def run_serve_suite(arch: str = "qwen2-1.5b", *, mesh: Any = None,
+                    donate: bool = True,
+                    budget_bytes: int = ANALYSIS_BUDGET,
+                    max_len: int = ANALYSIS_MAX_LEN,
+                    tolerance: float = SERVE_MEMORY_TOLERANCE) -> Report:
+    """Compile one serve decode configuration and run both contracts."""
+    from .suite import resolve_mesh
+    mesh = resolve_mesh(mesh)
+    built = build_decode(arch, mesh=mesh, donate=donate,
+                         budget_bytes=budget_bytes, max_len=max_len)
+    plan: serving.ServePlan = built["plan"]
+    report = Report(context={
+        "target": arch, "mode": "serve-decode",
+        "mesh": (f"dp={plan.data_parallel}" if plan.data_parallel > 1
+                 else "single"),
+        "slots": plan.local_slots, "max_len": plan.max_len,
+        "donate": donate,
+    })
+    ctx = f"{arch}/serve-decode"
+    if donate:
+        report.extend(check_decode_aliasing(
+            built["compiled"], built["cache_bytes"], context=ctx), "SRV001")
+    report.extend(check_decode_memory(
+        built["compiled"], plan, tolerance=tolerance, context=ctx), "SRV002")
+    return report

@@ -161,6 +161,150 @@ def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
     return boundary + live + logits_live
 
 
+# ---------------------------------------------------------------------------
+# Serving (engine Layer 10): KV-cache admission terms
+# ---------------------------------------------------------------------------
+
+# bytes of the per-slot ring-position bookkeeping (``pos`` int32 per entry)
+CACHE_POS_BYTES = 4
+
+
+def kv_bytes_per_token(cfg: ModelConfig, cache_bytes: int = 2) -> int:
+    """Decode-cache bytes ONE cached context token costs, summed over every
+    attention layer — the serving mirror of
+    :func:`activation_bytes_per_sample`. Each (global|local) layer stores a
+    K and a V row (``num_kv_heads * head_dim``) plus the ring slot's
+    absolute-position bookkeeping (int32); state-carrying layers
+    (ssm / recurrent) contribute nothing here because their decode state is
+    O(1) in the context length — see :func:`slot_state_bytes`.
+
+    This is the quantity "The Limit of the Batch Size" turns into decode
+    throughput: at a fixed HBM budget the admitted concurrent-request
+    count is (budget - params - fixed) / (context * kv_bytes_per_token).
+    """
+    per_layer = 2 * cfg.num_kv_heads * cfg.head_dim * cache_bytes \
+        + CACHE_POS_BYTES
+    n_attn = sum(1 for k in cfg.layer_pattern if k in ("global", "local"))
+    return cfg.num_periods * n_attn * per_layer
+
+
+def slot_state_bytes(cfg: ModelConfig, cache_bytes: int = 2) -> int:
+    """Context-length-independent decode state per request slot: the SSD
+    state + conv tail of ``ssm`` slots and the RG-LRU hidden + conv tail of
+    ``recurrent`` slots (matching ``models/{ssm,recurrent}.init_*_cache``)."""
+    total = 0
+    for kind in cfg.layer_pattern:
+        if kind == "ssm" and cfg.ssm_state:
+            conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+            total += (cfg.ssm_num_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+                      + (cfg.conv_width - 1) * conv_dim * cache_bytes)
+        elif kind == "recurrent" and cfg.lru_width:
+            total += (cfg.lru_width * 4
+                      + (cfg.conv_width - 1) * cfg.lru_width * cache_bytes)
+    return cfg.num_periods * total
+
+
+def kv_slot_bytes(cfg: ModelConfig, max_len: int, cache_bytes: int = 2,
+                  global_window: Optional[int] = None) -> int:
+    """Total decode-cache bytes ONE request slot holds at context capacity
+    ``max_len``, honoring per-layer ring windows: a ``local`` layer's ring
+    is bounded to ``sliding_window`` entries and a ``global`` layer to
+    ``global_window`` (when serving a capped long-context variant), so a
+    slot costs less than ``max_len * kv_bytes_per_token`` whenever any
+    window is tighter than the context."""
+    per_entry = 2 * cfg.num_kv_heads * cfg.head_dim * cache_bytes \
+        + CACHE_POS_BYTES
+    total = 0
+    for kind in cfg.layer_pattern:
+        if kind in ("global", "local"):
+            w = cfg.sliding_window if kind == "local" else global_window
+            entries = max_len if w is None else min(w, max_len)
+            total += entries * per_entry
+    return cfg.num_periods * total + slot_state_bytes(cfg, cache_bytes)
+
+
+def prefill_activation_bytes_per_sample(cfg: ModelConfig, seq: int,
+                                        act_bytes: int = 2) -> int:
+    """Forward-only (no backward, no checkpoint boundary) live bytes for
+    ONE prefill sample of length ``seq``: the residual stream (x plus one
+    block output in flight) and one period's working set — under
+    ``lax.scan`` period ``i``'s intermediates are freed before ``i+1``
+    runs — plus the last-token logits row. The per-sample KV bytes the
+    prefill *builds* are accounted by the caller through
+    :func:`kv_slot_bytes` (they persist past the prefill)."""
+    d = cfg.d_model
+    stream = 2 * seq * d * act_bytes
+    widths = [d * 6]
+    if cfg.is_moe:
+        widths.append(cfg.experts_per_token * cfg.moe_d_ff * 3
+                      * cfg.capacity_factor)
+    elif cfg.d_ff:
+        widths.append(cfg.d_ff * 3)
+    if cfg.ssm_state:
+        widths.append(cfg.ssm_d_inner * 4)
+    if cfg.lru_width:
+        widths.append(cfg.lru_width * 6)
+    period_live = seq * int(max(widths)) * act_bytes * cfg.pattern_len
+    logits_live = cfg.vocab_size * 4
+    return stream + period_live + logits_live
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMemoryEstimate:
+    """Serving twin of :class:`MemoryEstimate` — affine in the number of
+    admitted decode slots (at a fixed prefill micro-batch size), which is
+    what :func:`engine.serving.plan_serve` binary-searches against."""
+    params_bytes: int
+    kv_slot_bytes: int  # decode-cache bytes per admitted request slot
+    prefill_bytes_per_sample: int  # activations + the cache being built
+    fixed_bytes: int
+
+    def total(self, slots: int, prefill_micro: int = 0) -> int:
+        """Peak bytes with ``slots`` admitted decode slots and a prefill
+        micro-batch of ``prefill_micro`` in flight. Conservative the same
+        way :meth:`MemoryEstimate.total` is: the prefill term is charged
+        even though admission could time-slice prefill against decode —
+        over-counting never over-admits."""
+        return (self.params_bytes + self.fixed_bytes
+                + self.kv_slot_bytes * slots
+                + self.prefill_bytes_per_sample * prefill_micro)
+
+    def affine_coeffs(self, prefill_micro: int = 0) -> tuple:
+        """(fixed, per_slot) with total(s) == fixed + per_slot * s."""
+        return self.total(0, prefill_micro), self.kv_slot_bytes
+
+
+def serve_estimate(cfg: ModelConfig, max_len: int, *,
+                   prefill_len: Optional[int] = None,
+                   cache_bytes: int = 2, act_bytes: int = 2,
+                   global_window: Optional[int] = None,
+                   mesh=None, fsdp_params: bool = False
+                   ) -> ServeMemoryEstimate:
+    """Analytic serving-memory model: params (fp32 inference weights, no
+    grads / optimizer state / update transient) + per-slot KV bytes at
+    ``max_len`` + per-sample prefill cost at ``prefill_len`` (default
+    ``max_len``). ``mesh`` switches to the PER-DEVICE estimate the same
+    way :func:`estimate` does — params discounted by the real sharding
+    ratio (``fsdp_params=False`` models the replicating data-parallel
+    serving replica), cache/activation terms budget the *local* slot and
+    prefill counts."""
+    if mesh is not None:
+        p_bytes = int(cfg.param_count() * 4
+                      * param_shard_ratio(cfg, mesh, fsdp=fsdp_params))
+    else:
+        p_bytes = cfg.param_count() * 4
+    pf = max_len if prefill_len is None else prefill_len
+    slot = kv_slot_bytes(cfg, max_len, cache_bytes, global_window)
+    return ServeMemoryEstimate(
+        params_bytes=p_bytes,
+        kv_slot_bytes=slot,
+        prefill_bytes_per_sample=(
+            prefill_activation_bytes_per_sample(cfg, pf, act_bytes)
+            + slot),
+        fixed_bytes=64 * 1024 ** 2,
+    )
+
+
 class _MeshDims:
     """Axis-name → size view of a mesh — the only part of a mesh the
     sharding policy reads, and a hashable cache key for the ratio below."""

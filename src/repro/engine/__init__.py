@@ -60,6 +60,18 @@ behind a circuit breaker; transient pipeline/checkpoint-I/O failures get
 bounded jittered retries. ``faults.py`` is the deterministic seeded
 fault-injection harness (+ the fault taxonomy) that makes every recovery
 path provable in CI on CPU. See DESIGN.md §Fault tolerance.
+
+Layer 10 — serving (``serving.py`` + ``kv.py``): the same admission idea
+applied to inference, where the per-unit memory cost is the KV-cache slot
+(``memory_model.kv_slot_bytes``) instead of per-sample activations.
+:func:`plan_serve` bounds concurrent decode slots + the prefill
+micro-batch against the HBM budget (``ServePlan``), and
+:class:`ServingEngine` runs the request lifecycle (arrive → prefill →
+decode → finish/evict) as continuous batching over a fixed-shape
+:class:`KVPool` — per-step admit/evict without recompilation, donated
+in-place decode cache, ragged-padded prefill for pure-attention stacks
+and exact-length grouping for state-carrying/MoE families. See DESIGN.md
+§Serving.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
@@ -78,3 +90,6 @@ from . import faults  # noqa: F401
 from .supervisor import (FaultRecord, NaNCircuitBreaker, NaNHalt,  # noqa: F401
                          PlanExhausted, RestartBudgetExceeded, Supervisor,
                          SupervisorConfig, SupervisorError, degrade_plan)
+from .kv import KVPool, PoolExhausted  # noqa: F401
+from .serving import (Request, ServePlan, ServingEngine,  # noqa: F401
+                      check_servable, plan_serve, synthetic_traffic)

@@ -1,0 +1,113 @@
+"""Slot-pooled decode cache (engine Layer 10, the serving twin of the
+training engine's planned activations).
+
+The :class:`KVPool` owns ONE device-resident decode cache sized for the
+plan's admitted slot count (``plan_serve`` → ``ServePlan.max_decode_slots``)
+and treats the batch dimension as a pool of request *slots*: a request is
+admitted by allocating a free slot and scattering its prefill cache rows in,
+decodes in place against the ring layout (``attention.attn_decode_step``
+writes slot ``pos % W``), and on finish simply returns the slot to the free
+list — no zeroing needed, because admission always overwrites the full row
+and decode masks validity through the per-entry ``pos`` bookkeeping.
+
+Memory contract: the pool is allocated ONCE at plan time (``slots *
+memory_model.kv_slot_bytes`` plus the state-carrying slots' fixed bytes)
+and every decode step donates it back to itself (``input_output_aliases``
+on every cache leaf — the non-donated path would keep old + new cache live,
+doubling decode HBM; ``analysis.serve_checks`` rule SRV001 pins this).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.config import ModelConfig
+
+
+class PoolExhausted(RuntimeError):
+    """alloc() with no free slot — the scheduler admitted past the plan."""
+
+
+class KVPool:
+    """Fixed-capacity pool of decode-cache slots.
+
+    ``cache`` is the live pytree (``transformer.init_cache`` layout: tuple
+    per pattern slot, leaves stacked over periods with the request-slot
+    dimension at axis 1). ``insert`` is a jitted scatter of one prefill
+    row into one slot; with ``donate=True`` (default) the pool buffer is
+    donated so XLA updates it in place instead of copying the whole pool
+    per admission.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
+                 dtype=jnp.bfloat16, global_window: Optional[int] = None,
+                 donate: bool = True):
+        if max_slots < 1:
+            raise ValueError(f"need at least one slot, got {max_slots}")
+        self.cfg = cfg
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self.dtype = dtype
+        self.global_window = global_window
+        self.donate = donate
+        self.cache = transformer.init_cache(cfg, self.max_slots, self.max_len,
+                                            dtype, global_window)
+        # LIFO free list: hot slots are reused first (their rows are most
+        # likely still in cache-friendly memory)
+        self._free: List[int] = list(range(self.max_slots - 1, -1, -1))
+        self._insert = jax.jit(
+            self._insert_impl,
+            donate_argnums=(0,) if donate else ())
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot. Raises :class:`PoolExhausted` when the plan's
+        admission bound is already fully used — the scheduler must block
+        new work, never grow the pool."""
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.max_slots} decode slots in use — admission is "
+                "bounded by the ServePlan; wait for an eviction")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        """Return a finished request's slot to the pool (reusable
+        immediately; the next insert overwrites the whole row)."""
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.max_slots})")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free (double evict)")
+        self._free.append(slot)
+
+    # -- data movement ------------------------------------------------------
+
+    @staticmethod
+    def _insert_impl(pool, pre, row, slot):
+        return jax.tree.map(
+            lambda p, c: p.at[:, slot].set(c[:, row].astype(p.dtype)),
+            pool, pre)
+
+    def insert(self, prefill_cache: Any, row: int, slot: int) -> None:
+        """Scatter prefill-cache row ``row`` into pool slot ``slot``
+        (admission). The prefill cache must come from the same config at
+        the same ``max_len``/window geometry (leaf shapes match up to the
+        batch dim)."""
+        self.cache = self._insert(self.cache, prefill_cache,
+                                  jnp.int32(row), jnp.int32(slot))
+
+    def bytes(self) -> int:
+        """Device bytes the pool holds (all leaves)."""
+        return sum(int(l.size) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(self.cache))

@@ -1,0 +1,585 @@
+"""Memory-planned serving engine (engine Layer 10): continuous batching
+with KV-cache admission.
+
+The training stack plans micro-batches against an activation memory model
+(``plan_mbs`` / ``activation_bytes_per_sample``). Serving is the same MBP
+admission problem with a different per-unit cost: a decoding request's
+footprint is its KV-cache slot (``memory_model.kv_slot_bytes``), not its
+activations, so :func:`plan_serve` bounds the number of CONCURRENTLY
+decoding requests and the prefill micro-batch size against the HBM budget
+the same way ``plan_mbs`` bounds the micro-batch size.
+
+Request lifecycle (state machine, DESIGN.md §Serving):
+
+    QUEUED --admit (free slot + prefill micro-batch)--> PREFILL
+    PREFILL --first token sampled, cache row scattered--> DECODE
+    DECODE --max_new_tokens reached--> FINISHED (slot evicted → reusable)
+
+Continuous batching: every decode step runs the jitted ``decode_step``
+over the ENTIRE fixed-shape slot pool (``kv.KVPool``); inactive slots
+compute garbage that is masked host-side, so admissions and evictions
+never retrigger compilation. Prefill is micro-batched through the same
+pad-and-mask idiom as the training planner: pure-attention stacks take
+RIGHT-PADDED ragged groups (``transformer.prefill(lengths=...)`` — exact,
+because causal attention never lets a real query see the padding), while
+state-carrying (ssm / recurrent) and MoE families group EXACT-LENGTH
+prompts instead (padding would run through their scans / expert routing
+and change real-token outputs — ``transformer.supports_ragged_prefill``).
+Encoder-decoder configs are rejected up front with a clear message.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from .kv import KVPool
+
+# request lifecycle states
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+FINISHED = "finished"
+
+_FAMILY_NOTES = {
+    "encdec": ("encoder-decoder configs are not servable by the decoder-only "
+               "serving engine (no cross-attention cache in init_cache/"
+               "decode_step); serve a decoder-only arch instead"),
+    "state": ("state-carrying layers (ssm/recurrent) decode through "
+              "init_cache/decode_step but prefill EXACT-LENGTH groups — "
+              "ragged padding would run the scan through the padded tail"),
+    "moe": ("MoE routing competes padded tokens for expert capacity, so "
+            "prompts prefill in exact-length groups"),
+}
+
+
+def check_servable(cfg: ModelConfig) -> None:
+    """Fail fast, per family, before any array is allocated (the old
+    ``launch/serve.py`` only guarded enc-dec and let every other
+    unsupported combination surface as a shape error mid-loop)."""
+    if cfg.is_encdec:
+        raise ValueError(f"{cfg.name}: {_FAMILY_NOTES['encdec']}")
+    for kind in cfg.layer_pattern:
+        if kind not in ("global", "local", "ssm", "recurrent"):
+            raise ValueError(
+                f"{cfg.name}: layer kind {kind!r} has no decode-cache slot "
+                "in transformer.init_cache — cannot serve this pattern")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through the lifecycle."""
+    rid: int
+    prompt: np.ndarray  # (L,) int32 token ids
+    max_new_tokens: int
+    arrival_s: float = 0.0  # offset from stream start
+
+    # filled in by the engine
+    state: str = QUEUED
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    queued_s: Optional[float] = None
+    first_token_s: Optional[float] = None  # TTFT = first_token_s - arrival_s
+    finish_s: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Admission geometry for one serving setup — the serving sibling of
+    :class:`engine.plan.MBSPlan`.
+
+    ``max_decode_slots`` bounds concurrent decoding requests (the KV pool's
+    batch dimension); ``prefill_micro`` bounds how many prompts prefill
+    together. Both were admitted against ``budget_bytes`` via
+    ``memory_model.serve_estimate``: the modeled peak
+    ``base_bytes + kv_slot_bytes * slots + prefill_bytes_per_sample * micro``
+    never exceeds the budget.
+    """
+    max_decode_slots: int
+    prefill_micro: int
+    max_len: int  # context capacity per slot (prompt + generated)
+    budget_bytes: int
+    # memory-model coefficients the admission was computed from
+    kv_slot_bytes: int
+    base_bytes: int  # params + fixed overhead (slot-count independent)
+    prefill_bytes_per_sample: int
+    cache_bytes: int = 2
+    global_window: Optional[int] = None
+    ragged_prefill: bool = True  # False → exact-length prompt grouping
+    auto_slots: bool = True  # slot count chosen by the memory model
+    # mesh geometry: budget was per device; the pool is local_slots per
+    # data-parallel worker, max_decode_slots = local_slots * data_parallel
+    data_parallel: int = 1
+    local_slots: Optional[int] = None
+
+    def __post_init__(self):
+        if self.local_slots is None:
+            object.__setattr__(self, "local_slots",
+                               self.max_decode_slots // self.data_parallel)
+
+    def modeled_peak_bytes(self, slots: Optional[int] = None,
+                           prefill_micro: Optional[int] = None) -> int:
+        """Memory-model peak for ``slots`` active decode slots and a
+        ``prefill_micro`` prefill in flight (defaults: the plan's bounds),
+        per data-parallel worker."""
+        s = self.local_slots if slots is None else slots
+        m = self.prefill_micro if prefill_micro is None else prefill_micro
+        return (self.base_bytes + self.kv_slot_bytes * s
+                + self.prefill_bytes_per_sample * m)
+
+    def describe(self) -> str:
+        src = "memory model" if self.auto_slots else "pinned"
+        group = "ragged-pad" if self.ragged_prefill else "exact-length"
+        mesh = (f", data-parallel {self.data_parallel} x local "
+                f"{self.local_slots}" if self.data_parallel > 1 else "")
+        return (f"ServePlan: {self.max_decode_slots} decode slots @ max_len "
+                f"{self.max_len} ({self.kv_slot_bytes / 2**20:.1f} MiB/slot, "
+                f"{src}), prefill micro {self.prefill_micro} ({group}), "
+                f"modeled peak {self.modeled_peak_bytes() / 2**30:.2f} GiB of "
+                f"budget {self.budget_bytes / 2**30:.2f} GiB{mesh}")
+
+
+def plan_serve(cfg: ModelConfig, *, budget_bytes: int, max_len: int,
+               max_slots: Optional[int] = None,
+               prefill_micro: Optional[int] = None,
+               mesh=None, cache_bytes: int = 2, act_bytes: int = 2,
+               global_window: Optional[int] = None,
+               fsdp_params: bool = False,
+               slot_cap: int = 256) -> ServePlan:
+    """Admission planning for serving — ``plan_mbs`` with KV-slot costs.
+
+    Resolution mirrors the training planner: a pinned ``max_slots`` /
+    ``prefill_micro`` is validated against the budget; otherwise the
+    largest slot count whose modeled peak fits is admitted, shrinking the
+    prefill micro-batch (powers of two, floor 1) when prefill activations
+    would crowd out decode slots. ``mesh`` reads ``budget_bytes`` as
+    PER-DEVICE bytes (params discounted by the real sharding policy;
+    ``fsdp_params=False`` models the replicating data-parallel serve path)
+    and plans ``local_slots`` per worker. ``slot_cap`` bounds the pool so a
+    huge budget on a tiny config cannot plan an absurd batch dimension.
+    """
+    check_servable(cfg)
+    if max_len < 2:
+        raise ValueError(f"max_len must be >= 2 (prompt + one token), "
+                         f"got {max_len}")
+    from ..core import memory_model  # deferred: core imports engine.plan
+    dp = 1
+    if mesh is not None:
+        from ..launch import mesh as mesh_lib  # deferred: no cycle
+        dp = mesh_lib.data_parallel_size(mesh)
+    est = memory_model.serve_estimate(
+        cfg, max_len, prefill_len=max_len, cache_bytes=cache_bytes,
+        act_bytes=act_bytes, global_window=global_window, mesh=mesh,
+        fsdp_params=fsdp_params)
+    base = est.total(0, 0)
+
+    def slots_at(pm: int) -> int:
+        return (budget_bytes - est.total(0, pm)) // est.kv_slot_bytes
+
+    if slots_at(1) < 1:
+        need = est.total(1, 1)
+        raise ValueError(
+            f"{cfg.name}: budget {budget_bytes / 2**30:.2f} GiB cannot hold "
+            f"the params + one decode slot + one prefill sample at max_len "
+            f"{max_len} (needs {need / 2**30:.2f} GiB) — serving needs model "
+            "parallelism or a shorter context; admission cannot shrink the "
+            "model itself")
+
+    auto_slots = max_slots is None
+    if prefill_micro is not None:
+        if prefill_micro < 1:
+            raise ValueError(f"prefill_micro must be >= 1, got {prefill_micro}")
+        pm = prefill_micro
+    else:
+        # start at 8 (matches the training planner's probe scale) and halve
+        # while prefill activations would leave fewer slots than the micro
+        # size itself — a prefill batch larger than the decode pool it
+        # feeds is pure waste
+        pm = 8
+        while pm > 1 and slots_at(pm) < pm:
+            pm //= 2
+
+    if auto_slots:
+        local = int(min(slots_at(pm), slot_cap))
+        if local < 1:  # pinned prefill_micro crowded decode out entirely
+            raise ValueError(
+                f"{cfg.name}: prefill micro-batch {pm} leaves no room for a "
+                f"decode slot in {budget_bytes / 2**30:.2f} GiB — shrink "
+                "prefill_micro or raise the budget")
+    else:
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        local = -(-max_slots // dp)
+        peak = est.total(local, min(pm, local))
+        if peak > budget_bytes:
+            raise ValueError(
+                f"{cfg.name}: pinned {max_slots} slots (local {local}) + "
+                f"prefill micro {min(pm, local)} models "
+                f"{peak / 2**30:.2f} GiB, over the "
+                f"{budget_bytes / 2**30:.2f} GiB budget — "
+                f"fits at most {slots_at(min(pm, local))} local slots")
+    pm = max(1, min(pm, local))
+    return ServePlan(
+        max_decode_slots=local * dp, prefill_micro=pm, max_len=max_len,
+        budget_bytes=int(budget_bytes), kv_slot_bytes=est.kv_slot_bytes,
+        base_bytes=base, prefill_bytes_per_sample=est.prefill_bytes_per_sample,
+        cache_bytes=cache_bytes, global_window=global_window,
+        ragged_prefill=transformer.supports_ragged_prefill(cfg),
+        auto_slots=auto_slots, data_parallel=dp, local_slots=local)
+
+
+def _sample(logits, key, temperature: float):
+    """Greedy (temperature == 0) or temperature sampling over (..., V)."""
+    if temperature > 0:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1)
+
+
+def _percentiles(xs: Sequence[float]) -> Dict[str, float]:
+    if not len(xs):
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()), "max": float(a.max())}
+
+
+class ServingEngine:
+    """Continuous-batching scheduler over a :class:`KVPool`.
+
+    One engine = one device pool of ``plan.max_decode_slots`` slots, one
+    jitted prefill per prompt-length bucket and ONE jitted decode step for
+    the whole pool (fixed shapes — admission/eviction never recompiles).
+    The decode jit donates the cache (``plan``-sized pool donated back to
+    itself each step); sampling (greedy at ``temperature == 0``, else
+    categorical at ``temperature``) runs inside the same jit so the only
+    per-step host traffic is the (S,) next-token readback that also serves
+    as the per-token latency fence.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, plan: ServePlan, *,
+                 dtype=jnp.float32, cache_dtype=None, temperature: float = 0.0,
+                 seed: int = 0, donate: bool = True, pad_multiple: int = 16):
+        check_servable(cfg)
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        self.dtype = dtype
+        self.temperature = float(temperature)
+        self.pad_multiple = int(pad_multiple)
+        if cache_dtype is None:
+            cache_dtype = jnp.bfloat16 if plan.cache_bytes == 2 else jnp.float32
+        self.pool = KVPool(cfg, plan.max_decode_slots, plan.max_len,
+                           dtype=cache_dtype, global_window=plan.global_window,
+                           donate=donate)
+        S = plan.max_decode_slots
+        self._tok = np.zeros((S, 1), np.int32)
+        self._pos = np.zeros((S,), np.int32)
+        self._by_slot: Dict[int, Request] = {}
+        self._queue: collections.deque = collections.deque()
+        self._key = jax.random.PRNGKey(seed)
+        self._step_idx = 0
+
+        gw = plan.global_window
+        ml = plan.max_len
+
+        def prefill_ragged(p, toks, lengths):
+            return transformer.prefill(p, cfg, toks, max_len=ml, dtype=dtype,
+                                       global_window=gw, lengths=lengths)
+
+        def prefill_exact(p, toks):
+            return transformer.prefill(p, cfg, toks, max_len=ml, dtype=dtype,
+                                       global_window=gw)
+
+        def decode(p, cache, tok, pos, key):
+            logits, cache = transformer.decode_step(p, cfg, tok, cache, pos,
+                                                    dtype=dtype,
+                                                    global_window=gw)
+            nxt = _sample(logits[:, 0], key, self.temperature)
+            return nxt.astype(jnp.int32), cache
+
+        self._prefill_ragged = jax.jit(prefill_ragged)
+        self._prefill_exact = jax.jit(prefill_exact)
+        self._decode = jax.jit(decode, donate_argnums=(1,) if donate else ())
+        self._sample_first = jax.jit(
+            lambda logits, key: _sample(logits, key, self.temperature
+                                        ).astype(jnp.int32))
+        self.metrics: Dict[str, Any] = {
+            "warmup_s": 0.0,
+            "prefill_latency_s": [],  # per prefill micro-batch
+            "prefill_prompt_tokens": 0,
+            "decode_steps": 0,
+            "decode_tokens": 0,  # decode-ISSUED tokens only (no prefill token)
+            "decode_step_s": [],  # (wall seconds, active slots) per step
+            "admitted": 0,
+            "finished": 0,
+            "max_concurrent": 0,
+        }
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        """Queue a request. The prompt must leave room for at least one
+        generated token; max_new_tokens is clamped to the slot's context
+        capacity (ring windows only make attention *cheaper* than
+        max_len — positions past capacity would silently wrap GLOBAL
+        attention into a sliding window, so we refuse instead)."""
+        L = req.prompt_len
+        if L < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if L >= self.plan.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {L} >= plan.max_len "
+                f"{self.plan.max_len} — no capacity left to generate")
+        req.max_new_tokens = min(req.max_new_tokens, self.plan.max_len - L)
+        req.state = QUEUED
+        req.queued_s = now
+        self._queue.append(req)
+
+    def _next_group(self) -> List[Request]:
+        """Pick the next prefill micro-batch: FIFO up to
+        min(prefill_micro, free slots); exact-length families additionally
+        filter to the head request's prompt length (the head itself always
+        qualifies, so no starvation)."""
+        k = min(self.plan.prefill_micro, self.pool.free_count,
+                len(self._queue))
+        if k < 1:
+            return []
+        if self.plan.ragged_prefill:
+            return [self._queue.popleft() for _ in range(k)]
+        head_len = self._queue[0].prompt_len
+        group, keep = [], []
+        for r in self._queue:
+            if len(group) < k and r.prompt_len == head_len:
+                group.append(r)
+            else:
+                keep.append(r)
+        self._queue = collections.deque(keep)
+        return group
+
+    def _bucket_len(self, prompt_len: int) -> int:
+        if not self.plan.ragged_prefill:
+            return prompt_len  # exact-length group: no padding at all
+        b = self.pad_multiple * math.ceil(prompt_len / self.pad_multiple)
+        return min(b, self.plan.max_len - 1)
+
+    def _fold_key(self):
+        k = jax.random.fold_in(self._key, self._step_idx)
+        self._step_idx += 1
+        return k
+
+    def _prefill_group(self, group: List[Request], now: float) -> float:
+        """PREFILL: batch the group (padded to the full prefill_micro rows
+        so bucket count, not queue state, bounds compile count), sample
+        each row's first token, scatter cache rows into allocated slots."""
+        m = self.plan.prefill_micro
+        for r in group:
+            r.state = PREFILL
+        if self.plan.ragged_prefill:
+            bucket = self._bucket_len(max(r.prompt_len for r in group))
+            toks = np.zeros((m, bucket), np.int32)
+            lengths = np.ones((m,), np.int32)
+            for i, r in enumerate(group):
+                toks[i, :r.prompt_len] = r.prompt
+                lengths[i] = r.prompt_len
+            t0 = time.perf_counter()
+            logits, cache = self._prefill_ragged(self.params, toks, lengths)
+        else:
+            bucket = group[0].prompt_len
+            toks = np.zeros((m, bucket), np.int32)
+            for i, r in enumerate(group):
+                toks[i] = r.prompt
+            t0 = time.perf_counter()
+            logits, cache = self._prefill_exact(self.params, toks)
+        first = np.asarray(self._sample_first(logits, self._fold_key()))
+        dt = time.perf_counter() - t0
+        t_tok = now + dt
+        for i, r in enumerate(group):
+            slot = self.pool.alloc()
+            self.pool.insert(cache, i, slot)
+            r.slot = slot
+            r.tokens.append(int(first[i]))
+            r.first_token_s = t_tok
+            r.state = DECODE
+            self._tok[slot, 0] = first[i]
+            self._pos[slot] = r.prompt_len
+            self._by_slot[slot] = r
+            self.metrics["admitted"] += 1
+            self.metrics["prefill_prompt_tokens"] += r.prompt_len
+            if len(r.tokens) >= r.max_new_tokens:
+                self._finish(r, t_tok)
+        self.metrics["prefill_latency_s"].append(dt)
+        self.metrics["max_concurrent"] = max(self.metrics["max_concurrent"],
+                                             len(self._by_slot))
+        return dt
+
+    # -- decode ------------------------------------------------------------
+
+    def _decode_once(self, now: float) -> float:
+        """One continuous-batching step over the whole pool. Only tokens
+        for ACTIVE slots are counted/recorded — the satellite bugfix: the
+        prefill-produced token is never in this count, and inactive slots'
+        garbage lanes are dropped on the host."""
+        t0 = time.perf_counter()
+        nxt, self.pool.cache = self._decode(self.params, self.pool.cache,
+                                            self._tok, self._pos,
+                                            self._fold_key())
+        nxt_np = np.asarray(nxt)  # device sync: the per-step latency fence
+        dt = time.perf_counter() - t0
+        t_tok = now + dt
+        active = list(self._by_slot.items())
+        for slot, r in active:
+            tok = int(nxt_np[slot])
+            r.tokens.append(tok)
+            self._tok[slot, 0] = tok
+            self._pos[slot] += 1
+            if len(r.tokens) >= r.max_new_tokens:
+                self._finish(r, t_tok)
+        self.metrics["decode_steps"] += 1
+        self.metrics["decode_tokens"] += len(active)
+        self.metrics["decode_step_s"].append((dt, len(active)))
+        return dt
+
+    def _finish(self, req: Request, now: float) -> None:
+        """FINISHED: evict — the slot returns to the free list and is
+        immediately reusable (the next admission overwrites the row)."""
+        req.state = FINISHED
+        req.finish_s = now
+        self.pool.free(req.slot)
+        self._by_slot.pop(req.slot, None)
+        self.metrics["finished"] += 1
+
+    # -- loop --------------------------------------------------------------
+
+    def warmup(self, prompt_lens: Sequence[int] = ()) -> float:
+        """Compile the decode step and the prefill bucket(s) BEFORE the
+        clock starts — the satellite bugfix for the old launcher, which
+        started t0 ahead of both jit compiles and sold compile time as
+        decode throughput. Garbage written into the empty pool is
+        harmless: admission overwrites whole slot rows."""
+        if self._by_slot:
+            raise RuntimeError("warmup() must run before traffic is admitted")
+        t0 = time.perf_counter()
+        nxt, cache = self._decode(self.params, self.pool.cache, self._tok,
+                                  self._pos, self._fold_key())
+        jax.block_until_ready(nxt)
+        self.pool.cache = cache
+        m = self.plan.prefill_micro
+        for bucket in sorted({self._bucket_len(L) for L in prompt_lens}):
+            toks = np.zeros((m, bucket), np.int32)
+            if self.plan.ragged_prefill:
+                out = self._prefill_ragged(self.params, toks,
+                                           np.ones((m,), np.int32))
+            else:
+                out = self._prefill_exact(self.params, toks)
+            jax.block_until_ready(out[0])  # cache discarded, never inserted
+        dt = time.perf_counter() - t0
+        self.metrics["warmup_s"] += dt
+        return dt
+
+    def run(self, requests: Iterable[Request], *, warmup: bool = True,
+            warmup_prompt_lens: Sequence[int] = ()) -> Dict[str, Any]:
+        """Drive the full lifecycle over a request stream (an iterable
+        ordered by ``arrival_s``). Per loop turn: admit due arrivals, run
+        at most one prefill micro-batch if slots are free, then one decode
+        step over the pool — so prefill of new requests interleaves with
+        decode of admitted ones (continuous batching, not static waves)."""
+        it: Iterator[Request] = iter(requests)
+        pending = next(it, None)
+        if warmup:
+            lens = list(warmup_prompt_lens)
+            if not lens and pending is not None:
+                lens = [pending.prompt_len]
+            self.warmup(lens)
+        t0 = time.perf_counter()
+        while pending is not None or self._queue or self._by_slot:
+            now = time.perf_counter() - t0
+            while pending is not None and pending.arrival_s <= now:
+                self.submit(pending, now)
+                pending = next(it, None)
+            progressed = False
+            group = self._next_group()
+            if group:
+                now += self._prefill_group(group, now)
+                progressed = True
+            if self._by_slot:
+                self._decode_once(now)
+                progressed = True
+            if not progressed and pending is not None:
+                time.sleep(min(max(pending.arrival_s - now, 0.0), 0.002))
+        return self.report()
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        """Aggregate metrics. Decode throughput is decode-issued tokens
+        over decode wall time only (no prefill, no compile); ITL weights
+        each step's latency by the tokens it produced."""
+        m = self.metrics
+        decode_time = sum(dt for dt, _ in m["decode_step_s"])
+        itl = np.repeat([dt for dt, _ in m["decode_step_s"]],
+                        [n for _, n in m["decode_step_s"]])
+        occupancy = _percentiles([n for _, n in m["decode_step_s"]])
+        return {
+            "warmup_s": m["warmup_s"],
+            "requests": {"admitted": m["admitted"], "finished": m["finished"]},
+            "prefill": {
+                "batches": len(m["prefill_latency_s"]),
+                "prompt_tokens": m["prefill_prompt_tokens"],
+                "latency_s": _percentiles(m["prefill_latency_s"]),
+            },
+            "decode": {
+                "steps": m["decode_steps"],
+                "tokens": m["decode_tokens"],
+                "time_s": decode_time,
+                "tokens_per_s": (m["decode_tokens"] / decode_time
+                                 if decode_time else 0.0),
+                "itl_s": _percentiles(itl),
+            },
+            "slots": {
+                "planned": self.plan.max_decode_slots,
+                "max_concurrent": m["max_concurrent"],
+                "mean_active_per_step": occupancy["mean"],
+            },
+            "ttft_s": _percentiles([]),  # populated by finished_report
+        }
+
+    def finished_report(self, requests: Sequence[Request]) -> Dict[str, Any]:
+        """report() plus TTFT percentiles over a finished request list."""
+        rep = self.report()
+        ttfts = [r.first_token_s - r.arrival_s for r in requests
+                 if r.first_token_s is not None]
+        rep["ttft_s"] = _percentiles(ttfts)
+        return rep
+
+
+def synthetic_traffic(n_requests: int, *, rate_rps: float,
+                      prompt_lens: Sequence[int], new_tokens: Sequence[int],
+                      vocab_size: int, seed: int = 0) -> Iterator[Request]:
+    """Synthetic heavy-traffic stream: Poisson arrivals (exponential
+    inter-arrival gaps at ``rate_rps`` requests/s) with prompt lengths and
+    output budgets drawn uniformly from the given mixes. A generator so
+    the launcher can stage it through ``core.streaming.prefetch_iterator``
+    and overlap prompt synthesis with the serve loop."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        L = int(rng.choice(prompt_lens))
+        yield Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab_size, (L,), dtype=np.int32),
+            max_new_tokens=int(rng.choice(new_tokens)),
+            arrival_s=t)

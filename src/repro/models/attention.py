@@ -192,16 +192,36 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def ring_cache_from_full(k, v, positions, window, max_len: int):
+def ring_cache_from_full(k, v, positions, window, max_len: int,
+                         lengths=None):
     """Convert full-sequence prefill (k, v) into the ring-buffer cache layout
     used by ``attn_decode_step``. positions: (B, S) absolute positions
     following the standard arange layout (slot = position % W).
 
     Implemented as a static gather permutation along the sequence axis (not a
     batch-indexed scatter, which GSPMD replicates — 2×8 GiB/device at
-    gemma2 prefill_32k scale)."""
+    gemma2 prefill_32k scale).
+
+    ``lengths`` (B,) switches to the RAGGED layout for right-padded prompt
+    batches: row ``b``'s ring holds its last ``min(lengths[b], W)`` REAL
+    tokens (slot ``p % W`` holds position ``p``) and every other slot is
+    empty (pos -1) — padding tokens never enter the cache and, crucially,
+    never evict real keys out of a sliding window the way the dense
+    layout's tail would. This is a per-row gather (take_along_axis), the
+    batch-dynamic generalization of the static permutation below."""
     B, S, K, hd = k.shape
     W = max_len if window is None else min(window, max_len)
+    if lengths is not None:
+        L = lengths.astype(jnp.int32)[:, None]  # (B, 1)
+        j = jnp.arange(W, dtype=jnp.int32)[None]  # (1, W)
+        # largest real position p <= L-1 with p ≡ j (mod W); rows shorter
+        # than W leave slots j >= L empty
+        p = L - 1 - ((L - 1 - j) % W)
+        valid = p >= 0
+        src = jnp.clip(p, 0, S - 1)[..., None, None]
+        ck = jnp.take_along_axis(k, src, axis=1)
+        cv = jnp.take_along_axis(v, src, axis=1)
+        return {"k": ck, "v": cv, "pos": jnp.where(valid, p, -1)}
     take = min(S, W)
     if take < W:  # short prefill: slots [0, S) filled, the rest empty
         pad = W - take

@@ -94,7 +94,7 @@ def _theta_for(cfg: ModelConfig, kind: str):
 def _apply_slot(p, cfg: ModelConfig, kind: str, x, positions, *, dtype,
                 global_window=None, mrope_positions=None,
                 want_cache: bool = False, max_len: Optional[int] = None,
-                remat_policy: str = "none"):
+                remat_policy: str = "none", lengths=None):
     """Returns (x, aux_loss, cache_entry). Under ``remat_policy="full"``
     each block (attention / FFN / MoE / SSM / RG-LRU) nests its own
     ``jax.checkpoint`` inside the per-period one, so the backward pass
@@ -129,7 +129,8 @@ def _apply_slot(p, cfg: ModelConfig, kind: str, x, positions, *, dtype,
         x = x + h
         if want_cache:
             kv = attention.ring_cache_from_full(kv[0], kv[1], positions,
-                                                window, max_len)
+                                                window, max_len,
+                                                lengths=lengths)
         return x, aux, kv
     if kind == "recurrent":
         h = nn.rmsnorm(p["pre_norm"], x, cfg.norm_eps)
@@ -232,13 +233,38 @@ def _lm_head(params, cfg: ModelConfig, x):
     return nn.softcap(logits, cfg.final_softcap)
 
 
+def supports_ragged_prefill(cfg: ModelConfig) -> bool:
+    """True when a right-padded ragged prompt batch prefills EXACTLY: pure
+    attention stacks only. Causal attention never lets a real query row see
+    the padding appended after it, but state-carrying blocks (ssm /
+    recurrent conv+recurrence) run their scan *through* the padded tail,
+    and MoE routing competes padded tokens for expert capacity — both
+    change real-token outputs, so those families must prefill exact-length
+    groups instead (``engine/serving`` enforces this per family)."""
+    return (not cfg.is_moe
+            and all(k in ("global", "local") for k in cfg.layer_pattern))
+
+
 def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
             positions=None, vision_embeds=None, mrope_positions=None,
-            dtype=jnp.bfloat16, global_window=None, scan_unroll: int = 1):
+            dtype=jnp.bfloat16, global_window=None, scan_unroll: int = 1,
+            lengths=None):
     """Serving prefill: full-sequence forward that also builds the decode
     cache (ring layout, matching ``init_cache``). Returns
-    (last_token_logits (B, V), cache)."""
+    (last_token_logits (B, V), cache).
+
+    ``lengths`` (B,) serves a RIGHT-PADDED ragged prompt batch: the logits
+    are taken at each row's last real token (``lengths[b] - 1``) and the
+    ring cache holds only real tokens (padding never evicts real keys from
+    a sliding window). Only valid for configs where padding is exact —
+    see :func:`supports_ragged_prefill`."""
     B, S = tokens.shape[:2]
+    if lengths is not None and not supports_ragged_prefill(cfg):
+        raise ValueError(
+            f"{cfg.name}: ragged (right-padded) prefill is only exact for "
+            "pure-attention stacks; this config has state-carrying or MoE "
+            "blocks — prefill exact-length groups instead "
+            "(see transformer.supports_ragged_prefill)")
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     nn.set_seq_shard(False if cfg.is_moe else None)
@@ -252,13 +278,19 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
                 x, _, c = _apply_slot(p, cfg, kind, x, positions, dtype=dtype,
                                       global_window=global_window,
                                       mrope_positions=mrope_positions,
-                                      want_cache=True, max_len=max_len)
+                                      want_cache=True, max_len=max_len,
+                                      lengths=lengths)
                 caches.append(c)
             return x, tuple(caches)
 
         x, cache = jax.lax.scan(scan_body, x, params["blocks"],
                                 unroll=scan_unroll)
-        x = nn.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        x = nn.rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
         return _lm_head(params, cfg, x)[:, 0], cache
     finally:
         nn.set_seq_shard(None)

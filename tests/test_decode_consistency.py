@@ -70,6 +70,69 @@ def test_encdec_decode_matches_forward():
         assert err < 1e-4, (t, err)
 
 
+@pytest.mark.parametrize("name", ["dense-local-global", "ssm", "hybrid"])
+def test_ring_wraparound_matches_full_recompute(name):
+    """Serving past the window: prompt_len + new_tokens > sliding_window,
+    so the local-layer ring wraps (several times) during DECODE, not just
+    during prefill. Every decode step's logits must equal the
+    full-recompute reference — a fresh full forward over the whole prefix,
+    which never uses the ring at all."""
+    kw = dict(name=name, family="t", d_model=64, num_heads=4, num_kv_heads=2,
+              head_dim=16, d_ff=128, vocab_size=128)
+    kw.update(CASES[name])
+    cfg = ModelConfig(**kw)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    S = 26  # window is 8 -> the ring wraps 3x over the decode tail
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, S), 0, 128)
+    prompt = 6  # prompt shorter than the window; the wrap happens mid-decode
+    _, cache = transformer.prefill(params, cfg, toks[:, :prompt], max_len=S,
+                                   dtype=jnp.float32)
+    for t in range(prompt, S):
+        lg, cache = transformer.decode_step(
+            params, cfg, toks[:, t:t + 1], cache,
+            jnp.full((2,), t, jnp.int32), dtype=jnp.float32)
+        ref, _ = transformer.forward(params, cfg, toks[:, :t + 1],
+                                     dtype=jnp.float32, remat=False)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - ref[:, t])))
+        assert err < 1e-4, (name, t, err)
+
+
+def test_ragged_prefill_matches_exact_per_row():
+    """Right-padded ragged prefill (lengths=) must equal per-row
+    exact-length prefill — including rows LONGER than the sliding window,
+    where a naive padded ring would let pad keys evict real ones — and the
+    caches it builds must decode identically afterwards."""
+    cfg = ModelConfig(name="rag", family="t", d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+                      layer_pattern=("local", "global"), num_layers=2,
+                      sliding_window=4)
+    assert transformer.supports_ragged_prefill(cfg)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lengths = (3, 11, 7)  # row 1 exceeds the window by nearly 2 wraps
+    pad_to = 16
+    rows = [jax.random.randint(jax.random.PRNGKey(10 + i), (L,), 0, 128)
+            for i, L in enumerate(lengths)]
+    padded = jnp.stack([jnp.pad(r, (0, pad_to - r.shape[0]),
+                                constant_values=99) for r in rows])
+    last_r, cache_r = transformer.prefill(
+        params, cfg, padded, max_len=32, dtype=jnp.float32,
+        lengths=jnp.array(lengths, jnp.int32))
+    next_tok = jax.random.randint(jax.random.PRNGKey(20), (3, 1), 0, 128)
+    lg_r, _ = transformer.decode_step(
+        params, cfg, next_tok, cache_r, jnp.array(lengths, jnp.int32),
+        dtype=jnp.float32)
+    for i, L in enumerate(lengths):
+        last_e, cache_e = transformer.prefill(
+            params, cfg, rows[i][None, :], max_len=32, dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(last_r[i] - last_e[0])))
+        assert err < 1e-4, ("prefill", i, err)
+        lg_e, _ = transformer.decode_step(
+            params, cfg, next_tok[i:i + 1], cache_e,
+            jnp.array([L], jnp.int32), dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(lg_r[i, 0] - lg_e[0, 0])))
+        assert err < 1e-4, ("decode", i, err)
+
+
 def test_long_context_global_window_variant():
     """gemma3-style long-context serving: global layers under a window cap
     behave identically to full attention while the context fits the cap."""
