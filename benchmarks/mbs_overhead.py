@@ -55,15 +55,25 @@ per-token latency under a synthetic Poisson request stream (warmup/compile
 excluded, decode-issued tokens only), TTFT, the admitted-slots-vs-budget
 curve from ``plan_serve``, and the XLA-measured decode peak
 (``memory_analysis`` on the pool-wide decode step) proving the plan's
-admission stays under the budget it was built for."""
+admission stays under the budget it was built for.
+
+``--pp-bench`` benchmarks pipeline parallelism (engine Layer 11) and
+writes ``BENCH_pp.json``: 1F1B PipelinedExecutor step time on a staged
+toy stack at stages 2/4 × dp 1/2 vs the stages=1 baselines
+(CompiledScanExecutor / deferred-sync ShardedExecutor), with the
+schedule's analytic bubble fraction and tick count per cell — plus the
+planner's pipelined admission on reduced qwen2: the local micro-batch
+admitted at a fixed per-device budget as the model axis absorbs the
+block stack (stage-local activations buy batch the flat layout cannot)."""
 from __future__ import annotations
 
 import os
 import sys
 
-if "--mesh-bench" in sys.argv and "xla_force_host_platform_device_count" \
+if ("--mesh-bench" in sys.argv or "--pp-bench" in sys.argv) \
+        and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
-    # must land before jax initializes: the mesh bench needs >= 8 host devices
+    # must land before jax initializes: these benches need >= 8 host devices
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=8"
                                ).strip()
@@ -790,6 +800,162 @@ def mesh_main(quick: bool = True, out_path: str = "BENCH_mesh.json"):
     return results
 
 
+def pp_main(quick: bool = True, out_path: str = "BENCH_pp.json"):
+    """Pipeline-parallel benchmark (``--pp-bench``), the engine Layer 11
+    acceptance numbers, recorded run over run in ``BENCH_pp.json``:
+
+      * **step_times** — the 1F1B PipelinedExecutor on a staged toy stack
+        (4 stacked middle layers, the :class:`~repro.engine.StagedLoss`
+        contract) at stages 2/4 × dp 1/2, vs the stages=1 baselines at
+        the same data parallelism (CompiledScanExecutor at dp=1, the
+        deferred-sync ShardedExecutor at dp=2). Each pipelined cell also
+        records the closed-form schedule's tick count and bubble fraction
+        (S-1)/(M+S-1) — the analytic idle share the measured time should
+        track as micro-batches amortize the fill/drain ramps.
+      * **admission** — reduced qwen2 at a fixed per-device budget: the
+        local micro-batch ``plan_mbs`` admits at stages 1/2 × dp 1/2/4.
+        With ``pipeline=True`` the model axis holds stage-LOCAL blocks and
+        activations, so the per-device activation term shrinks with the
+        stage count and the planner converts the freed bytes into batch.
+    """
+    from repro.core import losses
+    from repro.launch import mesh as mesh_lib
+
+    # staged toy stack: prelude -> NUM_LAYERS stacked tanh blocks ->
+    # logits + CE, factored through the StagedLoss contract with a flat
+    # single-device twin computing the identical function
+    num_layers, d_in, d_h, n_cls = 4, 8, 64, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {
+        "w_in": 0.3 * jax.random.normal(ks[0], (d_in, d_h), jnp.float32),
+        "mid": 0.3 * jax.random.normal(ks[1], (num_layers, d_h, d_h),
+                                       jnp.float32),
+        "w_out": 0.3 * jax.random.normal(ks[2], (d_h, n_cls), jnp.float32),
+    }
+    mini_batch, micro = 16, 4
+    batch = {"x": jax.random.normal(ks[3], (mini_batch, d_in), jnp.float32),
+             "y": jax.random.randint(ks[4], (mini_batch,), 0, n_cls,
+                                     jnp.int32)}
+
+    def flat_loss(p, mb, exact_denom=None):
+        x = jnp.tanh(mb["x"] @ p["w_in"])
+        for i in range(num_layers):
+            x = jnp.tanh(x @ p["mid"][i])
+        return losses.cross_entropy(
+            x @ p["w_out"], mb["y"], sample_weight=mb.get("sample_weight"),
+            exact_denom=exact_denom), {}
+
+    def prelude(shared, mb):
+        return jnp.tanh(mb["x"] @ shared["w_in"])
+
+    def stage_fn(stage_p, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, stage_p)[0]
+
+    def finale(shared, x, mb):
+        return losses.cross_entropy(
+            x @ shared["w_out"], mb["y"],
+            sample_weight=mb.get("sample_weight"), exact_denom=1.0), {}
+
+    staged = engine.StagedLoss(num_layers=num_layers, prelude=prelude,
+                               stage_fn=stage_fn, finale=finale,
+                               stacked_key="mid")
+    opt = optim.sgd(0.01, momentum=0.9)
+    iters = 3 if quick else 10
+
+    results = {"benchmark": "pipeline_parallel", "devices": jax.device_count(),
+               "mini_batch": mini_batch, "micro_batch": micro,
+               "toy": {"num_layers": num_layers, "d_hidden": d_h},
+               "step_times": {}, "admission": {}}
+
+    base_by_dp = {}
+    for stages in (1, 2, 4):
+        for dp in (1, 2):
+            key = f"s{stages}xd{dp}"
+            if jax.device_count() < stages * dp:
+                results["step_times"][key] = {
+                    "skipped": f"needs {stages * dp} devices, have "
+                               f"{jax.device_count()}"}
+                continue
+            if stages == 1 and dp == 1:
+                plan = engine.plan_mbs(mini_batch, micro_batch_size=micro,
+                                       normalization="exact", remat=False)
+                ex = engine.CompiledScanExecutor(flat_loss, opt, plan)
+                split = plan.device_split(batch)
+            elif stages == 1:
+                mesh = mesh_lib.make_host_mesh(data=dp, model=1)
+                plan = engine.plan_mbs(mini_batch, micro_batch_size=micro,
+                                       normalization="exact", remat=False,
+                                       mesh=mesh)
+                ex = engine.ShardedExecutor(flat_loss, opt, plan, mesh=mesh,
+                                            inner="compiled",
+                                            defer_sync=True, donate=False)
+                split = plan.device_split(batch)
+            else:
+                mesh = mesh_lib.make_host_mesh(data=dp, model=stages)
+                plan = engine.plan_mbs(mini_batch, micro_batch_size=micro,
+                                       normalization="exact", remat=False,
+                                       mesh=mesh, pipeline=True)
+                ex = engine.PipelinedExecutor(staged, opt, plan, mesh=mesh,
+                                              defer_sync=True)
+                split = ex.stage(plan.split(batch))
+            step = jax.jit(ex.make_train_step())
+            dt = _time_step(step, params, opt.init(params), split, iters)
+            row = {"step_time_s": dt,
+                   "num_microbatches": plan.num_micro_batches}
+            if stages == 1:
+                base_by_dp[dp] = dt
+            else:
+                n_micro = plan.num_micro_batches
+                _, _, _, ticks = engine.schedule_1f1b(stages, n_micro)
+                row["ticks"] = int(ticks)
+                row["bubble_fraction"] = (stages - 1) / (n_micro + stages - 1)
+                row["slowdown_vs_flat"] = dt / base_by_dp[dp]
+            results["step_times"][key] = row
+            extra = (f"bubble={row['bubble_fraction']:.2f} "
+                     f"x{row['slowdown_vs_flat']:.2f} vs flat dp{dp}"
+                     if stages > 1 else "flat baseline")
+            emit(f"pp/{key}/step", dt * 1e6, extra)
+
+    # pipelined admission on the real reduced stack: fixed per-device
+    # budget, growing model axis (stages must divide the block stack —
+    # the reduced configs have 2 periods, so stages in {1, 2})
+    cfg = configs.get_reduced("qwen2-1.5b")
+    seq, mini_adm = 64, 256
+    est1 = memory_model.estimate(cfg, seq, act_bytes=4, remat_policy="period")
+    budget = est1.total(2)
+    results["admission"]["arch"] = "qwen2-1.5b-reduced"
+    results["admission"]["seq"] = seq
+    results["admission"]["budget_bytes"] = int(budget)
+    results["admission"]["grid"] = {}
+    for stages in (1, 2):
+        for dp in (1, 2, 4):
+            mesh = mesh_lib.make_host_mesh(data=dp, model=stages)
+            plan = engine.plan_mbs(mini_adm, model_cfg=cfg, seq_len=seq,
+                                   budget_bytes=budget, act_bytes=4,
+                                   remat_policy="period", mesh=mesh,
+                                   pipeline=(stages > 1), fsdp_params=False)
+            est = memory_model.estimate(cfg, seq, act_bytes=4,
+                                        remat_policy="period", mesh=mesh,
+                                        pipeline=(stages > 1))
+            key = f"s{stages}xd{dp}"
+            results["admission"]["grid"][key] = {
+                "local_micro": plan.local_micro,
+                "global_micro": plan.micro_batch_size,
+                "num_microbatches": plan.num_micro_batches,
+                "pipeline_stages": getattr(plan, "pipeline_stages", 1),
+                "act_bytes_per_sample": int(est.activation_bytes_per_sample),
+            }
+            emit(f"pp/admission/{key}", float(plan.micro_batch_size),
+                 f"local={plan.local_micro} "
+                 f"act/sample={est.activation_bytes_per_sample}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}", flush=True)
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", action="store_true",
@@ -816,6 +982,11 @@ if __name__ == "__main__":
                     help="run the fault-tolerance benchmark (per-fault-class "
                          "recovery time / steps lost / admission "
                          "degradation) and write BENCH_faults.json")
+    ap.add_argument("--pp-bench", action="store_true",
+                    help="run the pipeline-parallel benchmark (1F1B step "
+                         "time at stages 2/4 x dp 1/2 vs the flat "
+                         "baselines + pipelined planner admission) and "
+                         "write BENCH_pp.json")
     ap.add_argument("--serve-bench", action="store_true",
                     help="run the serving benchmark (decode tok/s, p50/p99 "
                          "per-token latency, admitted-slots-vs-budget, "
@@ -836,6 +1007,8 @@ if __name__ == "__main__":
                     cache_path=a.tuning_cache)
     elif a.fault_bench:
         faults_main(quick=a.quick, out_path=a.out or "BENCH_faults.json")
+    elif a.pp_bench:
+        pp_main(quick=a.quick, out_path=a.out or "BENCH_pp.json")
     elif a.serve_bench:
         serve_main(quick=a.quick, out_path=a.out or "BENCH_serve.json")
     else:

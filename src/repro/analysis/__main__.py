@@ -10,6 +10,7 @@ Examples::
     python -m repro.analysis --config qwen2_reduced --executor flat --mesh host
     python -m repro.analysis --config qwen2_reduced --config resnet50 \
         --executor flat --executor compiled --mesh host --json --out report.json
+    python -m repro.analysis --config qwen2_reduced --mesh 2:2 --force-devices 8
     python -m repro.analysis --lint-only
 """
 from __future__ import annotations
@@ -31,10 +32,12 @@ def _parse(argv):
                          "Known: see repro.analysis.TARGETS")
     ap.add_argument("--executor", action="append", default=None,
                     help="executor name (repeatable; default flat)")
-    ap.add_argument("--mesh", default="single", choices=["single", "host"],
-                    help="'host' runs the sharded deferred-sync contract "
-                         "over all visible devices (falls back to single "
-                         "on 1 device)")
+    ap.add_argument("--mesh", default="single",
+                    help="'single' (no mesh), 'host' (all visible devices "
+                         "on the data axis — the sharded deferred-sync "
+                         "contract; falls back to single on 1 device), or "
+                         "'DATA:MODEL' (e.g. '2:2' — a 2-D mesh running "
+                         "the pipelined 1F1B contracts JX005/HLO005)")
     ap.add_argument("--remat-policy", default=None,
                     help="override the remat lattice row (default: the "
                          "target's shipped policy)")

@@ -49,6 +49,14 @@ RULES: Dict[str, Dict[str, str]] = {
               "contract": "collective census: exactly one gradient psum "
                           "per mini-batch when defer_sync, >= N_Smu "
                           "otherwise, zero without a mesh"},
+    "JX005": {"layer": "jaxpr",
+              "contract": "pipelined (1F1B) collective census: "
+                          "stage-boundary ppermute count matches the "
+                          "closed-form schedule exactly; deferred sync "
+                          "keeps ONE data-axis gradient psum per "
+                          "mini-batch plus ONE (data, model) psum for "
+                          "shared grads/loss/metrics; the per-micro "
+                          "baseline issues >= N_Smu data-axis psums"},
     "HLO001": {"layer": "hlo",
                "contract": "input_output_aliases covers every donated "
                            "param/opt/accumulator buffer (zero-copy "
@@ -63,6 +71,14 @@ RULES: Dict[str, Dict[str, str]] = {
                "contract": "compiled collective schedule: one all-reduce "
                            "per mini-batch (deferred) / >= N_Smu "
                            "(per-micro baseline)"},
+    "HLO005": {"layer": "hlo",
+               "contract": "compiled pipelined schedule: exactly two "
+                           "non-scalar all-reduces (staged-grad data "
+                           "psum + shared data-model psum) when "
+                           "deferred, >= N_Smu when per-micro; "
+                           "collective-permute count bounded by the "
+                           "jaxpr schedule census (XLA may merge "
+                           "adjacent permutes, never add them)"},
     "LINT001": {"layer": "ast",
                 "contract": "no float()/.item()/jax.device_get host syncs "
                             "in engine hot-loop modules"},

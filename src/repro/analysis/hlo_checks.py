@@ -175,6 +175,70 @@ def check_memory_model(compiled, modeled_bytes: Optional[int], *,
 # HLO004 — compiled gradient-sync schedule
 # ---------------------------------------------------------------------------
 
+#: all-reduce payloads at or under this byte count are treated as
+#: scalar/metric traffic (the grad-norm scalar, XLA-introduced scalar
+#: syncs from sharding propagation), not gradient syncs
+_SCALAR_ALLREDUCE_BYTES = 64
+
+
+def _op_payloads(obj, op: str) -> List[int]:
+    """Per-instruction output payload bytes for one collective kind
+    (async ``-done`` arms skipped — the ``-start`` carries the shape)."""
+    out = []
+    for m in _COLL_RE.finditer(hlo_text(obj)):
+        if m.group("op") != op or m.group(0).rstrip("(").endswith("-done"):
+            continue
+        out.append(_shape_bytes(m.group("out")))
+    return out
+
+
+def check_pipeline_hlo(obj, *, expect: str, n_micro: int,
+                       max_ppermutes: int,
+                       context: str = "") -> List[Finding]:
+    """HLO005 — the compiled pipelined (1F1B) schedule.
+
+    All-reduces are classified by payload: non-scalar ones are gradient
+    syncs (deferred contract: exactly TWO — the stage-local flat data
+    psum and the shared (data, model) psum; per-micro baseline: >=
+    N_Smu), scalar ones are metric traffic (the grad-norm scalar plus
+    whatever scalar syncs XLA's sharding propagation introduces) and
+    exempt. The collective-permute count is bounded, not pinned: XLA
+    legitimately merges adjacent permutes of the same source/target
+    pairs, so the compiled count must be >= 1 and <= the jaxpr
+    schedule census (``max_ppermutes``) — more than the schedule means
+    boundary traffic the executor never issued."""
+    if expect not in ("deferred", "per-micro"):
+        raise ValueError(f"bad expect {expect!r}")
+    ars = _op_payloads(obj, "all-reduce")
+    big = [b for b in ars if b > _SCALAR_ALLREDUCE_BYTES]
+    perms = len(_op_payloads(obj, "collective-permute"))
+    details = {"nonscalar_allreduces": len(big),
+               "scalar_allreduces": len(ars) - len(big),
+               "collective_permutes": perms,
+               "max_ppermutes": max_ppermutes,
+               "n_micro": n_micro, "expect": expect}
+    out: List[Finding] = []
+    if expect == "deferred" and len(big) != 2:
+        out.append(Finding(
+            "HLO005", SEVERITY_ERROR,
+            f"deferred pipelined step compiled to {len(big)} non-scalar "
+            "all-reduce(s), contract is exactly 2 (stage-local data psum "
+            "+ shared data-model psum)", location=context, details=details))
+    if expect == "per-micro" and len(big) < n_micro:
+        out.append(Finding(
+            "HLO005", SEVERITY_ERROR,
+            f"per-micro pipelined baseline compiled to {len(big)} "
+            f"non-scalar all-reduce(s), expected >= {n_micro}",
+            location=context, details=details))
+    if not (1 <= perms <= max_ppermutes):
+        out.append(Finding(
+            "HLO005", SEVERITY_ERROR,
+            f"{perms} collective-permute(s) in the compiled pipelined "
+            f"step, expected between 1 and the jaxpr schedule census "
+            f"{max_ppermutes}", location=context, details=details))
+    return out
+
+
 def check_gradient_sync(obj, *, expect: str, n_micro: int,
                         context: str = "") -> List[Finding]:
     """The PR-5 contract at the HLO level: a deferred-sync sharded step

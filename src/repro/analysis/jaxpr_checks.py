@@ -306,8 +306,139 @@ def check_collectives(jaxpr, params, *, n_micro: int,
 
 
 # ---------------------------------------------------------------------------
-# the bundled jaxpr pass
+# JX005 — pipelined (1F1B) collective census
 # ---------------------------------------------------------------------------
+
+def check_pipeline_collectives(jaxpr, plan, *, stages: int,
+                               expect: str = "deferred",
+                               data_axes: Tuple[str, ...] = ("pod", "data"),
+                               model_axis: str = "model") -> List[Finding]:
+    """Collective census of a :class:`engine.PipelinedExecutor` step.
+
+    The 1F1B schedule is closed-form (``engine.schedule_1f1b``), so the
+    stage-boundary traffic is exactly predictable at trace level: one
+    ``ppermute`` per tick in which ANY stage runs a forward, plus one per
+    tick in which any stage runs a backward (the executor host-gates the
+    rest away). The psum census is the deferred-sync contract composed
+    with pipelining: ONE data-axis psum for the stage-local gradient
+    accumulator per mini-batch, plus ONE (data, model) psum carrying
+    shared-param grads + loss + metrics + the valid count. The per-micro
+    baseline (``defer_sync=False``) instead issues a data-axis psum in
+    every backward-active tick (>= N_Smu of them).
+
+    ``expect``: ``"deferred"`` | ``"per-micro"``. FSDP steps replace the
+    data-axis gradient psum with per-leaf psum_scatter (not censused
+    here — gate FSDP artifacts on numerics + HLO002 instead)."""
+    if expect not in ("deferred", "per-micro"):
+        raise ValueError(f"bad expect {expect!r}")
+    from ..engine.pipelined import schedule_1f1b
+    n_micro = int(plan.num_micro_batches)
+    fwd_tab, bwd_tab, _, _ = schedule_1f1b(stages, n_micro)
+    expected_pp = int((fwd_tab >= 0).any(axis=1).sum()
+                      + (bwd_tab >= 0).any(axis=1).sum())
+
+    pp = 0
+    unknown_trip: List[str] = []
+    data_psums: List[str] = []
+    mixed_psums: List[str] = []
+    model_psums: List[str] = []
+    for eqn, path, trip in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name not in COLLECTIVE_PRIMITIVES:
+            continue
+        loc = _loc(path, name)
+        if trip is None:
+            unknown_trip.append(loc)
+            continue
+        if name == "ppermute":
+            pp += trip
+            continue
+        if name in ("psum", "psum2"):
+            axes = eqn.params.get("axes") or ()
+            if isinstance(axes, str):
+                axes = (axes,)
+            has_data = any(a in data_axes for a in axes)
+            has_model = model_axis in axes
+            if has_data and has_model:
+                mixed_psums.extend([loc] * trip)
+            elif has_data:
+                data_psums.extend([loc] * trip)
+            elif has_model:
+                model_psums.extend([loc] * trip)
+
+    details = {"expected_ppermutes": expected_pp, "found_ppermutes": pp,
+               "data_psums": len(data_psums),
+               "data_model_psums": len(mixed_psums),
+               "model_psums": len(model_psums),
+               "stages": stages, "n_micro": n_micro, "expect": expect}
+    out: List[Finding] = []
+    if unknown_trip:
+        out.append(Finding(
+            "JX005", SEVERITY_ERROR,
+            "pipeline collective under a while-loop — the schedule census "
+            "is not statically provable", location=unknown_trip[0],
+            details=details))
+        return out
+    if pp != expected_pp:
+        out.append(Finding(
+            "JX005", SEVERITY_ERROR,
+            f"stage-boundary ppermute count {pp} != {expected_pp} (the "
+            f"1F1B closed-form census for stages={stages}, "
+            f"N_Smu={n_micro}) — the executor is shuffling activations "
+            "outside the schedule", details=details))
+    if expect == "deferred":
+        if len(data_psums) != 1:
+            out.append(Finding(
+                "JX005", SEVERITY_ERROR,
+                f"deferred pipelined step must issue exactly ONE "
+                f"data-axis gradient psum per mini-batch, found "
+                f"{len(data_psums)}", details=details))
+        if len(mixed_psums) != 1:
+            out.append(Finding(
+                "JX005", SEVERITY_ERROR,
+                f"deferred pipelined step must issue exactly ONE "
+                f"(data, model) psum (shared grads + loss + metrics + "
+                f"valid count), found {len(mixed_psums)}", details=details))
+    elif len(data_psums) < n_micro:
+        out.append(Finding(
+            "JX005", SEVERITY_ERROR,
+            f"per-micro pipelined baseline expected >= {n_micro} "
+            f"data-axis psums, found {len(data_psums)}", details=details))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the bundled jaxpr passes
+# ---------------------------------------------------------------------------
+
+def check_pipelined_step(jaxpr, plan, *, stages: int,
+                         expect_sync: str = "deferred",
+                         policy: Optional[str] = "__from_plan__",
+                         micro_remat: Optional[bool] = None) -> Report:
+    """The jaxpr contracts that survive the pipelined (1F1B)
+    factorization: JX002 + JX003 + JX005.
+
+    JX001 and JX004 are structurally N/A here and deliberately skipped:
+    the executor accumulates micro-gradients in per-stage masked buffers
+    threaded through the tick scan (no micro-batch-length scan carry for
+    JX001 to locate), and JX004's payload heuristic (psum >= total param
+    elements) never fires because the pipelined step splits gradient
+    traffic into a staged flat bucket and a shared bucket, each smaller
+    than the whole tree. JX005's schedule-exact census replaces both the
+    sync-count and payload-coverage halves of JX004."""
+    if policy == "__from_plan__":
+        policy = plan.remat_policy
+    if micro_remat is None:
+        micro_remat = bool(getattr(plan, "remat_micro_step", False))
+    rep = Report(context={"layer": "jaxpr", "expect_sync": expect_sync,
+                          "policy": policy, "pipelined": True})
+    rep.extend(check_remat_policy(jaxpr, policy, micro_remat=micro_remat),
+               "JX002")
+    rep.extend(check_host_callbacks(jaxpr), "JX003")
+    rep.extend(check_pipeline_collectives(jaxpr, plan, stages=stages,
+                                          expect=expect_sync), "JX005")
+    return rep
+
 
 def check_train_step(jaxpr, plan, params, *, expect_sync: str = "none",
                      policy: Optional[str] = "__from_plan__",

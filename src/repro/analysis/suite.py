@@ -48,20 +48,25 @@ class Target:
     """One analyzable training configuration."""
 
     def __init__(self, name: str, build: Callable, *, has_memory_model: bool,
-                 remat_capable: bool):
+                 remat_capable: bool, stageable: bool = False):
         self.name = name
         self.build = build  # (executor, mesh, remat_policy) -> artifacts
         self.has_memory_model = has_memory_model
         self.remat_capable = remat_capable
+        #: factors into prelude/stage/finale for the pipelined (Layer 11)
+        #: path — dense decoder-only stacks only
+        self.stageable = stageable
 
 
 def _build_transformer(arch: str, executor: str, mesh, remat_policy):
     cfg = configs.get_reduced(arch)
     optimizer = steps.make_optimizer(cfg)
+    pipelined = (mesh is not None
+                 and mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1)
     plan = engine.plan_mbs(
         ANALYSIS_BATCH, num_microbatches=ANALYSIS_MICROS, model_cfg=cfg,
         seq_len=ANALYSIS_SEQ, remat=remat_policy != "none",
-        remat_policy=remat_policy, mesh=mesh,
+        remat_policy=remat_policy, mesh=mesh, pipeline=pipelined,
         **optim.memory_model_kw(optimizer, fused=executor == "flat"))
     loss_fn = steps.make_loss_fn(cfg, jnp.bfloat16,
                                  remat_policy=plan.remat_policy)
@@ -71,11 +76,16 @@ def _build_transformer(arch: str, executor: str, mesh, remat_policy):
     modeled = memory_model.estimate(
         cfg, ANALYSIS_SEQ, remat_policy=plan.remat_policy,
         optimizer=optimizer.name if hasattr(optimizer, "name") else "sgd",
-        fused_update=executor == "flat", mesh=mesh,
+        fused_update=executor == "flat", mesh=mesh, pipeline=pipelined,
     ).total(plan.local_micro if mesh is not None
             else plan.micro_batch_size)
-    return dict(loss_fn=loss_fn, optimizer=optimizer, plan=plan,
-                args=(params, opt_state, batch), modeled_bytes=modeled)
+    built = dict(loss_fn=loss_fn, optimizer=optimizer, plan=plan,
+                 args=(params, opt_state, batch), modeled_bytes=modeled)
+    if pipelined:
+        # Layer-11 path: the staged factorization of the same loss
+        built["staged"] = steps.make_staged_loss(
+            cfg, jnp.bfloat16, remat_policy=plan.remat_policy)
+    return built
 
 
 def _build_resnet(executor: str, mesh, remat_policy):
@@ -118,11 +128,11 @@ TARGETS: Dict[str, Target] = {
     "qwen2_reduced": Target(
         "qwen2_reduced",
         functools.partial(_build_transformer, "qwen2-1.5b"),
-        has_memory_model=True, remat_capable=True),
+        has_memory_model=True, remat_capable=True, stageable=True),
     "mamba2_reduced": Target(
         "mamba2_reduced",
         functools.partial(_build_transformer, "mamba2-780m"),
-        has_memory_model=True, remat_capable=True),
+        has_memory_model=True, remat_capable=True, stageable=True),
     "resnet50": Target(
         "resnet50", _build_resnet,
         has_memory_model=False, remat_capable=False),
@@ -131,13 +141,17 @@ TARGETS: Dict[str, Target] = {
 
 def resolve_mesh(mesh: Any):
     """``None``/``"single"`` -> no mesh; ``"host"`` -> all local devices
-    on the data axis (or no mesh when only one device is visible); a Mesh
+    on the data axis (or no mesh when only one device is visible); a
+    ``"DATA:MODEL"`` spec -> 2-D host mesh (the pipelined path); a Mesh
     object passes through."""
     if mesh is None or mesh == "single":
         return None
     if mesh == "host":
         n = jax.device_count()
         return mesh_lib.make_host_mesh(data=n) if n >= 2 else None
+    if isinstance(mesh, str):
+        data, model = mesh_lib.parse_mesh_spec(mesh)
+        return mesh_lib.make_host_mesh(data=data, model=model)
     return mesh
 
 
@@ -147,6 +161,10 @@ def make_executor(target: Dict[str, Any], executor: str, mesh, *,
     given) — the object whose ``trace_step``/``lower_step`` artifacts the
     checks consume."""
     interpret = _default_interpret(executor)
+    if target.get("staged") is not None:
+        return engine.PipelinedExecutor(
+            target["staged"], target["optimizer"], target["plan"],
+            mesh=mesh, defer_sync=defer_sync)
     if mesh is not None:
         from ..engine.sharded import ShardedExecutor
         return ShardedExecutor(target["loss_fn"], target["optimizer"],
@@ -165,31 +183,55 @@ def run_suite(target: str = "qwen2_reduced", *, executor: str = "flat",
     applicable contract check. Returns the merged :class:`Report`."""
     spec = TARGETS[target]
     mesh = resolve_mesh(mesh)
+    stages = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) if mesh else 1
+    if stages > 1 and not spec.stageable:
+        # non-stageable family (CNN): the pipelined mesh simply does not
+        # apply — report the skip instead of crashing mid-build, so one
+        # CI matrix invocation can sweep every (target x mesh) cell
+        return Report(context={
+            "target": target, "executor": executor,
+            "mesh": f"dp={mesh_lib.data_parallel_size(mesh)},pp={stages}",
+            "skipped": "target does not factor into pipeline stages "
+                       "(dense decoder-only stacks only)"})
     if remat_policy is None:
         remat_policy = "period" if spec.remat_capable else "none"
     built = spec.build(executor, mesh, remat_policy)
     plan = built["plan"]
     params = built["args"][0]
+    pipelined = built.get("staged") is not None
     ex = make_executor(built, executor, mesh)
 
     report = Report(context={
         "target": target, "executor": executor,
-        "mesh": f"dp={mesh_lib.data_parallel_size(mesh)}" if mesh else "single",
+        "mesh": (f"dp={mesh_lib.data_parallel_size(mesh)}"
+                 + (f",pp={stages}" if stages > 1 else "")) if mesh
+                else "single",
         "remat_policy": plan.remat_policy,
         "num_micro_batches": int(plan.num_micro_batches),
     })
 
     expect_sync = "deferred" if mesh is not None else "none"
     jaxpr = ex.trace_step(*built["args"])
-    report.merge(jaxpr_checks.check_train_step(
-        jaxpr, plan, params, expect_sync=expect_sync))
+    if pipelined:
+        report.merge(jaxpr_checks.check_pipelined_step(
+            jaxpr, plan, stages=stages, expect_sync=expect_sync))
+    else:
+        report.merge(jaxpr_checks.check_train_step(
+            jaxpr, plan, params, expect_sync=expect_sync))
 
     can_lower = hlo and hasattr(ex, "lower_step") and executor != "streaming"
     if can_lower:
         compiled = ex.lower_step(*built["args"], donate=True).compile()
         ctx = f"{target}/{executor}"
-        state_bytes = (hlo_checks.tree_bytes(built["args"][0])
-                       + hlo_checks.tree_bytes(built["args"][1]))
+        if pipelined:
+            # memory_analysis() reports PER-DEVICE aliasing and the
+            # pipelined steady state keeps block leaves model-sharded
+            # (state_shardings) — the floor is the per-device shard
+            state_bytes = ex.donated_state_bytes(built["args"][0],
+                                                 built["args"][1])
+        else:
+            state_bytes = (hlo_checks.tree_bytes(built["args"][0])
+                           + hlo_checks.tree_bytes(built["args"][1]))
         report.extend(hlo_checks.check_aliasing(
             compiled, state_bytes, context=ctx), "HLO001")
         report.extend(hlo_checks.check_unexpected_ops(
@@ -197,9 +239,20 @@ def run_suite(target: str = "qwen2_reduced", *, executor: str = "flat",
         report.extend(hlo_checks.check_memory_model(
             compiled, built["modeled_bytes"], tolerance=memory_tolerance,
             context=ctx), "HLO003")
-        report.extend(hlo_checks.check_gradient_sync(
-            compiled, expect=expect_sync,
-            n_micro=int(plan.num_micro_batches), context=ctx), "HLO004")
+        if pipelined:
+            from ..engine.pipelined import schedule_1f1b
+            fwd_tab, bwd_tab, _, _ = schedule_1f1b(
+                stages, int(plan.num_micro_batches))
+            max_pp = int((fwd_tab >= 0).any(axis=1).sum()
+                         + (bwd_tab >= 0).any(axis=1).sum())
+            report.extend(hlo_checks.check_pipeline_hlo(
+                compiled, expect=expect_sync,
+                n_micro=int(plan.num_micro_batches),
+                max_ppermutes=max_pp, context=ctx), "HLO005")
+        else:
+            report.extend(hlo_checks.check_gradient_sync(
+                compiled, expect=expect_sync,
+                n_micro=int(plan.num_micro_batches), context=ctx), "HLO004")
 
     if lint:
         report.extend(lint_mod.lint_repo(), "LINT")

@@ -161,6 +161,63 @@ def activation_bytes_per_sample(cfg: ModelConfig, seq: int,
     return boundary + live + logits_live
 
 
+def pipeline_activation_bytes_per_sample(cfg: ModelConfig, seq: int,
+                                         stages: int, act_bytes: int = 2,
+                                         remat: bool = True,
+                                         remat_policy: Optional[str] = None
+                                         ) -> int:
+    """Per-device live activation bytes for ONE local sample under the
+    1F1B pipelined executor (engine Layer 11) with ``stages`` stages.
+
+    The executor keeps *stage-local activations × the in-flight micro-batch
+    count*: 1F1B's warmup depth bounds the number of in-flight micro-batches
+    per stage at ``stages``, and each in-flight micro-batch holds exactly
+    one stage-INPUT carry (the executor rematerializes the stage forward
+    from that carry during the backward tick — stage-level remat). Terms:
+
+      rings        2 depth-``stages`` rings (arriving-activation queue +
+                   backward residuals), each slot one residual-stream carry
+                   (seq * d_model);
+      stage live   ONE stage's forward/backward working set: its share of
+                   the period boundaries (num_periods / stages) plus the
+                   remat policy's live term — the same lattice scaling as
+                   :func:`activation_bytes_per_sample`, with the period
+                   count cut to the stage's share;
+      logits       the blocked-CE logits slice. Charged on every device:
+                   the SPMD-masked schedule traces the (masked) loss head
+                   on all stages, so its buffer is live everywhere.
+    """
+    if stages < 1:
+        raise ValueError(f"stages must be >= 1, got {stages}")
+    policy = remat_lib.resolve(remat, remat_policy)
+    d = cfg.d_model
+    carry = seq * d * act_bytes
+    rings = 2 * stages * carry
+    per_stage = -(-cfg.num_periods // stages)
+    widths = [d * 6]
+    if cfg.is_moe:
+        widths.append(cfg.experts_per_token * cfg.moe_d_ff * 3
+                      * cfg.capacity_factor)
+    elif cfg.d_ff:
+        widths.append(cfg.d_ff * 3)
+    if cfg.ssm_state:
+        widths.append(cfg.ssm_d_inner * 4)
+    if cfg.lru_width:
+        widths.append(cfg.lru_width * 6)
+    period_live = seq * int(max(widths)) * act_bytes * cfg.pattern_len
+    logits_live = seq * cfg.vocab_size * 4 // 8
+    if policy == "none":
+        live = per_stage * period_live
+    elif policy == "dots":
+        live = period_live + int(
+            DOTS_SAVED_FRACTION * (per_stage - 1) * period_live)
+    elif policy == "period":
+        live = period_live
+    else:  # "full"
+        live = -(-period_live // cfg.pattern_len)
+    return rings + per_stage * carry + live + logits_live
+
+
 # ---------------------------------------------------------------------------
 # Serving (engine Layer 10): KV-cache admission terms
 # ---------------------------------------------------------------------------
@@ -364,7 +421,8 @@ def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
              remat: bool = True, remat_policy: Optional[str] = None,
              optimizer: str = "sgd",
              fused_update: bool = False, mesh=None,
-             fsdp_params: bool = True) -> MemoryEstimate:
+             fsdp_params: bool = True, pipeline: bool = False
+             ) -> MemoryEstimate:
     """``optimizer`` names the update rule (state-slot count + step-❺
     transient); ``fused_update=True`` models the flat in-place path
     (``--executor flat``) whose update transient is eliminated. An explicit
@@ -378,7 +436,13 @@ def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
     and ``fsdp_params``; the manual ``tp``/``fsdp`` divisors are ignored)
     and the activation term is divided by the model axis only — the data
     axis enters through the *local* micro-batch the caller budgets with,
-    not through this estimate."""
+    not through this estimate.
+
+    ``pipeline=True`` (engine Layer 11) reinterprets the mesh's model axis
+    as 1F1B pipeline stages: the activation term becomes
+    :func:`pipeline_activation_bytes_per_sample` — stage-local activations
+    × the in-flight micro-batch count (warmup depth == stages) — instead
+    of the tensor-parallel ``// tp`` discount."""
     if mesh is not None:
         from ..launch import mesh as mesh_lib  # deferred: no cycle
         tp = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
@@ -386,13 +450,18 @@ def estimate(cfg: ModelConfig, seq: int, *, tp: int = 1, fsdp: int = 1,
                       * param_shard_ratio(cfg, mesh, fsdp=fsdp_params))
     else:
         p_bytes = cfg.param_count() * 4 // (tp * fsdp)
+    if pipeline and tp > 1:
+        act_per_sample = pipeline_activation_bytes_per_sample(
+            cfg, seq, tp, act_bytes, remat, remat_policy)
+    else:
+        act_per_sample = activation_bytes_per_sample(
+            cfg, seq, act_bytes, remat, remat_policy) // tp
     slots = _resolve_slots(optimizer, opt_slots)
     return MemoryEstimate(
         params_bytes=p_bytes,
         grads_bytes=p_bytes,
         opt_bytes=slots * p_bytes,
-        activation_bytes_per_sample=activation_bytes_per_sample(
-            cfg, seq, act_bytes, remat, remat_policy) // tp,
+        activation_bytes_per_sample=act_per_sample,
         fixed_bytes=64 * 1024 ** 2,
         update_transient_bytes=update_transient_bytes(
             p_bytes, optimizer, fused_update, opt_slots=slots),
@@ -407,7 +476,8 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
                              remat_policy: Optional[str] = None,
                              optimizer: str = "sgd",
                              fused_update: bool = False, mesh=None,
-                             fsdp_params: bool = True) -> Optional[int]:
+                             fsdp_params: bool = True,
+                             pipeline: bool = False) -> Optional[int]:
     """Largest power-of-two micro-batch (≤ mini_batch) that fits the budget.
     Returns None if even micro-batch 1 exceeds the budget (the model itself
     does not fit — MBS cannot help; that needs more model parallelism).
@@ -421,7 +491,7 @@ def suggest_micro_batch_size(cfg: ModelConfig, seq: int, mini_batch: int, *,
                    act_bytes=act_bytes, remat=remat,
                    remat_policy=remat_policy, optimizer=optimizer,
                    fused_update=fused_update, mesh=mesh,
-                   fsdp_params=fsdp_params)
+                   fsdp_params=fsdp_params, pipeline=pipeline)
     best = None
     m = 1
     while m <= mini_batch:
@@ -437,7 +507,7 @@ def suggest_remat_policy_and_micro(
         opt_slots: Optional[int] = None, act_bytes: int = 2,
         optimizer: str = "sgd", fused_update: bool = False,
         target_micro: Optional[int] = None, mesh=None,
-        fsdp_params: bool = True
+        fsdp_params: bool = True, pipeline: bool = False
         ) -> Tuple[str, Optional[int]]:
     """Joint (remat policy, micro-batch) choice — engine Layer 5.
 
@@ -457,7 +527,8 @@ def suggest_remat_policy_and_micro(
             cfg, seq, mini_batch, budget_bytes=budget_bytes, tp=tp,
             fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
             remat_policy=policy, optimizer=optimizer,
-            fused_update=fused_update, mesh=mesh, fsdp_params=fsdp_params)
+            fused_update=fused_update, mesh=mesh, fsdp_params=fsdp_params,
+            pipeline=pipeline)
         if micro is not None and micro >= target:
             return policy, micro
         if micro is not None and (best_micro is None or micro > best_micro):

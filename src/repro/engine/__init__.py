@@ -72,6 +72,20 @@ decode → finish/evict) as continuous batching over a fixed-shape
 in-place decode cache, ragged-padded prefill for pure-attention stacks
 and exact-length grouping for state-carrying/MoE families. See DESIGN.md
 §Serving.
+
+Layer 11 — pipeline parallelism (``pipelined.py``): the plan's
+micro-batches become the currency of a 1F1B schedule over the mesh's
+``model`` axis. :class:`StagedLoss` factors a loss into prelude /
+stage_fn / finale; :class:`PipelinedExecutor` runs the closed-form
+schedule (host-side tick tables, traced ring buffers, per-tick masked
+forward+backward with stage-input remat) under ``shard_map`` on a 2-D
+``data × model`` mesh, composing with the Layer-6 DP path: still exactly
+ONE data-axis gradient psum per mini-batch, plus one (data+model) psum
+for shared params/loss/metrics and two ppermutes per tick at the stage
+boundaries. ``plan_mbs(pipeline=True)`` budgets stage-local activations
+× in-flight depth (``memory_model.pipeline_activation_bytes_per_sample``)
+and ``fsdp=True`` adds just-in-time gathered parameter sharding per
+``launch/sharding.param_specs``. See DESIGN.md §Pipeline parallelism.
 """
 from .plan import (MBSConfig, MBSPlan, num_micro_batches,  # noqa: F401
                    plan_mbs, split_minibatch)
@@ -84,6 +98,8 @@ from .executors import (EXECUTORS, CompiledScanExecutor, Executor,  # noqa: F401
                         StreamingExecutor, accumulate_gradients,
                         get_executor, make_baseline_train_step)
 from .sharded import ShardedExecutor, batch_partition_specs, psum_flat  # noqa: F401
+from .pipelined import (PipelinedExecutor, StagedLoss,  # noqa: F401
+                        schedule_1f1b)
 from .pipeline import Pipeline, PipelineStats  # noqa: F401
 from .trainer import Trainer  # noqa: F401
 from . import faults  # noqa: F401

@@ -120,6 +120,12 @@ class MBSPlan:
     # (a, b) affine map ``measured ~= a*modeled + b`` that was applied.
     calibrated: bool = False
     correction: Optional[tuple] = None
+    # -- pipeline geometry (engine Layer 11) --------------------------------
+    # > 1 when the plan was admitted pipeline-aware (plan_mbs(pipeline=True)
+    # on a mesh with a model axis): the mesh's model axis runs this many
+    # 1F1B stages and the activation budget charged stage-local activations
+    # × the in-flight depth (== stages) instead of the // tp discount.
+    pipeline_stages: int = 1
 
     def __post_init__(self):
         if self.local_micro is None:
@@ -174,6 +180,8 @@ class MBSPlan:
         pol = self.remat_policy + (" (auto)" if self.auto_policy else "")
         mesh = (f", data-parallel {self.data_parallel} x local {self.local_micro}"
                 if self.data_parallel > 1 else "")
+        if self.pipeline_stages > 1:
+            mesh += f", pipeline {self.pipeline_stages} stages"
         return (f"MBSPlan: mini-batch {self.mini_batch_size} -> "
                 f"{self.num_micro_batches} x micro-batch {self.micro_batch_size}"
                 f" (pad {self.pad}, micro {src}, normalization {norm}, "
@@ -194,7 +202,8 @@ def plan_mbs(mini_batch_size: int, *,
              optimizer: str = "sgd", fused_update: bool = False,
              mesh=None, fsdp_params: bool = True,
              calibrate: str = "off", tuning_cache: Optional[str] = None,
-             executor: str = "compiled") -> MBSPlan:
+             executor: str = "compiled",
+             pipeline: bool = False) -> MBSPlan:
     """Produce an :class:`MBSPlan` for one training setup.
 
     Micro-batch size resolution, in priority order:
@@ -251,6 +260,14 @@ def plan_mbs(mini_batch_size: int, *,
         admit against it.
     A calibrated plan records ``calibrated=True`` and the correction used.
     ``executor`` only keys the cache entry; it does not change geometry.
+
+    ``pipeline=True`` (engine Layer 11) reinterprets the mesh's model axis
+    as 1F1B pipeline stages: micro-batch admission charges stage-local
+    activations × the in-flight micro-batch count (warmup depth == stages,
+    ``memory_model.pipeline_activation_bytes_per_sample``) instead of the
+    tensor-parallel ``// tp`` discount, and the plan records
+    ``pipeline_stages``. Stage counts that do not divide the model's block
+    stack are rejected here, before any executor is built.
     """
     if calibrate not in ("off", "auto", "force"):
         raise ValueError(
@@ -260,9 +277,18 @@ def plan_mbs(mini_batch_size: int, *,
     from ..core import memory_model  # deferred: core imports this module
     from ..models import remat as remat_lib
     dp = 1
+    stages = 1
     if mesh is not None:
         from ..launch import mesh as mesh_lib  # deferred: no cycle
         dp = mesh_lib.data_parallel_size(mesh)
+        if pipeline:
+            stages = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+    if pipeline and stages > 1 and model_cfg is not None \
+            and model_cfg.num_periods % stages:
+        raise ValueError(
+            f"pipeline stage count {stages} (the mesh's model axis) does "
+            f"not divide the block stack ({model_cfg.num_periods} periods) "
+            "— pick a model axis that divides num_periods evenly")
     if mini_batch_size < dp:
         raise ValueError(
             f"mini-batch {mini_batch_size} is smaller than the mesh's "
@@ -275,7 +301,7 @@ def plan_mbs(mini_batch_size: int, *,
     budget = budget_bytes or memory_model.V5E_HBM_BYTES
     mm_kw = dict(tp=tp, fsdp=fsdp, opt_slots=opt_slots, act_bytes=act_bytes,
                  optimizer=optimizer, fused_update=fused_update,
-                 mesh=mesh, fsdp_params=fsdp_params)
+                 mesh=mesh, fsdp_params=fsdp_params, pipeline=pipeline)
     # the memory model budgets what ONE device holds: local samples
     local_mini = mini_batch_size // dp
 
@@ -319,7 +345,7 @@ def plan_mbs(mini_batch_size: int, *,
                 optimizer=optimizer, executor=executor, mode=calibrate,
                 cache_path=tuning_cache,
                 **{k: v for k, v in mm_kw.items()
-                   if k not in ("optimizer", "mesh")})
+                   if k not in ("optimizer", "mesh", "pipeline")})
             if corr is not None:
                 cal_local = autotune.corrected_micro_search(
                     model_cfg, seq_len, local_mini, budget, corr,
@@ -360,4 +386,5 @@ def plan_mbs(mini_batch_size: int, *,
                    remat_policy=policy,
                    auto_policy=auto_policy_requested and policy_searched,
                    data_parallel=dp, local_micro=micro // dp,
-                   calibrated=calibrated, correction=correction)
+                   calibrated=calibrated, correction=correction,
+                   pipeline_stages=stages)

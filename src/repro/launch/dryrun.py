@@ -86,21 +86,35 @@ def _out_specs(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
     return sharding.cache_specs(out_shapes, mesh, stacked=False)
 
 
-def _compile(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True):
+def _compile(bundle, mesh, fsdp_over_pod: bool = False, fsdp: bool = True,
+             pipelined: bool = False):
     t0 = time.time()
-    with mesh:
-        jitted = jax.jit(
-            bundle.fn,
-            in_shardings=tuple(sharding.named(s, mesh)
-                               for s in _in_specs(bundle, mesh, fsdp_over_pod,
-                                                  fsdp)),
-            out_shardings=sharding.named(
-                _out_specs(bundle, mesh, fsdp_over_pod, fsdp), mesh),
-            donate_argnums=bundle.donate_argnums)
+    if pipelined:
+        # the Layer-11 step owns its sharding (shard_map over the
+        # data x model mesh, specs bound inside) — GSPMD in/out shardings
+        # would fight the manual axes, and an ambient mesh context would
+        # activate the model's best-effort shard hints INSIDE shard_map
+        # (PartitionSpecs naming manual axes are rejected), so lower
+        # without either
+        jitted = jax.jit(bundle.fn, donate_argnums=bundle.donate_argnums)
         lowered = jitted.lower(*bundle.arg_shapes)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
+    else:
+        with mesh:
+            jitted = jax.jit(
+                bundle.fn,
+                in_shardings=tuple(sharding.named(s, mesh)
+                                   for s in _in_specs(bundle, mesh,
+                                                      fsdp_over_pod, fsdp)),
+                out_shardings=sharding.named(
+                    _out_specs(bundle, mesh, fsdp_over_pod, fsdp), mesh),
+                donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*bundle.arg_shapes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):  # older jax returns [dict]
         cost = cost[0] if cost else {}
@@ -168,7 +182,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                remat_policy: str = None, cfg_overrides: dict = None,
                fsdp: bool = True, executor: str = "compiled",
                budget_bytes: int = None, calibrate: str = "off",
-               tuning_cache: str = None, check: bool = False):
+               tuning_cache: str = None, check: bool = False,
+               mesh_spec: str = None):
     cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
     if cfg_overrides:
         cfg = dataclasses.replace(cfg, **cfg_overrides)
@@ -177,7 +192,16 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "skipped": True,
                 "reason": "long_500k requires sub-quadratic attention "
                           "(DESIGN.md §long_500k applicability)"}
+    if mesh is None and mesh_spec:
+        data, model = mesh_lib.parse_mesh_spec(mesh_spec)
+        mesh = mesh_lib.make_host_mesh(data=data, model=model)
+    mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    # an explicit DATA:MODEL spec with MODEL > 1 dry-runs the Layer-11
+    # pipelined step (1F1B over the model axis) instead of the GSPMD path
+    pipelined = (shape.kind == "train" and mesh_spec is not None
+                 and mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1)
     plan = None
+    pinned = None
     if shape.kind == "train":
         # resolve N_Smu through the same planner the step builder uses, so
         # probes/reporting match the compiled step even when the requested
@@ -188,20 +212,24 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                   and num_microbatches > 0 else None)
         plan = engine.plan_mbs(shape.global_batch, num_microbatches=pinned,
                                model_cfg=cfg, seq_len=shape.seq_len,
-                               remat=remat, remat_policy=remat_policy)
+                               remat=remat, remat_policy=remat_policy,
+                               mesh=mesh if pipelined else None,
+                               pipeline=pipelined)
         num_microbatches = plan.num_micro_batches
         remat_policy = plan.remat_policy  # the chosen grade, for the report
-    mesh = mesh or mesh_lib.make_production_mesh(multi_pod=multi_pod)
     step_kw = {"remat": remat, "remat_policy": remat_policy,
                "executor": executor} \
         if shape.kind == "train" else {}
+    if pipelined:
+        step_kw["mesh"] = mesh
     bundle = steps.build_step(cfg, shape, num_microbatches=num_microbatches,
                               **step_kw)
     # multi-pod: extend FSDP over (pod, data) — optimizer-state-bound models
     # (grok-1) only fit per-chip HBM at the 512-chip shard
     compiled, cost, t_lower, t_compile = _compile(bundle, mesh,
                                                   fsdp_over_pod=multi_pod,
-                                                  fsdp=fsdp)
+                                                  fsdp=fsdp,
+                                                  pipelined=pipelined)
     mem = compiled.memory_analysis()
     colls_raw = collective_bytes(compiled.as_text())
 
@@ -219,9 +247,10 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             mesh_plan = engine.plan_mbs(
                 shape.global_batch, num_microbatches=pinned,
                 model_cfg=cfg, seq_len=shape.seq_len, remat=remat,
-                remat_policy=remat_policy, mesh=mesh)
+                remat_policy=remat_policy, mesh=mesh, pipeline=pipelined)
             est = memory_model.estimate(cfg, shape.seq_len, mesh=mesh,
-                                        remat_policy=mesh_plan.remat_policy)
+                                        remat_policy=mesh_plan.remat_policy,
+                                        pipeline=pipelined)
             per_device = {
                 "data_parallel": mesh_plan.data_parallel,
                 "local_micro": mesh_plan.local_micro,
@@ -240,6 +269,47 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             "allreduce_ops_in_hlo": ar.get("count", 0),
             "allreduce_bytes_in_hlo": ar.get("bytes", 0),
             "num_microbatches": num_microbatches,
+        }
+
+    pipeline_rep = None
+    if pipelined:
+        # Layer-11 report: per-stage footprint + the collective census the
+        # 1F1B schedule implies. The ppermute count is the schedule's
+        # boundary-active tick count (jaxpr-level contract — XLA may merge
+        # adjacent collective-permutes in the HLO); the psum census is the
+        # deferred-sync contract: ONE data-axis gradient all-reduce per
+        # mini-batch + ONE (data, model) psum for shared grads/loss/metrics.
+        from ..core import memory_model
+        stages = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+        M = plan.num_micro_batches
+        fwd_tab, bwd_tab, _, ticks = engine.schedule_1f1b(stages, M)
+        ppermutes = int((fwd_tab >= 0).any(axis=1).sum()
+                        + (bwd_tab >= 0).any(axis=1).sum())
+        try:
+            est = memory_model.estimate(cfg, shape.seq_len, mesh=mesh,
+                                        remat_policy=plan.remat_policy,
+                                        pipeline=True)
+            per_stage_bytes = {
+                "params_bytes": est.params_bytes,
+                "activation_bytes_per_sample":
+                    est.activation_bytes_per_sample,
+                "bytes_at_local_micro": est.total(plan.local_micro),
+            }
+        except Exception as e:  # report must never sink the compile proof
+            per_stage_bytes = {"error": repr(e)}
+        pipeline_rep = {
+            "stages": stages,
+            "data_parallel": plan.data_parallel,
+            "periods_per_stage": cfg.num_periods // stages,
+            "num_micro_batches": M,
+            "ticks": int(ticks),
+            "in_flight_micro_batches": min(stages, M),
+            "per_stage": per_stage_bytes,
+            "expected_collectives": {
+                "ppermute": ppermutes,
+                "psum_data_axis": 1,
+                "psum_data_model_axis": 1,
+            },
         }
 
     measured_peak = (getattr(mem, "argument_size_in_bytes", 0)
@@ -323,6 +393,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "remat_policy_auto": plan.auto_policy if plan is not None else None,
         "per_device": per_device,
         "gradient_sync": grad_sync,
+        "pipeline": pipeline_rep,
         "oracle": oracle,
         "budget": ({"budget_bytes": budget_bytes,
                     "measured_peak_bytes": measured_peak,
@@ -358,6 +429,12 @@ def main():
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
     ap.add_argument("--shape", required=True, choices=list(configs.SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="DATA:MODEL",
+                    help="explicit host-mesh axis spec (e.g. '2:4'); "
+                         "MODEL > 1 dry-runs the Layer-11 pipelined step "
+                         "(1F1B over the model axis) and adds the "
+                         "per-stage bytes + collective-census report "
+                         "block (default: the production mesh)")
     ap.add_argument("--microbatches", type=int, default=8,
                     help="N_Smu for train shapes; 0 = auto micro-batch "
                          "size from the analytic memory model")
@@ -416,7 +493,8 @@ def main():
                      cfg_overrides=overrides or None,
                      fsdp=not args.no_fsdp, executor=args.executor,
                      budget_bytes=budget_bytes, calibrate=args.calibrate,
-                     tuning_cache=args.tuning_cache, check=args.check)
+                     tuning_cache=args.tuning_cache, check=args.check,
+                     mesh_spec=args.mesh)
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         tag = "multi" if args.multi_pod else "single"

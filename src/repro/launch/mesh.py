@@ -30,6 +30,34 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
     return jax.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
 
 
+def parse_mesh_spec(spec: str, device_count: int | None = None):
+    """Parse a launcher ``--mesh`` axis spec ``"DATA:MODEL"`` (e.g.
+    ``"2:4"``) into ``(data, model)``, validated against the visible
+    device count — fail fast at argument-parsing time instead of deep
+    inside ``jax.make_mesh``. ``device_count=None`` reads the real
+    backend."""
+    parts = spec.split(":")
+    if len(parts) != 2:
+        raise ValueError(
+            f"mesh spec {spec!r} is not of the form DATA:MODEL (two "
+            "integers, e.g. '2:4' for a 2-way data x 4-stage pipeline "
+            "mesh)")
+    try:
+        data, model = (int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"mesh spec {spec!r} is not of the form DATA:MODEL (two "
+            "integers, e.g. '2:4')") from None
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh spec {spec!r}: axis sizes must be >= 1")
+    n = jax.device_count() if device_count is None else device_count
+    if data * model > n:
+        raise ValueError(
+            f"mesh spec {spec!r} needs {data * model} devices but only "
+            f"{n} are visible")
+    return data, model
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the batch dimension is sharded over."""
     return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)

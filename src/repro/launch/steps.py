@@ -20,9 +20,10 @@ import jax.numpy as jnp
 from .. import engine
 from ..configs.shapes import InputShape
 from ..core import losses
-from ..models import encdec, transformer
+from ..models import encdec, nn, transformer
 from ..models import remat as remat_lib
 from ..models.config import ModelConfig
+from . import mesh as mesh_lib
 from .. import optim
 
 N_VISION_TOKENS = 256  # stubbed patch embeds per sample (qwen2-vl frontend)
@@ -109,6 +110,79 @@ def make_loss_fn(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
     return loss_fn
 
 
+def make_staged_loss(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
+                     scan_unroll: int = 1,
+                     remat_policy: Optional[str] = None) -> engine.StagedLoss:
+    """Factor the decoder-only transformer loss into the prelude /
+    stage_fn / finale triple that :class:`engine.PipelinedExecutor`
+    schedules (engine Layer 11).
+
+    The stage boundary is the period axis: ``params["blocks"]`` leaves
+    are stacked ``(num_periods, ...)`` and ``StagedLoss.partition``
+    reshapes them to ``(stages, periods_per_stage, ...)``; each stage
+    scans its local periods exactly like :func:`transformer.forward`
+    scans the whole stack, under the same checkpoint lattice. The finale
+    emits the RAW loss sum (``exact_denom=1`` semantics) — the executor
+    divides by the global valid count after its cross-mesh psum, which
+    is what makes pipelined numerics match the single-device exact path.
+
+    Families whose forward does not cut at period boundaries with only a
+    ``(B, S, d_model)`` carry are rejected: MoE (router aux loss
+    accumulates across periods into the scalar loss), enc-dec (two
+    stacks joined by cross-attention), and VLM (the vision frontend
+    feeds extra inputs into the embed prelude).
+    """
+    if cfg.is_encdec or cfg.is_moe or cfg.is_vlm:
+        which = ("enc-dec" if cfg.is_encdec else
+                 "MoE" if cfg.is_moe else "VLM")
+        raise ValueError(
+            f"{cfg.name}: pipeline staging supports dense decoder-only "
+            f"stacks; {which} forwards do not factor into "
+            "prelude/stage_fn/finale with a (B, S, d_model) carry — run "
+            "this family on the data axis (ShardedExecutor) instead")
+    policy = remat_lib.resolve(remat, remat_policy)
+
+    def _positions(x):
+        B, S = x.shape[:2]
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def prelude(shared, mb):
+        return transformer._embed_inputs(shared, cfg, mb["tokens"], None,
+                                         dtype)
+
+    def stage_fn(stage_p, x):
+        positions = _positions(x)
+
+        def period_fn(x, slot_params):
+            aux = jnp.zeros((), jnp.float32)
+            for kind, p in zip(cfg.layer_pattern, slot_params):
+                x, a, _ = transformer._apply_slot(p, cfg, kind, x, positions,
+                                                  dtype=dtype,
+                                                  remat_policy=policy)
+                aux = aux + a
+            return x, aux
+
+        period_fn = remat_lib.checkpoint_period(period_fn, policy)
+        x, _ = jax.lax.scan(period_fn, x, stage_p, unroll=scan_unroll)
+        return x
+
+    def finale(shared, x, mb):
+        x = nn.rmsnorm(shared["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = nn.unembed(shared["embed"], x, jnp.float32)
+        else:
+            logits = nn.dense(shared["unembed"], x, jnp.float32)
+        logits = nn.softcap(logits, cfg.final_softcap)
+        loss = losses.cross_entropy(logits, mb["labels"],
+                                    sample_weight=mb.get("sample_weight"),
+                                    exact_denom=1.0)
+        return loss, {}
+
+    return engine.StagedLoss(num_layers=cfg.num_periods, prelude=prelude,
+                             stage_fn=stage_fn, finale=finale,
+                             stacked_key="blocks")
+
+
 def abstract_train_batch(cfg: ModelConfig, seq_len: int, plan, *,
                          dtype=jnp.bfloat16) -> Dict[str, Any]:
     """ShapeDtypeStruct tree of a SPLIT ``(N_Sμ, N_μ, ...)`` train batch
@@ -146,7 +220,7 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
                      normalization: str = "paper",
                      scan_unroll: int = 1,
                      executor: str = "compiled",
-                     mesh=None) -> StepBundle:
+                     mesh=None, fsdp: bool = False) -> StepBundle:
     """Compiled train step via the MBS engine. ``num_microbatches=None``
     auto-sizes the micro-batch from the analytic memory model (the paper's
     experimentally-determined size, computed — §4.3.2); ragged splits are
@@ -154,20 +228,38 @@ def build_train_step(cfg: ModelConfig, shape: InputShape, *,
     ``"auto"``) goes through the planner; the loss is built with the
     plan's *chosen* policy. ``mesh`` makes the plan mesh-aware (engine
     Layer 6): per-device budget, micro sizes divisible by the data axis —
-    pass the mesh the step will be compiled against."""
+    pass the mesh the step will be compiled against.
+
+    When the mesh has a ``model`` axis of size > 1 the step routes
+    through engine Layer 11 instead: ``plan_mbs(pipeline=True)`` budgets
+    stage-local activations × in-flight depth and the
+    :class:`engine.PipelinedExecutor` runs the plan's micro-batches
+    through the 1F1B schedule (``fsdp=True`` additionally shards params
+    over the data axis with just-in-time gathers)."""
     optimizer = optimizer or make_optimizer(cfg)
+    pipeline = (mesh is not None
+                and mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1)
     plan = engine.plan_mbs(shape.global_batch,
                            num_microbatches=num_microbatches,
                            model_cfg=cfg, seq_len=shape.seq_len,
                            normalization=normalization, unroll=scan_unroll,
                            act_bytes=jnp.dtype(dtype).itemsize, remat=remat,
                            remat_policy=remat_policy, mesh=mesh,
+                           pipeline=pipeline,
                            **optim.memory_model_kw(optimizer,
                                                    fused=executor == "flat"))
-    loss_fn = make_loss_fn(cfg, dtype, scan_unroll=scan_unroll,
-                           remat_policy=plan.remat_policy)
-    step = engine.get_executor(executor)(
-        loss_fn, optimizer, plan).make_train_step()
+    if pipeline:
+        staged = make_staged_loss(cfg, dtype, scan_unroll=scan_unroll,
+                                  remat_policy=plan.remat_policy)
+        step = engine.PipelinedExecutor(staged, optimizer, plan, mesh=mesh,
+                                        fsdp=fsdp).make_train_step()
+        executor = "pipelined"
+        loss_fn = None
+    else:
+        loss_fn = make_loss_fn(cfg, dtype, scan_unroll=scan_unroll,
+                               remat_policy=plan.remat_policy)
+        step = engine.get_executor(executor)(
+            loss_fn, optimizer, plan).make_train_step()
 
     batch = abstract_train_batch(cfg, shape.seq_len, plan, dtype=dtype)
     params = abstract_params(cfg)

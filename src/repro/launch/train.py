@@ -47,8 +47,13 @@ def build_mesh(args):
     n = len(jax.devices())
     if args.mesh == "production":
         return mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
-    # host mesh: all local devices on the data axis
-    return mesh_lib.make_host_mesh(data=n, model=1)
+    if args.mesh == "host":
+        # host mesh: all local devices on the data axis
+        return mesh_lib.make_host_mesh(data=n, model=1)
+    # explicit "DATA:MODEL" axis spec — model > 1 routes the step through
+    # the Layer-11 pipelined executor (validated in main() at parse time)
+    data, model = mesh_lib.parse_mesh_spec(args.mesh, n)
+    return mesh_lib.make_host_mesh(data=data, model=model)
 
 
 def default_optimizer(args) -> optim.Optimizer:
@@ -82,6 +87,8 @@ def build_plan(cfg, args, optimizer=None, mesh=None) -> engine.MBSPlan:
         act_bytes=dtype_bytes, remat=not args.reduced,
         remat_policy=getattr(args, "remat_policy", None),
         mesh=mesh, fsdp_params=getattr(args, "mesh", "host") == "production",
+        pipeline=(mesh is not None
+                  and mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1),
         calibrate=getattr(args, "calibrate", "off"),
         tuning_cache=getattr(args, "tuning_cache", None),
         executor=args.executor,
@@ -95,12 +102,23 @@ def build_executor(cfg, plan, args, optimizer=None, mesh=None, guard=False):
     With a data-parallel ``mesh`` (>1 worker on the batch axes) every
     ``--executor`` routes through the :class:`engine.ShardedExecutor`
     wrapper: per-device accumulation, ONE gradient all-reduce per
-    mini-batch. ``guard=True`` (the supervised mode) adds the on-device
-    finite-check to the update, surfacing a ``nonfinite`` metric."""
+    mini-batch. A mesh with a ``model`` axis > 1 routes through the
+    Layer-11 :class:`engine.PipelinedExecutor` instead — the block stack
+    is split into stages and the plan's micro-batches run 1F1B
+    (``--fsdp`` additionally shards params over the data axis with
+    just-in-time gathers). ``guard=True`` (the supervised mode) adds the
+    on-device finite-check to the update, surfacing a ``nonfinite``
+    metric."""
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+    opt = optimizer or default_optimizer(args)
+    if mesh is not None and mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1:
+        staged = steps.make_staged_loss(cfg, dtype=dtype,
+                                        remat_policy=plan.remat_policy)
+        return engine.PipelinedExecutor(
+            staged, opt, plan, mesh=mesh,
+            fsdp=getattr(args, "fsdp", False), guard=guard), opt
     loss_fn = steps.make_loss_fn(cfg, dtype=dtype,
                                  remat_policy=plan.remat_policy)
-    opt = optimizer or default_optimizer(args)
     if mesh is not None and mesh_lib.data_parallel_size(mesh) > 1:
         return engine.ShardedExecutor(loss_fn, opt, plan, mesh=mesh,
                                       inner=args.executor, guard=guard), opt
@@ -168,6 +186,8 @@ def make_plan_ctx(cfg, args, mesh, optimizer):
         executor=args.executor, tuning_cache=args.tuning_cache,
         mm_kw=dict(act_bytes=dtype_bytes, remat=not args.reduced,
                    fsdp_params=args.mesh == "production",
+                   pipeline=(mesh is not None and
+                             mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) > 1),
                    **optim.memory_model_kw(
                        optimizer, fused=args.executor == "flat")))
 
@@ -255,7 +275,16 @@ def main():
                          "also feeds the kernels' tuned launch blocks")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--mesh", choices=["host", "production"], default="host")
+    ap.add_argument("--mesh", default="host",
+                    help="'host' (all devices on the data axis), "
+                         "'production', or an explicit 'DATA:MODEL' axis "
+                         "spec like '2:4' — MODEL > 1 pipelines the block "
+                         "stack over the model axis (1F1B, engine "
+                         "Layer 11)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="with a pipelined 'DATA:MODEL' mesh, shard "
+                         "params over the data axis too (just-in-time "
+                         "gathered FSDP forward)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -287,14 +316,23 @@ def main():
     ap.add_argument("--dtype", choices=["float32", "bfloat16"],
                     default="float32")
     args = ap.parse_args()
+    if args.mesh not in ("host", "production"):
+        try:  # validate the DATA:MODEL spec at parse time — fail fast
+            mesh_lib.parse_mesh_spec(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
     if args.executor == "streaming" and (args.mesh != "host" or args.multi_pod):
         # fail fast with the actual contract (not a silent warn-and-ignore):
         # streaming composes with data-parallel HOST meshes through the
         # ShardedExecutor; TP/FSDP production meshes need a compiled
-        # executor under GSPMD
+        # executor under GSPMD, pipelined meshes the Layer-11 executor
         ap.error("--executor streaming supports single-device and "
                  "data-parallel host meshes (via the ShardedExecutor); "
-                 "production/multi-pod meshes need a compiled executor")
+                 "production/multi-pod/pipelined meshes need a compiled "
+                 "executor")
+    if args.fsdp and args.mesh in ("host", "production"):
+        ap.error("--fsdp applies to the pipelined path: pass an explicit "
+                 "'DATA:MODEL' mesh spec with MODEL > 1")
     if args.resume and not args.ckpt_dir:
         ap.error("--resume needs --ckpt-dir")
 
@@ -307,7 +345,10 @@ def main():
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = build_mesh(args)
     dp = mesh_lib.data_parallel_size(mesh)
-    host_dp = args.mesh == "host" and dp > 1
+    tp = mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS)
+    # the shard_map paths (ShardedExecutor DP, PipelinedExecutor 1F1B):
+    # executor-owned step_split + plan-split pipeline staging
+    host_dp = args.mesh != "production" and (dp > 1 or tp > 1)
     opt = default_optimizer(args)
     plan = build_plan(cfg, args, optimizer=opt, mesh=mesh)
     print(plan.describe(), flush=True)

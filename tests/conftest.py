@@ -85,6 +85,29 @@ def make_sharded_executor(inner: str, loss_fn, optimizer, plan, mesh,
                                   inner=inner, **kw)
 
 
+# ---------------------------------------------------------------------------
+# pipeline dimension of the conformance grid (engine Layer 11)
+# ---------------------------------------------------------------------------
+
+def pipeline_mesh(data: int, stages: int):
+    """A 2-D ``(data, model=stages)`` mesh over the forced host devices;
+    skips when the platform has fewer than ``data * stages``."""
+    import pytest
+    from repro.launch import mesh as mesh_lib
+    need = data * stages
+    if jax.device_count() < need:
+        pytest.skip(f"needs {need} devices, have {jax.device_count()} "
+                    "(conftest forces 8 unless REPRO_TEST_DEVICE_COUNT=1)")
+    return mesh_lib.make_host_mesh(data=data, model=stages)
+
+
+def make_pipelined_executor(staged, optimizer, plan, mesh, **overrides):
+    """PipelinedExecutor with the test-suite defaults (none currently —
+    the 1F1B step is plain XLA, no Pallas interpret switch needed)."""
+    return engine.PipelinedExecutor(staged, optimizer, plan, mesh=mesh,
+                                    **overrides)
+
+
 # Golden 5-step loss trajectory, recorded once from CompiledScanExecutor on
 # the tiny model (seed 0, ragged mini-batch 10 -> 3 x 4, SGD-m
 # 0.1/0.9/1e-4, exact normalization). Every executor — and every mesh
@@ -179,3 +202,74 @@ class ToyDataset:
 def tiny_optimizer(lr: float = 0.1, momentum: float = 0.9,
                    weight_decay: float = 1e-4) -> optim.Optimizer:
     return optim.sgd(lr, momentum=momentum, weight_decay=weight_decay)
+
+
+# ---------------------------------------------------------------------------
+# staged tiny model: the pipeline-parallel counterpart of the tanh MLP —
+# a NUM_LAYERS-deep stacked-middle network whose loss factors into the
+# StagedLoss (prelude / stage_fn / finale) contract, with a single-device
+# reference (staged_ref_loss) computing the identical function
+# ---------------------------------------------------------------------------
+
+STAGED_NUM_LAYERS = 4
+
+
+def staged_params(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w_in": jnp.asarray(rng.normal(0, 0.3, (8, 16)), jnp.float32),
+        "mid": jnp.asarray(rng.normal(0, 0.3, (STAGED_NUM_LAYERS, 16, 16)),
+                           jnp.float32),
+        "w_out": jnp.asarray(rng.normal(0, 0.3, (16, 4)), jnp.float32),
+    }
+
+
+def staged_batch(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed + 100)
+    return {"x": jnp.asarray(rng.normal(0, 1.0, (n, 8)), jnp.float32),
+            "y": jnp.asarray(rng.integers(0, 4, (n,)), jnp.int32)}
+
+
+def staged_ref_loss(params, batch, exact_denom=None):
+    """Single-device reference — the exact function the staged split
+    computes, as one flat forward."""
+    x = jnp.tanh(batch["x"] @ params["w_in"])
+    for k in range(STAGED_NUM_LAYERS):
+        x = jnp.tanh(x @ params["mid"][k])
+    logits = x @ params["w_out"]
+    return losses.cross_entropy(
+        logits, batch["y"], sample_weight=batch.get("sample_weight"),
+        exact_denom=exact_denom), {}
+
+
+def staged_spec() -> "engine.StagedLoss":
+    """The StagedLoss factorization of :func:`staged_ref_loss`. The finale
+    returns the RAW loss sum (``exact_denom=1.0``) per the executor's
+    normalization contract."""
+    def prelude(shared, mb):
+        return jnp.tanh(mb["x"] @ shared["w_in"])
+
+    def stage_fn(stage_p, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        x, _ = jax.lax.scan(body, x, stage_p)
+        return x
+
+    def finale(shared, x, mb):
+        logits = x @ shared["w_out"]
+        return losses.cross_entropy(
+            logits, mb["y"], sample_weight=mb.get("sample_weight"),
+            exact_denom=1.0), {}
+
+    return engine.StagedLoss(num_layers=STAGED_NUM_LAYERS, prelude=prelude,
+                             stage_fn=stage_fn, finale=finale,
+                             stacked_key="mid")
+
+
+# Golden 5-step loss trajectory of the staged tiny model, recorded once
+# from CompiledScanExecutor on staged_ref_loss (seed-0 params, SGD-m
+# 0.1/0.9/1e-4, mini 8 -> 4 x 2 exact, batch at step t = staged_batch(8,
+# seed=t)). Every (stages x dp) pipelined mesh must reproduce it — same
+# numerics-change policy as GOLDEN_LOSSES above.
+GOLDEN_STAGED_LOSSES = [1.5686746, 1.5398949, 1.6100299, 1.5499518,
+                        1.3625731]

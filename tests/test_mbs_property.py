@@ -210,6 +210,73 @@ def test_mesh_plan_never_exceeds_per_device_budget(arch, seq, frac, dpe,
         assert est.total(plan.local_micro) <= budget
 
 
+# ---------------------------------------------------------------------------
+# Layer-11 planner invariants (pipeline-aware admission)
+# ---------------------------------------------------------------------------
+
+# archs whose reduced block stacks split over 2 stages (num_periods = 2);
+# pipeline admission is only defined for stageable dense stacks
+_PIPE_ARCHS = ["qwen2-1.5b", "mamba2-780m"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(_PIPE_ARCHS), seq=st.sampled_from([16, 64]),
+       f1=st.floats(0.0, 1.0), f2=st.floats(0.0, 1.0),
+       dpe=st.integers(0, 4))
+def test_pipeline_admission_monotone_in_budget(arch, seq, f1, f2, dpe):
+    """More per-device HBM never admits a smaller micro-batch on a
+    pipelined 2-D mesh (fixed stage count)."""
+    cfg = _CFGS[arch]
+    mesh = _FakeMesh(2 ** dpe, model=2)
+    lo, hi = sorted([_budget_around(cfg, seq, f1),
+                     _budget_around(cfg, seq, f2)])
+
+    def admitted(budget):
+        return engine.plan_mbs(256, model_cfg=cfg, seq_len=seq,
+                               budget_bytes=budget, mesh=mesh,
+                               fsdp_params=False,
+                               pipeline=True).micro_batch_size
+
+    assert admitted(lo) <= admitted(hi)
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(_PIPE_ARCHS), seq=st.sampled_from([16, 64]),
+       frac=st.floats(0.0, 1.0), dpe=st.integers(0, 4))
+def test_pipeline_plan_never_exceeds_per_device_budget(arch, seq, frac,
+                                                       dpe):
+    """The pipelined plan's own per-device estimate — stage-local params
+    + warmup-depth stage activations — fits the budget it was admitted
+    under (whenever anything fits at all), and records the mesh's stage
+    count."""
+    cfg = _CFGS[arch]
+    mesh = _FakeMesh(2 ** dpe, model=2)
+    budget = _budget_around(cfg, seq, frac)
+    plan = engine.plan_mbs(256, model_cfg=cfg, seq_len=seq,
+                           budget_bytes=budget, mesh=mesh,
+                           fsdp_params=False, pipeline=True)
+    assert plan.pipeline_stages == 2
+    est = memory_model.estimate(cfg, seq, remat_policy=plan.remat_policy,
+                                mesh=mesh, fsdp_params=False, pipeline=True)
+    if est.total(1) <= budget:  # something fits: the choice must too
+        assert est.total(plan.local_micro) <= budget
+
+
+@settings(max_examples=15, deadline=None)
+@given(arch=st.sampled_from(_PIPE_ARCHS), seq=st.sampled_from([16, 64]),
+       stages=st.integers(3, 7))
+def test_pipeline_non_dividing_stages_raise(arch, seq, stages):
+    """A model axis that does not divide the block stack is refused at
+    plan time with an actionable message (num_periods = 2 for every
+    reduced arch here, so any odd/oversized stage count must raise)."""
+    cfg = _CFGS[arch]
+    if cfg.num_periods % stages == 0:
+        return  # hypothesis found a dividing count — nothing to refuse
+    with pytest.raises(ValueError, match="does not divide the block stack"):
+        engine.plan_mbs(256, model_cfg=cfg, seq_len=seq,
+                        mesh=_FakeMesh(1, model=stages), pipeline=True)
+
+
 @settings(max_examples=30, deadline=None)
 @given(n_b=st.integers(1, 40), n_mu=st.integers(1, 40))
 def test_split_partition_invariants(n_b, n_mu):

@@ -1,0 +1,393 @@
+"""Pipeline-parallel conformance matrix (engine Layer 11).
+
+Runs on the conftest-forced 8-device CPU host platform and proves, for
+the 1F1B PipelinedExecutor over 2-D ``data × model`` meshes:
+
+  * **schedule** — the closed-form 1F1B tables satisfy the structural
+    invariants the module docstring claims (no forward/backward collision
+    on a stage, activations arrive before use, every micro runs exactly
+    once per stage per direction);
+  * **equivalence** — pipelined execution is semantically invisible:
+    gradients, loss, and the full optimizer step match the single-device
+    CompiledScanExecutor at stages ∈ {2, 4} × dp ∈ {1, 2}, with and
+    without FSDP parameter sharding, ragged tails included;
+  * **trajectory** — the 5-step golden staged-model loss trajectory is
+    reproduced on pipelined meshes;
+  * **contracts** — the JX005/HLO005 schedule census passes on the
+    deferred-sync step and FIRES on the per-micro-sync negative control
+    (so the rules detect what they claim to detect);
+  * **launcher** — ``--mesh DATA:MODEL`` parsing fails fast on malformed
+    specs and device-count overruns, and ``steps.make_staged_loss``
+    stages real transformer configs (rejecting families that do not
+    factor into a pipeline).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (GOLDEN_STAGED_LOSSES, STAGED_NUM_LAYERS,
+                      assert_scalar_close, assert_trees_close,
+                      make_pipelined_executor, pipeline_mesh, staged_batch,
+                      staged_params, staged_ref_loss, staged_spec,
+                      tiny_optimizer)
+from repro import analysis, configs, engine
+from repro.launch import mesh as mesh_lib, steps
+
+pytestmark = pytest.mark.mesh
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the (stages, dp) conformance grid — every cell fits the forced 8 devices
+GRID = [(2, 1), (2, 2), (4, 1), (4, 2)]
+
+
+def _pipelined(stages, dp, mini=8, micro=2, **overrides):
+    mesh = pipeline_mesh(dp, stages)
+    # remat=False: the toy staged loss has no checkpoint lattice (JX002
+    # would rightly flag a plan that claims a policy the trace lacks)
+    plan = engine.plan_mbs(mini, micro_batch_size=micro,
+                           normalization="exact", remat=False,
+                           mesh=mesh, pipeline=True)
+    ex = make_pipelined_executor(staged_spec(), tiny_optimizer(), plan,
+                                 mesh, **overrides)
+    return ex, plan
+
+
+def _reference(mini=8, micro=2):
+    plan = engine.plan_mbs(mini, micro_batch_size=micro,
+                           normalization="exact")
+    return engine.CompiledScanExecutor(staged_ref_loss, tiny_optimizer(),
+                                       plan), plan
+
+
+# ---------------------------------------------------------------------------
+# the closed-form schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stages,micros", [(2, 2), (2, 4), (4, 4), (4, 7),
+                                           (3, 5), (8, 8)])
+def test_schedule_1f1b_invariants(stages, micros):
+    fwd, bwd, recv, ticks = engine.schedule_1f1b(stages, micros)
+    assert ticks == 2 * (micros + stages - 1)
+    assert fwd.shape == bwd.shape == recv.shape == (ticks, stages)
+    # forward and backward never collide on one stage in one tick
+    assert not ((fwd >= 0) & (bwd >= 0)).any()
+    # every micro-batch runs exactly once per stage per direction
+    for s in range(stages):
+        assert sorted(fwd[fwd[:, s] >= 0, s]) == list(range(micros))
+        assert sorted(bwd[bwd[:, s] >= 0, s]) == list(range(micros))
+    # causality: stage s runs micro i only after receiving it from s-1,
+    # and the backward for (s, j) only after the forward for (s, j)
+    for s in range(1, stages):
+        for i in range(micros):
+            t_recv = int(np.where(recv[:, s] == i)[0][0])
+            t_fwd = int(np.where(fwd[:, s] == i)[0][0])
+            assert t_recv < t_fwd
+    for s in range(stages):
+        for j in range(micros):
+            assert int(np.where(fwd[:, s] == j)[0][0]) \
+                < int(np.where(bwd[:, s] == j)[0][0])
+
+
+def test_schedule_rejects_degenerate():
+    with pytest.raises(ValueError, match="stages >= 1"):
+        engine.schedule_1f1b(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# numerical equivalence vs the single-device reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stages,dp", GRID)
+def test_pipelined_matches_single_device(stages, dp):
+    ex, plan = _pipelined(stages, dp)
+    ref, ref_plan = _reference()
+    params = staged_params()
+    batch = staged_batch(8)
+    split = ex.stage(plan.split(batch))
+    ref_split = ref_plan.device_split(batch)
+
+    g, loss = ex.gradients(params, split)
+    g_ref, loss_ref = ref.gradients(params, ref_split)
+    assert_scalar_close(loss, loss_ref, what=f"loss s{stages} dp{dp}")
+    assert_trees_close(g, g_ref, what=f"grads s{stages} dp{dp}")
+
+    opt = tiny_optimizer()
+    p1, o1, m1 = ex.step_split(params, opt.init(params), split)
+    p2, o2, m2 = ref.step_split(staged_params(),
+                                opt.init(staged_params()), ref_split)
+    assert_trees_close(p1, p2, what=f"params s{stages} dp{dp}")
+    assert_trees_close(o1, o2, what=f"opt state s{stages} dp{dp}")
+    assert_scalar_close(m1["loss"], m2["loss"], what="step loss")
+    assert_scalar_close(m1["grad_norm"], m2["grad_norm"], atol=1e-5,
+                        what="grad_norm")
+
+
+@pytest.mark.parametrize("stages,dp", [(2, 2), (4, 1)])
+def test_fsdp_matches_single_device(stages, dp):
+    ex, plan = _pipelined(stages, dp, fsdp=True)
+    ref, ref_plan = _reference()
+    params = staged_params()
+    batch = staged_batch(8)
+    g, loss = ex.gradients(params, ex.stage(plan.split(batch)))
+    g_ref, loss_ref = ref.gradients(params, ref_plan.device_split(batch))
+    assert_scalar_close(loss, loss_ref, what="fsdp loss")
+    assert_trees_close(g, g_ref, what=f"fsdp grads s{stages} dp{dp}")
+
+
+@pytest.mark.parametrize("stages", [2, 4])
+def test_golden_staged_trajectory(stages):
+    ex, plan = _pipelined(stages, 2)
+    opt = tiny_optimizer()
+    params = staged_params()
+    opt_state = opt.init(params)
+    for t, expected in enumerate(GOLDEN_STAGED_LOSSES):
+        split = ex.stage(plan.split(staged_batch(8, seed=t)))
+        params, opt_state, m = ex.step_split(params, opt_state, split)
+        assert_scalar_close(m["loss"], expected,
+                            what=f"golden staged loss step {t}")
+
+
+def test_ragged_plan_auto_upgrades_and_matches():
+    # mini 7 / micro 4 is ragged: "paper" normalization upgrades to exact
+    # with a one-sample zero-weight pad (a ragged paper tail would land
+    # on one DP shard and skew the mean)
+    mesh = pipeline_mesh(2, 2)
+    plan = engine.plan_mbs(7, micro_batch_size=4, normalization="paper",
+                           mesh=mesh, pipeline=True)
+    assert plan.normalization == "exact" and plan.pad == 1
+    ex = make_pipelined_executor(staged_spec(), tiny_optimizer(), plan, mesh)
+    ref, ref_plan = _reference(7, 4)
+    params = staged_params()
+    batch = staged_batch(7)
+    g, loss = ex.gradients(params, ex.stage(plan.split(batch)))
+    g_ref, loss_ref = ref.gradients(params, ref_plan.device_split(batch))
+    assert_scalar_close(loss, loss_ref, what="ragged loss")
+    assert_trees_close(g, g_ref, what="ragged grads")
+
+
+# ---------------------------------------------------------------------------
+# admission / construction errors
+# ---------------------------------------------------------------------------
+
+def test_paper_ragged_plan_refused():
+    mesh = pipeline_mesh(2, 2)
+    plan = engine.plan_mbs(7, micro_batch_size=4, normalization="paper",
+                           mesh=mesh, pipeline=True)
+    forced = dataclasses.replace(plan, normalization="paper")
+    with pytest.raises(ValueError, match="cannot be pipelined exactly"):
+        make_pipelined_executor(staged_spec(), tiny_optimizer(), forced,
+                                mesh)
+
+
+def test_non_dividing_stage_count_raises():
+    # STAGED_NUM_LAYERS = 4 does not split over 3 stages
+    mesh = pipeline_mesh(2, 3)
+    plan = engine.plan_mbs(8, micro_batch_size=2, normalization="exact",
+                           mesh=mesh, pipeline=True)
+    with pytest.raises(ValueError, match="does not divide the"):
+        make_pipelined_executor(staged_spec(), tiny_optimizer(), plan, mesh)
+    with pytest.raises(ValueError, match="does not divide the block"):
+        staged_spec().partition(staged_params(), 3)
+
+
+def test_single_stage_mesh_refused():
+    mesh = pipeline_mesh(2, 1)
+    plan = engine.plan_mbs(8, micro_batch_size=2, normalization="exact",
+                           mesh=mesh)
+    with pytest.raises(ValueError, match="model axis of >= 2"):
+        make_pipelined_executor(staged_spec(), tiny_optimizer(), plan, mesh)
+
+
+def test_fsdp_requires_deferred_sync():
+    mesh = pipeline_mesh(2, 2)
+    plan = engine.plan_mbs(8, micro_batch_size=2, normalization="exact",
+                           mesh=mesh, pipeline=True)
+    with pytest.raises(ValueError, match="per-micro"):
+        make_pipelined_executor(staged_spec(), tiny_optimizer(), plan, mesh,
+                                fsdp=True, defer_sync=False)
+
+
+def test_partition_combine_roundtrip():
+    spec = staged_spec()
+    params = staged_params()
+    shared, staged = spec.partition(params, 2)
+    assert jax.tree.leaves(staged)[0].shape[:2] == (2, STAGED_NUM_LAYERS // 2)
+    back = spec.combine(jax.tree.map(jnp.asarray, shared), staged)
+    assert_trees_close(back, params, what="partition/combine roundtrip")
+
+
+# ---------------------------------------------------------------------------
+# the JX005 / HLO005 schedule census — positive AND negative controls
+# ---------------------------------------------------------------------------
+
+def _abstract_args(ex, plan):
+    params = staged_params()
+    opt_state = tiny_optimizer().init(params)
+    split = plan.split(staged_batch(8))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        (params, opt_state, split))
+
+
+def test_jx005_census_deferred_clean():
+    ex, plan = _pipelined(2, 2)
+    jaxpr = ex.trace_step(*_abstract_args(ex, plan))
+    rep = analysis.check_pipelined_step(jaxpr, plan, stages=2,
+                                        expect_sync="deferred")
+    assert rep.ok, rep.format()
+    # JX001/JX004 are structurally N/A for the pipelined factorization
+    # (no micro-batch scan carry; gradients split into staged + shared
+    # buckets, each below JX004's whole-tree payload threshold)
+    assert rep.checks_run == ["JX002", "JX003", "JX005"]
+
+
+def test_jx005_fires_on_per_micro_negative_control():
+    ex, plan = _pipelined(2, 2, defer_sync=False)
+    jaxpr = ex.trace_step(*_abstract_args(ex, plan))
+    findings = analysis.check_pipeline_collectives(jaxpr, plan, stages=2,
+                                                   expect="deferred")
+    assert findings, "per-micro step passed the deferred census"
+    assert any("data-axis gradient psum" in f.message for f in findings)
+    # and the same trace is CLEAN under the census that matches its mode
+    assert not analysis.check_pipeline_collectives(jaxpr, plan, stages=2,
+                                                   expect="per-micro")
+
+
+def test_jx005_ppermute_count_is_schedule_exact():
+    ex, plan = _pipelined(2, 2)
+    jaxpr = ex.trace_step(*_abstract_args(ex, plan))
+    fwd, bwd, _, _ = engine.schedule_1f1b(2, int(plan.num_micro_batches))
+    expected = int((fwd >= 0).any(axis=1).sum()
+                   + (bwd >= 0).any(axis=1).sum())
+    found = sum(t for e, _, t in analysis.iter_eqns(jaxpr)
+                if e.primitive.name == "ppermute")
+    assert found == expected
+
+
+def test_hlo005_compiled_schedule():
+    ex, plan = _pipelined(2, 2)
+    args = _abstract_args(ex, plan)
+    compiled = ex.lower_step(*args, donate=True).compile()
+    fwd, bwd, _, _ = engine.schedule_1f1b(2, int(plan.num_micro_batches))
+    max_pp = int((fwd >= 0).any(axis=1).sum()
+                 + (bwd >= 0).any(axis=1).sum())
+    n_micro = int(plan.num_micro_batches)
+    assert not analysis.check_pipeline_hlo(
+        compiled, expect="deferred", n_micro=n_micro, max_ppermutes=max_pp)
+
+    # negative control: the per-micro baseline must NOT pass as deferred
+    ex_pm, plan_pm = _pipelined(2, 2, defer_sync=False)
+    compiled_pm = ex_pm.lower_step(*args, donate=True).compile()
+    assert analysis.check_pipeline_hlo(
+        compiled_pm, expect="deferred", n_micro=n_micro,
+        max_ppermutes=max_pp), "per-micro compile passed deferred census"
+    assert not analysis.check_pipeline_hlo(
+        compiled_pm, expect="per-micro", n_micro=n_micro,
+        max_ppermutes=max_pp)
+
+
+def test_pipelined_state_fully_aliased():
+    # the zero-copy update contract under the model-sharded steady state:
+    # donated per-device state (block shards + replicated rest) is
+    # reused in place
+    ex, plan = _pipelined(2, 2)
+    args = _abstract_args(ex, plan)
+    compiled = ex.lower_step(*args, donate=True).compile()
+    floor = ex.donated_state_bytes(args[0], args[1])
+    assert not analysis.check_aliasing(compiled, floor)
+
+
+# ---------------------------------------------------------------------------
+# launcher surface: mesh specs + staged transformer losses
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_spec():
+    assert mesh_lib.parse_mesh_spec("2:4", device_count=8) == (2, 4)
+    assert mesh_lib.parse_mesh_spec("8:1", device_count=8) == (8, 1)
+    with pytest.raises(ValueError, match="DATA:MODEL"):
+        mesh_lib.parse_mesh_spec("2x4", device_count=8)
+    with pytest.raises(ValueError, match="DATA:MODEL"):
+        mesh_lib.parse_mesh_spec("2:banana", device_count=8)
+    with pytest.raises(ValueError, match=">= 1"):
+        mesh_lib.parse_mesh_spec("0:4", device_count=8)
+    with pytest.raises(ValueError, match="needs 16 devices"):
+        mesh_lib.parse_mesh_spec("4:4", device_count=8)
+
+
+def test_build_mesh_from_spec():
+    from repro.launch import train as train_mod
+    ns = type("A", (), {"mesh": "2:2", "multi_pod": False})
+    mesh = train_mod.build_mesh(ns)
+    assert mesh_lib.data_parallel_size(mesh) == 2
+    assert mesh_lib.axis_size(mesh, mesh_lib.MODEL_AXIS) == 2
+    ns_host = type("A", (), {"mesh": "host", "multi_pod": False})
+    host = train_mod.build_mesh(ns_host)
+    assert mesh_lib.axis_size(host, mesh_lib.MODEL_AXIS) == 1
+    ns_bad = type("A", (), {"mesh": "9:9", "multi_pod": False})
+    with pytest.raises(ValueError, match="devices"):
+        train_mod.build_mesh(ns_bad)
+
+
+@pytest.mark.slow
+def test_train_cli_rejects_bad_mesh_specs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+
+    def run(*extra):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch",
+             "qwen2-1.5b", "--reduced", *extra],
+            capture_output=True, text=True, timeout=300, cwd=ROOT, env=env)
+
+    bad = run("--mesh", "2x4")
+    assert bad.returncode == 2 and "DATA:MODEL" in bad.stderr
+    over = run("--mesh", "64:64")
+    assert over.returncode == 2 and "devices" in over.stderr
+    fsdp = run("--fsdp")  # default --mesh host has no model axis
+    assert fsdp.returncode == 2 and "DATA:MODEL" in fsdp.stderr
+
+
+def test_make_staged_loss_matches_flat_forward():
+    cfg = configs.get_reduced("qwen2-1.5b")
+    mesh = pipeline_mesh(2, 2)
+    plan = engine.plan_mbs(8, micro_batch_size=2, normalization="exact",
+                           mesh=mesh, pipeline=True)
+    staged = steps.make_staged_loss(cfg, jnp.float32,
+                                    remat_policy=plan.remat_policy)
+    assert staged.num_layers == cfg.num_periods
+    opt = steps.make_optimizer(cfg)
+    ex = make_pipelined_executor(staged, opt, plan, mesh)
+    ref_plan = engine.plan_mbs(8, micro_batch_size=2, normalization="exact")
+    ref = engine.CompiledScanExecutor(
+        steps.make_loss_fn(cfg, jnp.float32,
+                           remat_policy=ref_plan.remat_policy),
+        opt, ref_plan)
+    from repro.models import transformer
+    params = jax.jit(lambda k: transformer.init_params(cfg, k))(
+        jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                                   jnp.int32)}
+    g, loss = ex.gradients(params, ex.stage(plan.split(batch)))
+    g_ref, loss_ref = ref.gradients(params, ref.plan.device_split(batch))
+    assert_scalar_close(loss, loss_ref, atol=5e-6, what="staged qwen2 loss")
+    assert_trees_close(g, g_ref, atol=5e-5, what="staged qwen2 grads")
+
+
+@pytest.mark.parametrize("arch,family", [
+    ("mixtral-8x22b", "MoE"),
+    ("qwen2-vl-72b", "VLM"),
+    ("seamless-m4t-medium", "encoder-decoder"),
+])
+def test_make_staged_loss_rejects_unstageable_families(arch, family):
+    with pytest.raises(ValueError, match="do not factor"):
+        steps.make_staged_loss(configs.get_reduced(arch))
